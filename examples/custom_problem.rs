@@ -1,0 +1,138 @@
+//! "Easy-to-use" demonstration (the paper's central usability claim —
+//! §VII says migrating a serial algorithm took < 2 days and ~300 lines):
+//! here a brand-new problem — SUBSET SUM, as a minimization variant — is
+//! parallelized in ~60 lines of plug-in code, with zero knowledge of
+//! topology, load balancing, or termination.
+//!
+//! Problem: given seeded weights and a target, find a subset whose sum is
+//! exactly the target, minimizing the subset size. Branching: item i is
+//! either taken or skipped (binary tree, depth = #items).
+//!
+//! ```bash
+//! cargo run --release --example custom_problem
+//! ```
+
+use pbt::engine::{NodeEval, Problem, SearchState};
+use pbt::runner::{self, RunConfig};
+use pbt::sim::{simulate, SimConfig};
+use pbt::util::Rng;
+use pbt::Cost;
+
+struct SubsetSum {
+    weights: Vec<u64>,
+    target: u64,
+}
+
+struct SsState {
+    weights: std::sync::Arc<Vec<u64>>,
+    target: u64,
+    /// suffix_sums[i] = sum of weights[i..] — reachability pruning.
+    suffix_sums: std::sync::Arc<Vec<u64>>,
+    /// max_suffix[i] = max of weights[i..] — the admissible size bound.
+    max_suffix: std::sync::Arc<Vec<u64>>,
+    depth: usize,
+    sum: u64,
+    taken: Vec<u32>,
+}
+
+impl SearchState for SsState {
+    type Sol = Vec<u32>;
+
+    fn evaluate(&mut self) -> NodeEval {
+        if self.sum == self.target {
+            // Found: solution cost = number of items taken.
+            return NodeEval { children: 0, solution: Some(self.taken.len() as Cost), bound: 0 };
+        }
+        let overshoot = self.sum > self.target;
+        let unreachable = self.sum + self.suffix_sums[self.depth] < self.target;
+        if self.depth == self.weights.len() || overshoot || unreachable {
+            return NodeEval { children: 0, solution: None, bound: 0 };
+        }
+        // Admissible size bound: we still need `need` more weight and no
+        // remaining item weighs more than `max_rest` — so at least
+        // ceil(need / max_rest) more items go in. Lets the engine prune
+        // once a small subset is known (distributed branch-and-bound).
+        let need = self.target - self.sum;
+        let max_rest = self.max_suffix[self.depth].max(1);
+        let bound = self.taken.len() as Cost + need.div_ceil(max_rest);
+        // child 0 = take item `depth`, child 1 = skip it (deterministic order)
+        NodeEval { children: 2, solution: None, bound }
+    }
+
+    fn apply(&mut self, k: u32) {
+        if k == 0 {
+            self.sum += self.weights[self.depth];
+            self.taken.push(self.depth as u32);
+        }
+        self.depth += 1;
+    }
+
+    fn undo(&mut self) {
+        self.depth -= 1;
+        if self.taken.last() == Some(&(self.depth as u32)) {
+            self.taken.pop();
+            self.sum -= self.weights[self.depth];
+        }
+    }
+
+    fn solution(&self) -> Vec<u32> {
+        self.taken.clone()
+    }
+}
+
+impl Problem for SubsetSum {
+    type State = SsState;
+
+    fn make_state(&self) -> SsState {
+        let mut suffix = vec![0u64; self.weights.len() + 1];
+        let mut max_suffix = vec![0u64; self.weights.len() + 1];
+        for i in (0..self.weights.len()).rev() {
+            suffix[i] = suffix[i + 1] + self.weights[i];
+            max_suffix[i] = max_suffix[i + 1].max(self.weights[i]);
+        }
+        SsState {
+            weights: std::sync::Arc::new(self.weights.clone()),
+            target: self.target,
+            suffix_sums: std::sync::Arc::new(suffix),
+            max_suffix: std::sync::Arc::new(max_suffix),
+            depth: 0,
+            sum: 0,
+            taken: Vec::new(),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("subset-sum-{}items", self.weights.len())
+    }
+}
+
+fn main() {
+    // Seeded instance: 26 items, target hit by some mid-sized subset.
+    let mut rng = Rng::new(99);
+    let weights: Vec<u64> = (0..26).map(|_| 1 + rng.gen_range(10_000) as u64).collect();
+    let target: u64 = weights.iter().step_by(3).sum(); // every 3rd item works
+    let problem = SubsetSum { weights: weights.clone(), target };
+    println!("subset-sum: 26 items, target {target}");
+
+    // That's the whole plug-in. Parallelism comes for free:
+    let report = runner::solve(&problem, &RunConfig { workers: 8, ..Default::default() });
+    let sol = report.best_solution.clone().expect("a subset exists by construction");
+    let sum: u64 = sol.iter().map(|&i| weights[i as usize]).sum();
+    assert_eq!(sum, target);
+    println!(
+        "threads: found |S| = {} in {:.3}s ({} nodes)",
+        sol.len(),
+        report.wall_secs,
+        report.total_nodes()
+    );
+
+    // And so does BGQ-scale simulation:
+    let sim = simulate(&problem, &SimConfig { cores: 1024, ..Default::default() });
+    println!(
+        "1024 virtual cores: best |S| = {}   virtual time = {:.3}s   T_S = {:.0}   T_R = {:.0}",
+        sim.best_cost.unwrap(),
+        sim.makespan_secs(pbt::experiments::TICKS_PER_SEC),
+        sim.avg_tasks_received(),
+        sim.avg_tasks_requested()
+    );
+}

@@ -1,0 +1,45 @@
+//! END-TO-END driver: reproduce the shape of the paper's full evaluation on
+//! a real (scaled) workload — every Table I/II instance family, swept over
+//! the core ladder, exactly as `pbt table1`/`table2` do, plus the Figure
+//! 9/10 charts.  The run is recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example paper_tables            # scale 1, c <= 1024
+//! cargo run --release --example paper_tables -- 0 256   # scale, max-cores
+//! ```
+
+use pbt::experiments::{self, TICKS_PER_SEC};
+use pbt::metrics::{ascii_chart, fig10_series, fig9_series, paper_table, speedups};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scale: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1);
+    let max_cores: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1024);
+
+    println!("== PARALLEL-VERTEX-COVER (Table I shape), scale {scale}, cores <= {max_cores}");
+    println!("   (virtual time; 1 node visit = 1 tick = {:.0} ns)", 1e9 / TICKS_PER_SEC);
+    let t1 = experiments::table1(scale, max_cores);
+    println!("{}", paper_table(&t1).render());
+
+    println!("== PARALLEL-DOMINATING-SET (Table II shape)");
+    let t2 = experiments::table2(scale, max_cores);
+    println!("{}", paper_table(&t2).render());
+
+    let mut all = t1;
+    all.extend(t2);
+
+    println!("{}", ascii_chart("Figure 9: log2 time (s) vs log2 cores", &fig9_series(&all), 14));
+
+    let f10 = fig10_series(&all);
+    let mut chart = Vec::new();
+    for (name, pts) in &f10 {
+        chart.push((format!("{name} T_S"), pts.iter().map(|&(c, s, _)| (c, s)).collect()));
+        chart.push((format!("{name} T_R"), pts.iter().map(|&(c, _, r)| (c, r)).collect()));
+    }
+    println!("{}", ascii_chart("Figure 10: log2 avg messages vs log2 cores", &chart, 14));
+
+    println!("normalized speedups (1.0 = perfectly linear):");
+    for (inst, c, s) in speedups(&all) {
+        println!("  {inst:<40} |C|={c:<6} {s:.2}");
+    }
+}

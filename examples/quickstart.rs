@@ -1,0 +1,32 @@
+//! Quickstart: solve a VERTEX COVER instance with PARALLEL-RB on 4 threads.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pbt::instances::generators;
+use pbt::problems::VertexCover;
+use pbt::runner::{self, RunConfig};
+
+fn main() {
+    // A seeded random graph: 70 vertices, 490 edges (the "p_hat-like"
+    // family of the paper's Table I, scaled down).
+    let graph = generators::gnm(70, 490, 31);
+    println!("instance: {} ({} vertices, {} edges)", graph.name, graph.num_vertices(), graph.num_edges());
+
+    // The framework needs nothing problem-specific beyond the plug-in:
+    // deterministic branching is defined once in problems::vertex_cover.
+    let problem = VertexCover::new(&graph);
+    let report = runner::solve(&problem, &RunConfig { workers: 4, ..Default::default() });
+
+    let cover = report.best_solution.as_ref().expect("a cover always exists");
+    println!("minimum vertex cover: {} vertices", report.best_cost.unwrap());
+    println!("verified: {}", graph.is_vertex_cover(cover));
+    println!(
+        "wall: {:.3}s   nodes: {}   T_S(avg): {:.1}   T_R(avg): {:.1}",
+        report.wall_secs,
+        report.total_nodes(),
+        report.avg_tasks_received(),
+        report.avg_tasks_requested()
+    );
+}

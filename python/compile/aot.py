@@ -1,0 +1,83 @@
+"""AOT lowering: L2 frontier evaluator -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The HLO text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Usage (from python/):
+    python -m compile.aot --out ../artifacts/model.hlo.txt
+
+Besides the default variant, emits one artifact per (n, b) in VARIANTS plus
+a manifest the rust side can read.  Python runs only at build time; the rust
+binary is self-contained once artifacts/ exists.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (n, b) AOT variants: n padded graph size, b frontier batch.  n must be a
+# multiple of the kernel tiles (128); b a multiple of 32.
+VARIANTS = [(128, 32), (256, 64), (512, 64)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n: int, b: int, use_pallas: bool = True) -> str:
+    fn, specs = model.frontier_eval_variant(n, b, use_pallas=use_pallas)
+    return to_hlo_text(fn.lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the default (256, 64) artifact; variants "
+                         "land next to it as frontier_eval_n{N}_b{B}.hlo.txt")
+    ap.add_argument("--ref", action="store_true",
+                    help="lower the pure-jnp reference instead of the Pallas kernel")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "outputs": ["degrees", "branch_vertex",
+                                                  "num_edges", "lower_bound"],
+                "variants": []}
+    for n, b in VARIANTS:
+        text = lower_variant(n, b, use_pallas=not args.ref)
+        name = f"frontier_eval_n{n}_b{b}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["variants"].append({"n": n, "b": b, "file": name})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # The Makefile's stamp artifact = the (256, 64) variant under the
+    # requested name, so `make artifacts` stays a cheap no-op check.
+    default = lower_variant(256, 64, use_pallas=not args.ref)
+    with open(args.out, "w") as f:
+        f.write(default)
+    print(f"wrote {args.out} ({len(default)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

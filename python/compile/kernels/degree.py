@@ -1,0 +1,172 @@
+"""L1 Pallas kernel: batched masked-degree computation for frontier evaluation.
+
+Computes, for a batch of frontier search-nodes (each described by an
+active-vertex mask), the degree of every vertex in the induced subgraph:
+
+    deg[b, i] = masks[b, i] * sum_j adj[i, j] * masks[b, j]
+
+This is the tensor-shaped hot spot of the VERTEX COVER branch-and-reduce
+node evaluation (pick max-degree vertex, count remaining edges, compute the
+``ceil(m/Δ)`` bound).  Written as a tiled matmul so the contraction lands on
+the MXU on a real TPU:
+
+* grid = (batch tiles, vertex-row tiles, contraction tiles), contraction
+  innermost so each output tile accumulates in place across the k-loop;
+* ``masks`` tile ``(TB, TK)`` and ``adj`` tile ``(TN, TK)`` stream through
+  VMEM; the output tile ``(TB, TN)`` stays resident while k advances — the
+  classic stationary-output systolic schedule (what a CUDA port would do
+  with threadblock tiling over shared memory, re-expressed as BlockSpecs);
+* the activity gate ``* masks[b, i]`` is fused into the final k step.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is run through the Pallas interpreter for
+correctness and AOT-lowered to plain HLO.  TPU performance is *estimated*
+(VMEM footprint / MXU utilisation) in DESIGN.md §Perf — interpret-mode
+wallclock is not a TPU proxy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  128 matches the MXU systolic array edge; the batch
+# tile is kept small because frontier batches are modest (B = 32..128).
+TILE_B = 32
+TILE_N = 128
+TILE_K = 128
+
+
+def _degree_kernel(nk: int, masks_k_ref, adj_ref, masks_i_ref, out_ref):
+    """One (TB, TN) output tile; accumulates over the contraction grid axis.
+
+    masks_k_ref : (TB, TK) — mask slab for the contraction slice
+    adj_ref     : (TN, TK) — adjacency slab (rows i, cols j-slice)
+    masks_i_ref : (TB, TN) — mask slab aligned with the *output* columns,
+                              used for the final activity gate
+    out_ref     : (TB, TN) — resident accumulator
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # (TB, TK) @ (TK, TN) -> (TB, TN) on the MXU.
+    out_ref[...] += jnp.dot(
+        masks_k_ref[...], adj_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _gate():
+        out_ref[...] *= masks_i_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "tile_n", "tile_k"))
+def masked_degrees(
+    adj: jnp.ndarray,
+    masks: jnp.ndarray,
+    *,
+    tile_b: int = TILE_B,
+    tile_n: int = TILE_N,
+    tile_k: int = TILE_K,
+) -> jnp.ndarray:
+    """Batched masked degrees via the Pallas kernel.
+
+    Args:
+      adj:   f32[n, n] symmetric 0/1 adjacency, zero diagonal; ``n`` must be
+             a multiple of ``tile_n`` and ``tile_k`` (the L2 model pads).
+      masks: f32[b, n] active-vertex masks; ``b`` a multiple of ``tile_b``.
+
+    Returns:
+      f32[b, n] induced-subgraph degrees.
+    """
+    b, n = masks.shape
+    assert adj.shape == (n, n), (adj.shape, n)
+    assert b % tile_b == 0, (b, tile_b)
+    assert n % tile_n == 0 and n % tile_k == 0, (n, tile_n, tile_k)
+    nk = n // tile_k
+
+    grid = (b // tile_b, n // tile_n, nk)
+    return pl.pallas_call(
+        functools.partial(_degree_kernel, nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, tile_k), lambda bi, ni, ki: (bi, ki)),  # masks (contraction)
+            pl.BlockSpec((tile_n, tile_k), lambda bi, ni, ki: (ni, ki)),  # adj
+            pl.BlockSpec((tile_b, tile_n), lambda bi, ni, ki: (bi, ni)),  # masks (gate)
+        ],
+        out_specs=pl.BlockSpec((tile_b, tile_n), lambda bi, ni, ki: (bi, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(masks, adj, masks)
+
+
+def vmem_bytes_per_step(tile_b: int = TILE_B, tile_n: int = TILE_N, tile_k: int = TILE_K) -> int:
+    """VMEM working set of one grid step, used for the §Perf roofline estimate."""
+    f32 = 4
+    return f32 * (tile_b * tile_k + tile_n * tile_k + 2 * tile_b * tile_n)
+
+
+def _degree_kernel_bf16(nk: int, masks_k_ref, adj_ref, masks_i_ref, out_ref):
+    """bf16 operand variant: the MXU's native dtype.  Inputs are 0/1 so the
+    bf16 cast is exact; accumulation stays f32 (`preferred_element_type`),
+    so results are bit-identical to the f32 kernel while halving VMEM
+    traffic for the streamed operands on a real TPU."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = masks_k_ref[...].astype(jnp.bfloat16)
+    b = adj_ref[...].astype(jnp.bfloat16).T
+    out_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _gate():
+        out_ref[...] *= masks_i_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "tile_n", "tile_k"))
+def masked_degrees_bf16(
+    adj: jnp.ndarray,
+    masks: jnp.ndarray,
+    *,
+    tile_b: int = TILE_B,
+    tile_n: int = TILE_N,
+    tile_k: int = TILE_K,
+) -> jnp.ndarray:
+    """bf16-operand/f32-accumulate variant of [`masked_degrees`].
+
+    Exact for 0/1 inputs (degrees < 2^8 << bf16's 2^8 integer range is not
+    even needed: the *accumulator* is f32; only the 0/1 operands are bf16).
+    """
+    b, n = masks.shape
+    assert adj.shape == (n, n), (adj.shape, n)
+    assert b % tile_b == 0, (b, tile_b)
+    assert n % tile_n == 0 and n % tile_k == 0, (n, tile_n, tile_k)
+    nk = n // tile_k
+
+    grid = (b // tile_b, n // tile_n, nk)
+    return pl.pallas_call(
+        functools.partial(_degree_kernel_bf16, nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, tile_k), lambda bi, ni, ki: (bi, ki)),
+            pl.BlockSpec((tile_n, tile_k), lambda bi, ni, ki: (ni, ki)),
+            pl.BlockSpec((tile_b, tile_n), lambda bi, ni, ki: (bi, ni)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, tile_n), lambda bi, ni, ki: (bi, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(masks, adj, masks)
+
+
+def vmem_bytes_per_step_bf16(tile_b: int = TILE_B, tile_n: int = TILE_N, tile_k: int = TILE_K) -> int:
+    """VMEM working set of the bf16 variant (streamed operands halve)."""
+    bf16, f32 = 2, 4
+    return bf16 * (tile_b * tile_k + tile_n * tile_k) + f32 * 2 * tile_b * tile_n

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+These are the semantic ground truth the Pallas kernels are tested against
+(pytest + hypothesis in python/tests/).  Everything here is plain jax.numpy
+with no Pallas, no custom calls, so it runs on any backend and is trivially
+auditable.
+
+Shapes and conventions
+----------------------
+* ``adj``  : f32[n, n]   symmetric 0/1 adjacency matrix, zero diagonal.
+* ``masks``: f32[b, n]   one row per frontier search-node; ``masks[k, v] = 1``
+  iff vertex ``v`` is still *active* (undeleted) in search-node ``k``.
+* degrees  : f32[b, n]   ``deg[k, v] = masks[k, v] * sum_j adj[v, j] * masks[k, j]``
+  — the degree of ``v`` in the graph induced by the active vertices.
+
+The masked degree computation is the MXU-shaped hot spot; everything
+downstream (branch-vertex argmax, edge count, lower bound) is cheap
+elementwise/reduction work done at L2.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_degrees_ref(adj: jnp.ndarray, masks: jnp.ndarray) -> jnp.ndarray:
+    """Reference masked degree computation.
+
+    deg[k, v] = masks[k, v] * sum_j adj[v, j] * masks[k, j]
+
+    i.e. rows of ``masks @ adj.T`` gated by the mask itself.  ``adj`` is
+    symmetric so ``adj.T == adj``; we keep the transpose for clarity.
+    """
+    # [b, n] @ [n, n] -> [b, n]
+    raw = masks @ adj.T
+    return raw * masks
+
+
+def frontier_eval_ref(adj: jnp.ndarray, masks: jnp.ndarray):
+    """Reference for the full L2 frontier evaluator.
+
+    Returns (degrees, branch_vertex, num_edges, lower_bound):
+
+    * ``degrees``       f32[b, n] — masked degrees (above).
+    * ``branch_vertex`` i32[b]    — argmax degree, smallest id on ties
+                                    (the paper's §V deterministic rule;
+                                    jnp.argmax returns the first maximum,
+                                    which is exactly smallest-id).
+    * ``num_edges``     f32[b]    — edges remaining in the induced graph.
+    * ``lower_bound``   f32[b]    — ceil(m / Δ), the classic vertex-cover
+                                    bound: every vertex covers ≤ Δ edges.
+                                    0 when the induced graph is edgeless.
+    """
+    deg = masked_degrees_ref(adj, masks)
+    branch_vertex = jnp.argmax(deg, axis=1).astype(jnp.int32)
+    num_edges = jnp.sum(deg, axis=1) / 2.0
+    max_deg = jnp.max(deg, axis=1)
+    lb = jnp.where(max_deg > 0, jnp.ceil(num_edges / jnp.maximum(max_deg, 1.0)), 0.0)
+    return deg, branch_vertex, num_edges, lb

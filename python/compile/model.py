@@ -1,0 +1,66 @@
+"""L2: the batched frontier evaluator — the JAX compute graph the rust
+coordinator calls through PJRT.
+
+Given the (padded) adjacency matrix of the input graph and a batch of
+active-vertex masks (one per frontier search-node of the parallel
+backtracking search), produce everything the VERTEX COVER branch-and-reduce
+node evaluation needs, in one fused XLA program:
+
+* per-vertex induced degrees            (L1 Pallas kernel)
+* the deterministic branching vertex    (max degree, smallest id — §V)
+* the number of remaining edges
+* the ``ceil(m / Δ)`` lower bound used for incumbent pruning
+
+Padding convention: the rust side pads ``n`` up to a multiple of the kernel
+tiles and sets mask entries of padding vertices to 0, so padded vertices
+have degree 0 and never win the argmax (all-zero rows tie-break to vertex 0,
+which the caller treats as "edgeless — leaf").
+
+This module is lowered ONCE by ``aot.py`` to HLO text per (n, b) variant and
+never imported at runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import degree as degree_kernel
+from compile.kernels import ref as kernels_ref
+
+
+def frontier_eval(adj: jnp.ndarray, masks: jnp.ndarray, *, use_pallas: bool = True):
+    """Evaluate a batch of frontier nodes.
+
+    Args:
+      adj:   f32[n, n] padded symmetric adjacency (0/1, zero diagonal).
+      masks: f32[b, n] active-vertex masks (0 for deleted/padding vertices).
+      use_pallas: route the degree matmul through the L1 Pallas kernel
+        (default) or the pure-jnp reference (used for A/B lowering tests).
+
+    Returns a 4-tuple (lowered with ``return_tuple=True``):
+      degrees       f32[b, n]
+      branch_vertex i32[b]     — first (= smallest-id) max-degree vertex
+      num_edges     f32[b]     — |E(G[active])|
+      lower_bound   f32[b]     — ceil(num_edges / max_degree), 0 if edgeless
+    """
+    if use_pallas:
+        deg = degree_kernel.masked_degrees(adj, masks)
+    else:
+        deg = kernels_ref.masked_degrees_ref(adj, masks)
+    branch_vertex = jnp.argmax(deg, axis=1).astype(jnp.int32)
+    num_edges = jnp.sum(deg, axis=1) * 0.5
+    max_deg = jnp.max(deg, axis=1)
+    lb = jnp.where(max_deg > 0.0, jnp.ceil(num_edges / jnp.maximum(max_deg, 1.0)), 0.0)
+    return deg, branch_vertex, num_edges, lb
+
+
+def frontier_eval_variant(n: int, b: int, *, use_pallas: bool = True):
+    """Return (jitted_fn, example_args) for a fixed (n, b) AOT variant."""
+    adj_spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    masks_spec = jax.ShapeDtypeStruct((b, n), jnp.float32)
+
+    def fn(adj, masks):
+        return frontier_eval(adj, masks, use_pallas=use_pallas)
+
+    return jax.jit(fn), (adj_spec, masks_spec)

@@ -1,0 +1,40 @@
+"""AOT pipeline: the build-time artifact generator end to end."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def test_aot_main_writes_artifacts(tmp_path):
+    out = tmp_path / "model.hlo.txt"
+    env = dict(os.environ)
+    repo_py = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        cwd=repo_py,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr
+    assert out.exists()
+    text = out.read_text()
+    assert text.startswith("HloModule")
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    assert len(manifest["variants"]) == 3
+    for v in manifest["variants"]:
+        f = tmp_path / v["file"]
+        assert f.exists()
+        assert f"f32[{v['b']},{v['n']}]" in f.read_text()
+
+
+def test_vmem_estimate_documented():
+    from compile.kernels.degree import vmem_bytes_per_step
+
+    # The DESIGN.md §Perf-L1 number: ~114 KiB per grid step.
+    assert vmem_bytes_per_step() == 4 * (32 * 128 + 128 * 128 + 2 * 32 * 128)

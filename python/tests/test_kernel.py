@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas masked-degree kernel vs the pure-jnp oracle.
+
+The hypothesis sweep drives random graph densities, mask densities, and all
+supported padded shapes; assert_allclose against ref.py is the core
+correctness signal for the kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.degree import masked_degrees, vmem_bytes_per_step
+from compile.kernels.ref import masked_degrees_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_instance(rng: np.random.Generator, n: int, b: int,
+                    p_edge: float, p_active: float):
+    """Symmetric 0/1 adjacency with zero diagonal + a batch of masks."""
+    upper = rng.random((n, n)) < p_edge
+    upper = np.triu(upper, k=1)
+    adj = (upper | upper.T).astype(np.float32)
+    masks = (rng.random((b, n)) < p_active).astype(np.float32)
+    return jnp.asarray(adj), jnp.asarray(masks)
+
+
+class TestMaskedDegreesBasic:
+    def test_empty_graph_all_zero(self):
+        adj = jnp.zeros((128, 128), jnp.float32)
+        masks = jnp.ones((32, 128), jnp.float32)
+        out = masked_degrees(adj, masks)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+    def test_complete_graph_full_mask(self):
+        n, b = 128, 32
+        adj = jnp.ones((n, n), jnp.float32) - jnp.eye(n, dtype=jnp.float32)
+        masks = jnp.ones((b, n), jnp.float32)
+        out = masked_degrees(adj, masks)
+        np.testing.assert_allclose(np.asarray(out), float(n - 1))
+
+    def test_single_edge(self):
+        n, b = 128, 32
+        adj = np.zeros((n, n), np.float32)
+        adj[3, 7] = adj[7, 3] = 1.0
+        masks = np.ones((b, n), np.float32)
+        out = np.asarray(masked_degrees(jnp.asarray(adj), jnp.asarray(masks)))
+        assert out[0, 3] == 1.0 and out[0, 7] == 1.0
+        assert out.sum() == 2.0 * b
+
+    def test_mask_kills_endpoint(self):
+        """Deactivating one endpoint zeroes the degree of the other."""
+        n, b = 128, 32
+        adj = np.zeros((n, n), np.float32)
+        adj[3, 7] = adj[7, 3] = 1.0
+        masks = np.ones((b, n), np.float32)
+        masks[0, 7] = 0.0
+        out = np.asarray(masked_degrees(jnp.asarray(adj), jnp.asarray(masks)))
+        assert out[0, 3] == 0.0 and out[0, 7] == 0.0
+        assert out[1, 3] == 1.0  # other batch rows untouched
+
+    def test_inactive_vertex_has_zero_degree(self):
+        """The final gate zeroes rows the mask deactivates, even if neighbors live."""
+        n, b = 128, 32
+        adj = np.zeros((n, n), np.float32)
+        for j in range(1, 5):
+            adj[0, j] = adj[j, 0] = 1.0
+        masks = np.ones((b, n), np.float32)
+        masks[:, 0] = 0.0
+        out = np.asarray(masked_degrees(jnp.asarray(adj), jnp.asarray(masks)))
+        assert (out[:, 0] == 0.0).all()
+        # Neighbors lose exactly the one edge to vertex 0.
+        assert (out[:, 1] == 0.0).all()
+
+    def test_multi_tile_shapes(self):
+        """Exercise a grid with >1 tile along every axis."""
+        rng = np.random.default_rng(0)
+        adj, masks = random_instance(rng, 256, 64, 0.1, 0.7)
+        out = masked_degrees(adj, masks)
+        ref = masked_degrees_ref(adj, masks)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+    def test_vmem_estimate_fits(self):
+        # One grid step's working set must sit far below the 16 MiB VMEM.
+        assert vmem_bytes_per_step() < 16 * 1024 * 1024 // 8
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 3),
+    b_tiles=st.integers(1, 2),
+    p_edge=st.floats(0.0, 1.0),
+    p_active=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(n_tiles, b_tiles, p_edge, p_active, seed):
+    """Property: kernel == oracle for random graphs/masks on all tile grids."""
+    n, b = 128 * n_tiles, 32 * b_tiles
+    rng = np.random.default_rng(seed)
+    adj, masks = random_instance(rng, n, b, p_edge, p_active)
+    out = masked_degrees(adj, masks)
+    ref = masked_degrees_ref(adj, masks)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_degrees_are_symmetric_counts(seed):
+    """Property: sum of degrees is even (handshake lemma) and non-negative."""
+    rng = np.random.default_rng(seed)
+    adj, masks = random_instance(rng, 128, 32, 0.2, 0.8)
+    out = np.asarray(masked_degrees(adj, masks))
+    assert (out >= 0).all()
+    sums = out.sum(axis=1)
+    np.testing.assert_allclose(sums % 2.0, 0.0, atol=1e-4)
+
+
+def test_rejects_unpadded_shapes():
+    adj = jnp.zeros((100, 100), jnp.float32)
+    masks = jnp.ones((32, 100), jnp.float32)
+    with pytest.raises(AssertionError):
+        masked_degrees(adj, masks)
+
+
+class TestBf16Variant:
+    def test_bf16_exact_for_01_inputs(self):
+        from compile.kernels.degree import masked_degrees_bf16
+        rng = np.random.default_rng(5)
+        adj, masks = random_instance(rng, 256, 64, 0.15, 0.8)
+        a = masked_degrees_bf16(adj, masks)
+        b = masked_degrees_ref(adj, masks)
+        # bf16 operands with f32 accumulation are exact on 0/1 inputs.
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_bf16_matches_f32_kernel(self, seed):
+        from compile.kernels.degree import masked_degrees_bf16
+        rng = np.random.default_rng(seed)
+        adj, masks = random_instance(rng, 128, 32, 0.3, 0.6)
+        a = masked_degrees_bf16(adj, masks)
+        b = masked_degrees(adj, masks)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bf16_vmem_smaller(self):
+        from compile.kernels.degree import vmem_bytes_per_step, vmem_bytes_per_step_bf16
+        assert vmem_bytes_per_step_bf16() < vmem_bytes_per_step()

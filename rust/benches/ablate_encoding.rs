@@ -1,0 +1,14 @@
+//! Ablation A1 (paper §III-B vs §IV-A): index task encoding vs
+//! Finkel–Manber full-state copy — bytes per task and decode time.
+//! `cargo bench --bench ablate_encoding [-- <scale>]`
+
+use pbt::experiments;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let scale: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1);
+    println!("== A1: task encoding — index (O(d)) vs full state (O(n+m))");
+    println!("   paper claim: the indexed scheme eliminates buffer memory and");
+    println!("   shrinks messages; decode pays CONVERTINDEX replay instead.\n");
+    println!("{}", experiments::ablate_encoding(scale).render());
+}

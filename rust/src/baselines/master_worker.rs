@@ -1,0 +1,227 @@
+//! The buffered work-pool baseline (ref [15], §III-A/§III-B): a central
+//! master owns a bounded task buffer; workers draw tasks from it and refill
+//! it by splitting their own subtrees whenever the pool runs low.
+//!
+//! This is the architecture the paper argues against: the master serializes
+//! task hand-off (centralization bottleneck), and the buffer bound forces a
+//! task-granularity choice (`buffer_cap`) that the indexed scheme removes.
+//! The A2 bench measures both effects.
+
+use crate::engine::{Problem, SearchState, StepResult, Stepper};
+use crate::index::NodeIndex;
+use crate::coordinator::WorkerStats;
+use crate::runner::RunReport;
+use crate::util::Stopwatch;
+use crate::{Cost, COST_INF};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Pool configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Buffer capacity (the §III-B parameter the user must tune).
+    pub buffer_cap: usize,
+    /// Refill threshold: workers donate when the pool is below this.
+    pub low_watermark: usize,
+    /// Node visits between pool checks.
+    pub poll_interval: u32,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { buffer_cap: 64, low_watermark: 8, poll_interval: 64 }
+    }
+}
+
+struct Pool {
+    queue: Mutex<PoolState>,
+    available: Condvar,
+    /// Global incumbent (cost only, like the paper's notifications).
+    best: AtomicU64,
+    idle: AtomicUsize,
+    /// Peak queue length (reported by the A2 bench).
+    high_water: AtomicUsize,
+}
+
+struct PoolState {
+    tasks: VecDeque<NodeIndex>,
+    done: bool,
+}
+
+/// Solve with the master–worker buffered pool on `c` threads.
+pub fn solve_master_worker<P: Problem>(
+    problem: &P,
+    c: usize,
+    cfg: PoolConfig,
+) -> RunReport<<P::State as SearchState>::Sol> {
+    assert!(c >= 1);
+    let sw = Stopwatch::new();
+    let pool = Pool {
+        queue: Mutex::new(PoolState { tasks: VecDeque::from([NodeIndex::root()]), done: false }),
+        available: Condvar::new(),
+        best: AtomicU64::new(COST_INF),
+        idle: AtomicUsize::new(0),
+        high_water: AtomicUsize::new(1),
+    };
+
+    let results: Vec<(WorkerStats, Cost, Option<<P::State as SearchState>::Sol>)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..c)
+                .map(|_| {
+                    let pool = &pool;
+                    scope.spawn(move || {
+                        let mut stats = WorkerStats::default();
+                        let mut local_best_sol = None;
+                        let mut local_best = COST_INF;
+                        loop {
+                            // --- draw a task (blocking) ---
+                            let task = {
+                                let mut q = pool.queue.lock().unwrap();
+                                loop {
+                                    if let Some(t) = q.tasks.pop_front() {
+                                        break Some(t);
+                                    }
+                                    if q.done {
+                                        break None;
+                                    }
+                                    // last active worker + empty queue = done
+                                    if pool.idle.fetch_add(1, Ordering::SeqCst) + 1 == c {
+                                        q.done = true;
+                                        pool.available.notify_all();
+                                        break None;
+                                    }
+                                    q = pool.available.wait(q).unwrap();
+                                    pool.idle.fetch_sub(1, Ordering::SeqCst);
+                                }
+                            };
+                            let Some(idx) = task else { break };
+                            stats.comm.tasks_received += 1;
+
+                            let mut s = match Stepper::from_index(problem, &idx) {
+                                Ok(s) => s,
+                                Err(_) => continue,
+                            };
+                            loop {
+                                let mut best = pool.best.load(Ordering::Relaxed).min(local_best);
+                                let mut exhausted = false;
+                                for _ in 0..cfg.poll_interval {
+                                    match s.step(best) {
+                                        StepResult::Progress { improved } => {
+                                            if let Some((cost, sol)) = improved {
+                                                if cost < local_best {
+                                                    local_best = cost;
+                                                    local_best_sol = Some(sol);
+                                                    pool.best.fetch_min(cost, Ordering::Relaxed);
+                                                    stats.comm.notifications += 1;
+                                                }
+                                                best = best.min(cost);
+                                            }
+                                        }
+                                        StepResult::Exhausted => {
+                                            exhausted = true;
+                                            break;
+                                        }
+                                    }
+                                }
+                                if exhausted {
+                                    break;
+                                }
+                                // --- refill the pool when low ---
+                                let need_refill = {
+                                    let q = pool.queue.lock().unwrap();
+                                    q.tasks.len() < cfg.low_watermark
+                                };
+                                if need_refill {
+                                    // Donate only what fits: a donated index
+                                    // is gone from the donor's subtree, so it
+                                    // must land in the pool or not be taken.
+                                    let mut q = pool.queue.lock().unwrap();
+                                    let mut pushed = false;
+                                    while q.tasks.len() < cfg.buffer_cap {
+                                        match s.donate() {
+                                            Some(d) => {
+                                                stats.comm.tasks_donated += 1;
+                                                stats.comm.messages_sent += 1;
+                                                q.tasks.push_back(d);
+                                                pushed = true;
+                                            }
+                                            None => break,
+                                        }
+                                    }
+                                    if pushed {
+                                        let hw = q.tasks.len();
+                                        pool.high_water.fetch_max(hw, Ordering::Relaxed);
+                                        pool.available.notify_all();
+                                    }
+                                }
+                            }
+                            stats.search.merge(&s.stats);
+                        }
+                        (stats, local_best, local_best_sol)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+
+    let mut best_cost = COST_INF;
+    let mut best_solution = None;
+    let mut per_worker = Vec::with_capacity(c);
+    for (stats, best, sol) in results {
+        if best < best_cost {
+            best_cost = best;
+            best_solution = sol;
+        }
+        per_worker.push(stats);
+    }
+    RunReport {
+        best_cost: (best_cost != COST_INF).then_some(best_cost),
+        best_solution,
+        wall_secs: sw.elapsed_secs(),
+        per_worker,
+        timed_out: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::serial::solve_serial;
+    use crate::engine::toy::ToyTree;
+    use crate::instances::generators;
+    use crate::problems::VertexCover;
+
+    #[test]
+    fn pool_solves_toy_completely() {
+        let p = ToyTree { height: 9 };
+        let serial = solve_serial(&p, u64::MAX);
+        let r = solve_master_worker(&p, 4, PoolConfig::default());
+        assert_eq!(r.best_cost, serial.best_cost);
+        assert_eq!(r.total_nodes(), serial.stats.nodes);
+        assert_eq!(r.total_solutions(), serial.stats.solutions);
+    }
+
+    #[test]
+    fn pool_is_correct_on_vc() {
+        let g = generators::gnm(22, 80, 19);
+        let p = VertexCover::new(&g);
+        let expected = solve_serial(&p, u64::MAX).best_cost;
+        for cap in [4usize, 64] {
+            let r = solve_master_worker(
+                &p,
+                4,
+                PoolConfig { buffer_cap: cap, low_watermark: 2, poll_interval: 32 },
+            );
+            assert_eq!(r.best_cost, expected, "cap={cap}");
+        }
+    }
+
+    #[test]
+    fn single_worker_pool_works() {
+        let p = ToyTree { height: 6 };
+        let r = solve_master_worker(&p, 1, PoolConfig::default());
+        assert_eq!(r.best_cost, Some(1));
+        assert_eq!(r.total_nodes(), 127);
+    }
+}

@@ -1,0 +1,17 @@
+//! Comparison strategies from the paper's §III related-work discussion —
+//! the ablation baselines:
+//!
+//! * [`static_split`] — the "brute-force parallel solution" of §I: carve
+//!   the tree into subtrees at a fixed depth, assign round-robin, no
+//!   stealing.  Shows why implicit dynamic balancing matters.
+//! * [`master_worker`] — the buffered work-pool model of ref [15]: a
+//!   central master keeps a bounded task buffer that workers draw from;
+//!   exposes the §III-B buffer-size trade-off and the centralization
+//!   bottleneck.
+//! * [`random_steal`] — the main framework with victim selection replaced
+//!   by a seeded uniform choice (instead of `GETPARENT`/round-robin):
+//!   isolates the contribution of the virtual topology (A3).
+
+pub mod static_split;
+pub mod master_worker;
+pub mod random_steal;

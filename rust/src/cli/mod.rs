@@ -1,0 +1,165 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline crate set):
+//! `pbt <command> [--flag value]...` with typed accessors and helpful
+//! errors.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + `--key value` flags + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        let mut positionals = Vec::new();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' is not a flag");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // boolean flag unless a value follows
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            flags.insert(name.to_string(), it.next().unwrap());
+                        }
+                        _ => {
+                            flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                positionals.push(tok);
+            }
+        }
+        Ok(Args { command, flags, positionals })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("--{key} expects a boolean, got {v:?}"),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+pbt — parallel recursive backtracking framework (Abu-Khzam et al. 2013 reproduction)
+
+USAGE:
+    pbt <command> [--flag value]...
+
+COMMANDS:
+    solve       solve one instance with PARALLEL-RB on real threads
+                  --problem vc|ds|queens  --instance <name|path.clq>  --workers N
+                  --bound none|edges|matching  --config file.toml
+    simulate    virtual-time run on simulated cores
+                  --problem vc|ds  --instance <name>  --cores N  --latency T  --batch B
+    table1      regenerate Table I  (PARALLEL-VERTEX-COVER sweep)   [--scale 0|1|2] [--max-cores N]
+    table2      regenerate Table II (PARALLEL-DOMINATING-SET sweep) [--scale 0|1|2] [--max-cores N]
+    fig9        regenerate Figure 9  (log2 time vs cores)           [--scale 0|1|2]
+    fig10       regenerate Figure 10 (log2 T_S/T_R vs cores)        [--scale 0|1|2]
+    ablate      run an ablation: --which encoding|buffers|topology|broadcast|donation|hypercube
+    eval-xla    run the XLA batched frontier evaluator against the native path
+                  --artifacts DIR  --n 256 --b 64
+    topology    print the GETPARENT virtual tree for --cores N
+    help        this text
+
+INSTANCES (generated, seeded):
+    phat1 phat2 frb cell60   (vertex cover, Table I families)
+    ds1 ds2                  (dominating set, Table II families)
+    or any DIMACS .clq/.mis/.col file path
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse("solve --workers 8 --problem vc inst.clq");
+        assert_eq!(a.command, "solve");
+        assert_eq!(a.get("workers"), Some("8"));
+        assert_eq!(a.get("problem"), Some("vc"));
+        assert_eq!(a.positionals, vec!["inst.clq"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("simulate --cores=1024");
+        assert_eq!(a.get_usize("cores", 0).unwrap(), 1024);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("solve --verbose --workers 2");
+        assert!(a.get_bool("verbose", false).unwrap());
+        assert_eq!(a.get_usize("workers", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse("solve --quiet");
+        assert!(a.get_bool("quiet", false).unwrap());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("solve");
+        assert_eq!(a.get_usize("workers", 4).unwrap(), 4);
+        assert_eq!(a.get_str("bound", "edges"), "edges");
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("solve --workers eight");
+        assert!(a.get_usize("workers", 4).is_err());
+        let b = parse("solve --flag maybe");
+        assert!(b.get_bool("flag", false).is_err());
+    }
+
+    #[test]
+    fn empty_argv_is_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,107 @@
+//! In-process transport over `std::sync::mpsc` — the MPI stand-in for real
+//! OS-thread runs (`c` up to the machine's core count; larger `c` goes
+//! through the virtual-time simulator instead).
+
+use super::{Message, Transport};
+use crate::Rank;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+/// One endpoint per rank; cloneable senders to every peer.
+pub struct LocalTransport {
+    rank: Rank,
+    rx: Receiver<Message>,
+    txs: Vec<Sender<Message>>,
+}
+
+impl LocalTransport {
+    /// Build a fully connected mesh of `c` endpoints.
+    pub fn mesh(c: usize) -> Vec<LocalTransport> {
+        let mut txs = Vec::with_capacity(c);
+        let mut rxs = Vec::with_capacity(c);
+        for _ in 0..c {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .enumerate()
+            .map(|(rank, rx)| LocalTransport { rank, rx, txs: txs.clone() })
+            .collect()
+    }
+
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+}
+
+impl Transport for LocalTransport {
+    fn send(&self, to: Rank, msg: Message) {
+        // A receiver that already exited only happens after global
+        // termination; dropping the message is then harmless.
+        let _ = self.txs[to].send(msg);
+    }
+
+    fn broadcast(&self, from: Rank, msg: Message) {
+        for (r, tx) in self.txs.iter().enumerate() {
+            if r != from {
+                let _ = tx.send(msg.clone());
+            }
+        }
+    }
+
+    fn try_recv(&self) -> Option<Message> {
+        self.rx.try_recv().ok()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Option<Message> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CoreState;
+
+    #[test]
+    fn point_to_point_delivery() {
+        let mut mesh = LocalTransport::mesh(3);
+        let t2 = mesh.pop().unwrap();
+        let t1 = mesh.pop().unwrap();
+        let t0 = mesh.pop().unwrap();
+        t0.send(2, Message::TaskRequest { from: 0 });
+        assert_eq!(t2.try_recv(), Some(Message::TaskRequest { from: 0 }));
+        assert_eq!(t1.try_recv(), None);
+        assert_eq!(t0.try_recv(), None);
+    }
+
+    #[test]
+    fn broadcast_excludes_sender() {
+        let mesh = LocalTransport::mesh(3);
+        let msg = Message::StatusUpdate { from: 1, state: CoreState::Inactive };
+        mesh[1].broadcast(1, msg.clone());
+        assert_eq!(mesh[0].try_recv(), Some(msg.clone()));
+        assert_eq!(mesh[2].try_recv(), Some(msg));
+        assert_eq!(mesh[1].try_recv(), None);
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let mesh = LocalTransport::mesh(2);
+        let t = std::time::Instant::now();
+        assert_eq!(mesh[0].recv_timeout(Duration::from_millis(10)), None);
+        assert!(t.elapsed() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn fifo_per_sender() {
+        let mesh = LocalTransport::mesh(2);
+        for i in 0..10u64 {
+            mesh[0].send(1, Message::Notification { from: 0, best: i });
+        }
+        for i in 0..10u64 {
+            assert_eq!(mesh[1].try_recv(), Some(Message::Notification { from: 0, best: i }));
+        }
+    }
+}

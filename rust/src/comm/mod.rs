@@ -1,0 +1,139 @@
+//! Messages and transports (paper §III-A, §IV-B).
+//!
+//! Three message kinds, exactly the paper's: status updates, task
+//! requests/responses, and (optional) solution notifications.  The
+//! [`Transport`] trait abstracts delivery so the same worker state machine
+//! runs over OS threads ([`local::LocalTransport`], an MPI stand-in built on
+//! `std::sync::mpsc`) and under the discrete-event simulator's virtual time
+//! (`sim::SimNet`).
+
+pub mod local;
+
+use crate::index::NodeIndex;
+use crate::{Cost, Rank};
+
+/// A core's externally visible state (paper §III-F: three states).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreState {
+    Active,
+    Inactive,
+    /// Left the computation (join-leave, §VII); treated as permanently
+    /// inactive by peers but no longer responds to requests.
+    Dead,
+}
+
+/// Wire messages.  `E(N) = idx(N)` — a task travels as its index (§IV-A).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Broadcast before changing state (paper §IV-B).
+    StatusUpdate { from: Rank, state: CoreState },
+    /// "Give me your heaviest task."
+    TaskRequest { from: Rank },
+    /// Response: the donated tasks' indices — empty = the paper's `null`.
+    /// More than one entry is the §IV-C "subset S of siblings" variant
+    /// (config `donate_batch > 1`); entry order is the execution order.
+    TaskResponse { from: Rank, tasks: Vec<NodeIndex> },
+    /// Optional broadcast: a new incumbent of this cost was found (§IV-B);
+    /// receivers use it for pruning.
+    Notification { from: Rank, best: Cost },
+}
+
+impl Message {
+    /// Wire size in bytes (for the encoding-overhead ablation A1): every
+    /// variant is a tag byte + fixed fields; indices are O(d).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Message::StatusUpdate { .. } => 1 + 8 + 1,
+            Message::TaskRequest { .. } => 1 + 8,
+            Message::TaskResponse { tasks, .. } => {
+                1 + 8 + 4 + tasks.iter().map(|t| t.encode().len()).sum::<usize>()
+            }
+            Message::Notification { .. } => 1 + 8 + 8,
+        }
+    }
+}
+
+/// Message destination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dest {
+    One(Rank),
+    /// Broadcast to every peer (expanded to `c-1` transmissions).
+    All,
+}
+
+/// An outgoing envelope produced by the worker state machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    pub to: Dest,
+    pub msg: Message,
+}
+
+/// Delivery abstraction for the thread runner.
+pub trait Transport {
+    /// Send to one rank.
+    fn send(&self, to: Rank, msg: Message);
+    /// Broadcast to all ranks except `from`.
+    fn broadcast(&self, from: Rank, msg: Message);
+    /// Non-blocking receive.
+    fn try_recv(&self) -> Option<Message>;
+    /// Blocking receive with timeout; `None` on timeout.
+    fn recv_timeout(&self, timeout: std::time::Duration) -> Option<Message>;
+}
+
+/// Per-worker communication statistics (paper §VI: `T_S`, `T_R`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommStats {
+    /// Tasks received (and hence solved) — the paper's `T_S`.
+    pub tasks_received: u64,
+    /// Task requests sent — the paper's `T_R`.
+    pub tasks_requested: u64,
+    /// Tasks donated to other cores.
+    pub tasks_donated: u64,
+    /// Total message transmissions originated by this core.
+    pub messages_sent: u64,
+    /// Total bytes across those transmissions.
+    pub bytes_sent: u64,
+    /// Incumbent notifications broadcast.
+    pub notifications: u64,
+}
+
+impl CommStats {
+    pub fn merge(&mut self, o: &CommStats) {
+        self.tasks_received += o.tasks_received;
+        self.tasks_requested += o.tasks_requested;
+        self.tasks_donated += o.tasks_donated;
+        self.messages_sent += o.messages_sent;
+        self.bytes_sent += o.bytes_sent;
+        self.notifications += o.notifications;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_scale_with_depth() {
+        let shallow = Message::TaskResponse { from: 0, tasks: vec![NodeIndex(vec![1])] };
+        let deep = Message::TaskResponse { from: 0, tasks: vec![NodeIndex(vec![0; 40])] };
+        assert!(deep.wire_bytes() > shallow.wire_bytes());
+        // O(d): 4 bytes per digit
+        assert_eq!(deep.wire_bytes() - shallow.wire_bytes(), 39 * 4);
+    }
+
+    #[test]
+    fn null_response_is_small() {
+        let m = Message::TaskResponse { from: 3, tasks: vec![] };
+        assert!(m.wire_bytes() < 16);
+    }
+
+    #[test]
+    fn stats_merge() {
+        let mut a = CommStats { tasks_received: 1, tasks_requested: 2, ..Default::default() };
+        let b = CommStats { tasks_received: 10, messages_sent: 5, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.tasks_received, 11);
+        assert_eq!(a.tasks_requested, 2);
+        assert_eq!(a.messages_sent, 5);
+    }
+}

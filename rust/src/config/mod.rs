@@ -1,0 +1,260 @@
+//! Run configuration: a TOML-subset parser (no `serde`/`toml` in the
+//! offline crate set) plus the typed [`PbtConfig`] the launcher consumes.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"..."`), integer, float and boolean values, `#` comments.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key -> value` (top-level keys use section "").
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    pub entries: BTreeMap<(String, String), Value>,
+}
+
+impl Document {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+}
+
+/// Parse TOML-subset text.
+pub fn parse(text: &str) -> Result<Document> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim().to_string();
+        let value = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        if doc.entries.insert((section.clone(), key.clone()), value).is_some() {
+            bail!("line {}: duplicate key {section}.{key}", lineno + 1);
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` outside a string starts a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s:?}")
+}
+
+/// Typed launcher configuration with defaults.
+#[derive(Debug, Clone)]
+pub struct PbtConfig {
+    /// Real-thread core count for `solve`.
+    pub workers: usize,
+    /// Node visits between inbox polls.
+    pub poll_interval: u32,
+    /// Passes before going inactive (paper: 2).
+    pub max_passes: usize,
+    pub broadcast_solutions: bool,
+    /// Simulator: per-message latency in node-visit ticks.
+    pub sim_latency: u64,
+    /// Simulator: node visits per scheduling quantum.
+    pub sim_batch: u32,
+    /// Benchmark suite scale (0 tiny / 1 default / 2 heavy).
+    pub scale: usize,
+    /// VC bound: "none" | "edges" | "matching".
+    pub bound: String,
+}
+
+impl Default for PbtConfig {
+    fn default() -> Self {
+        PbtConfig {
+            workers: 4,
+            poll_interval: 16,
+            max_passes: 2,
+            broadcast_solutions: true,
+            sim_latency: 2,
+            sim_batch: 16,
+            scale: 1,
+            bound: "edges".into(),
+        }
+    }
+}
+
+impl PbtConfig {
+    /// Load from a TOML-subset file; missing keys keep defaults.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_text(&text)
+    }
+
+    pub fn from_text(text: &str) -> Result<Self> {
+        let doc = parse(text)?;
+        let mut cfg = PbtConfig::default();
+        let geti = |sec: &str, key: &str| doc.get(sec, key).and_then(Value::as_int);
+        let getb = |sec: &str, key: &str| doc.get(sec, key).and_then(Value::as_bool);
+        if let Some(v) = geti("run", "workers") {
+            cfg.workers = v as usize;
+        }
+        if let Some(v) = geti("run", "poll_interval") {
+            cfg.poll_interval = v as u32;
+        }
+        if let Some(v) = geti("run", "max_passes") {
+            cfg.max_passes = v as usize;
+        }
+        if let Some(v) = getb("run", "broadcast_solutions") {
+            cfg.broadcast_solutions = v;
+        }
+        if let Some(v) = geti("sim", "latency") {
+            cfg.sim_latency = v as u64;
+        }
+        if let Some(v) = geti("sim", "batch") {
+            cfg.sim_batch = v as u32;
+        }
+        if let Some(v) = geti("bench", "scale") {
+            cfg.scale = v as usize;
+        }
+        if let Some(v) = doc.get("run", "bound").and_then(Value::as_str) {
+            cfg.bound = v.to_string();
+        }
+        Ok(cfg)
+    }
+
+    pub fn worker_config(&self) -> crate::coordinator::WorkerConfig {
+        crate::coordinator::WorkerConfig {
+            poll_interval: self.poll_interval,
+            max_passes: self.max_passes,
+            broadcast_solutions: self.broadcast_solutions,
+            ..Default::default()
+        }
+    }
+
+    pub fn bound_kind(&self) -> crate::problems::BoundKind {
+        match self.bound.as_str() {
+            "none" => crate::problems::BoundKind::None,
+            "matching" => crate::problems::BoundKind::Matching,
+            _ => crate::problems::BoundKind::EdgesOverMaxDeg,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            "top = 1\n[run]\nworkers = 8\nbound = \"matching\"  # comment\nratio = 1.5\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("run", "workers"), Some(&Value::Int(8)));
+        assert_eq!(doc.get("run", "bound").unwrap().as_str(), Some("matching"));
+        assert_eq!(doc.get("run", "ratio").unwrap().as_float(), Some(1.5));
+        assert_eq!(doc.get("run", "flag").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("x = what\n").is_err());
+        assert!(parse("x = 1\nx = 2\n").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = parse("s = \"a # b\"\n").unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn typed_config_defaults_and_overrides() {
+        let cfg = PbtConfig::from_text("[run]\nworkers = 12\n[sim]\nlatency = 100\n").unwrap();
+        assert_eq!(cfg.workers, 12);
+        assert_eq!(cfg.sim_latency, 100);
+        assert_eq!(cfg.max_passes, 2); // default
+        assert_eq!(cfg.bound_kind(), crate::problems::BoundKind::EdgesOverMaxDeg);
+    }
+
+    #[test]
+    fn empty_text_is_defaults() {
+        let cfg = PbtConfig::from_text("").unwrap();
+        assert_eq!(cfg.workers, PbtConfig::default().workers);
+    }
+}

@@ -1,0 +1,14 @@
+//! PARALLEL-RB (paper Fig. 7): the per-core worker state machine.
+//!
+//! [`worker::Worker`] implements PARALLEL-RB-ITERATOR + PARALLEL-RB-SOLVER
+//! as a driver-agnostic state machine: it consumes [`crate::comm::Message`]s
+//! and emits [`crate::comm::Envelope`]s, and its compute is advanced by
+//! explicit `step_batch` calls.  The thread runner ([`crate::runner`])
+//! drives it at native speed; the discrete-event simulator
+//! ([`crate::sim`]) drives the *same* code under virtual time — this is the
+//! design decision that makes the simulated 131,072-core scaling runs
+//! faithful to the real implementation.
+
+pub mod worker;
+
+pub use worker::{Phase, Worker, WorkerConfig, WorkerStats};

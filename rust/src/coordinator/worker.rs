@@ -1,0 +1,778 @@
+//! The worker state machine (PARALLEL-RB-ITERATOR + PARALLEL-RB-SOLVER).
+//!
+//! Protocol walkthrough (paper §IV-B, Fig. 7):
+//!
+//! * `C_0` starts on the root task `N_{0,0}`; every other core sends its
+//!   first request to `GETPARENT(r)` (the virtual tree of Fig. 6), then
+//!   switches to round-robin probing with `GETNEXTPARENT`.
+//! * While working, a core polls its inbox between node visits (the
+//!   solver's non-blocking communication): task requests are answered with
+//!   the heaviest unexplored node of its own subtree (`donate`), incumbent
+//!   notifications tighten the local bound.
+//! * When its subtree is exhausted, a core requests a task from its current
+//!   parent and waits (the iterator's blocking communication). A `null`
+//!   response advances the parent; `c - 1` consecutive failures complete a
+//!   *pass*; after `passes > 2` the core broadcasts `Inactive` and stops
+//!   requesting.  Inactive cores keep answering peers (with `null`) so no
+//!   requester ever blocks forever; once every core is inactive the
+//!   computation ends.
+//!
+//! Join-leave (§VII): a core can be told to [`Worker::leave`] after a fixed
+//! number of tasks; it donates nothing further, broadcasts `Dead`, and its
+//! unfinished subtree is re-exported as a checkpoint index list that a
+//! replacement (or any peer) can adopt.
+
+use crate::comm::{CommStats, CoreState, Dest, Envelope, Message};
+use crate::engine::{Problem, SearchState, SearchStats, StepResult, Stepper};
+use crate::index::NodeIndex;
+use crate::topology::{get_next_parent, get_parent, probes_per_pass};
+use crate::{Cost, Rank, COST_INF};
+
+/// Victim selection for task requests (A3 topology ablation; the paper's
+/// scheme is [`VictimStrategy::VirtualTree`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VictimStrategy {
+    /// Paper §IV-B: initial parent via `GETPARENT`, then round-robin.
+    #[default]
+    VirtualTree,
+    /// Uniformly random victim each probe (classic random work stealing).
+    Random,
+    /// Everyone asks rank 0 first, then round-robin (naive centralized
+    /// initial distribution — the §III-C failure mode).
+    AlwaysZeroFirst,
+    /// §VII future work: a bounded-degree virtual topology.  Victims cycle
+    /// over the hypercube neighbours `r ^ 2^i` (degree ⌈log2 c⌉), so the
+    /// per-core probe budget — and with it the `T_R` gap of Fig. 10 — stops
+    /// growing linearly with `c`.
+    Hypercube,
+}
+
+/// Tunables (defaults follow the paper where it specifies them).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerConfig {
+    /// Node visits between inbox polls while working (1 = the paper's
+    /// poll-every-node; raising it trades donation latency for throughput —
+    /// see EXPERIMENTS.md §Perf).
+    pub poll_interval: u32,
+    /// Passes over all peers before going inactive (paper: `passes > 2`).
+    pub max_passes: usize,
+    /// Broadcast improved incumbents (paper §V; ablation A4 turns it off).
+    pub broadcast_solutions: bool,
+    /// Victim selection scheme (A3).
+    pub victims: VictimStrategy,
+    /// Seed for the Random strategy.
+    pub steal_seed: u64,
+    /// Tasks donated per request (§IV-C subset-of-siblings; 1 = paper's
+    /// binary-tree behaviour).
+    pub donate_batch: usize,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            poll_interval: 16,
+            max_passes: 2,
+            broadcast_solutions: true,
+            victims: VictimStrategy::VirtualTree,
+            steal_seed: 0x5EED,
+            donate_batch: 1,
+        }
+    }
+}
+
+/// Worker phase (the paper's three states, plus the waiting sub-state of
+/// `active`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Solving its subtree (active).
+    Working,
+    /// Waiting for a task response (active).
+    Waiting,
+    /// Out of work after `max_passes` full passes; still answers peers.
+    Inactive,
+    /// Left the computation (join-leave §VII).
+    Dead,
+}
+
+/// Everything a run reports per worker.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerStats {
+    pub search: SearchStats,
+    pub comm: CommStats,
+}
+
+/// Peer-status storage.  Thread runs give every worker its own copy (true
+/// decentralized views, like the paper's per-core `statuses` array); the
+/// discrete-event simulator shares ONE board across all virtual cores —
+/// per-worker copies would cost O(c²) memory at c = 131,072 (see DESIGN.md
+/// Substitutions; status updates are rare and tiny, so the instant
+/// propagation this implies is a negligible modeling difference).
+pub trait StatusTable {
+    fn get(&self, r: Rank) -> CoreState;
+    fn set(&mut self, r: Rank, s: CoreState);
+}
+
+/// Per-worker status vector (thread runner).
+pub struct VecStatus(Vec<CoreState>);
+
+impl VecStatus {
+    pub fn new(c: usize) -> Self {
+        VecStatus(vec![CoreState::Active; c])
+    }
+}
+
+impl StatusTable for VecStatus {
+    #[inline]
+    fn get(&self, r: Rank) -> CoreState {
+        self.0[r]
+    }
+
+    #[inline]
+    fn set(&mut self, r: Rank, s: CoreState) {
+        self.0[r] = s;
+    }
+}
+
+/// One shared board for all virtual cores (simulator; single-threaded).
+#[derive(Clone)]
+pub struct SharedStatus(std::rc::Rc<std::cell::RefCell<Vec<CoreState>>>);
+
+impl SharedStatus {
+    pub fn new(c: usize) -> Self {
+        SharedStatus(std::rc::Rc::new(std::cell::RefCell::new(vec![CoreState::Active; c])))
+    }
+
+    /// Count of cores currently in a given state.
+    pub fn count(&self, state: CoreState) -> usize {
+        self.0.borrow().iter().filter(|&&s| s == state).count()
+    }
+}
+
+impl StatusTable for SharedStatus {
+    #[inline]
+    fn get(&self, r: Rank) -> CoreState {
+        self.0.borrow()[r]
+    }
+
+    #[inline]
+    fn set(&mut self, r: Rank, s: CoreState) {
+        self.0.borrow_mut()[r] = s;
+    }
+}
+
+/// The PARALLEL-RB worker for problem `P`.
+pub struct Worker<'p, P: Problem, S: StatusTable = VecStatus> {
+    pub rank: Rank,
+    c: usize,
+    problem: &'p P,
+    cfg: WorkerConfig,
+    stepper: Option<Stepper<P>>,
+    phase: Phase,
+    parent: Rank,
+    /// True until the first (virtual-tree) request resolves.
+    init: bool,
+    probes_this_pass: usize,
+    passes: usize,
+    /// Local view of the incumbent (kept in sync by notifications).
+    pub best: Cost,
+    pub best_solution: Option<<P::State as SearchState>::Sol>,
+    statuses: S,
+    pub stats: WorkerStats,
+    outbox: Vec<Envelope>,
+    rng: crate::util::Rng,
+    /// Extra tasks from a multi-task response (§IV-C), executed in order
+    /// before any new request goes out. NOT a task buffer in the §III-B
+    /// sense: it holds only what one response carried.
+    pending: std::collections::VecDeque<NodeIndex>,
+}
+
+impl<'p, P: Problem> Worker<'p, P, VecStatus> {
+    /// Create worker `rank` of `c`.  Rank 0 is seeded with the root task;
+    /// everyone else queues their initial virtual-tree request (call
+    /// [`drain_outbox`](Self::drain_outbox) to collect it).
+    pub fn new(problem: &'p P, rank: Rank, c: usize, cfg: WorkerConfig) -> Self {
+        Self::with_status(problem, rank, c, cfg, VecStatus::new(c))
+    }
+}
+
+impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
+    /// Create with an explicit status table (the simulator passes a shared
+    /// board; threads use [`Worker::new`]).
+    pub fn with_status(problem: &'p P, rank: Rank, c: usize, cfg: WorkerConfig, statuses: S) -> Self {
+        assert!(c >= 1);
+        let mut w = Worker {
+            rank,
+            c,
+            problem,
+            cfg,
+            stepper: None,
+            phase: Phase::Working,
+            parent: match cfg.victims {
+                _ if rank == 0 => 0,
+                // Hypercube keeps the paper's tree init: GETPARENT clears the
+                // top bit, which IS a hypercube neighbour.
+                VictimStrategy::VirtualTree | VictimStrategy::Hypercube => get_parent(rank, c),
+                VictimStrategy::AlwaysZeroFirst => 0,
+                VictimStrategy::Random => rank, // replaced before first request
+            },
+            init: true,
+            probes_this_pass: 0,
+            passes: 0,
+            best: COST_INF,
+            best_solution: None,
+            statuses,
+            stats: WorkerStats::default(),
+            outbox: Vec::new(),
+            rng: crate::util::Rng::new(cfg.steal_seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            pending: std::collections::VecDeque::new(),
+        };
+        if rank == 0 {
+            w.stepper = Some(Stepper::at_root(problem));
+            w.init = false;
+        } else {
+            if cfg.victims == VictimStrategy::Random {
+                w.parent = w.random_victim();
+            }
+            let victim = w.parent;
+            w.request_from(victim);
+            w.phase = Phase::Waiting;
+        }
+        w
+    }
+
+    /// Uniform victim != self (Random strategy).
+    fn random_victim(&mut self) -> Rank {
+        let v = self.rng.gen_range(self.c - 1);
+        if v >= self.rank {
+            v + 1
+        } else {
+            v
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn passes(&self) -> usize {
+        self.passes
+    }
+
+    /// True when this worker believes every core is inactive/dead —
+    /// the decentralized termination condition.
+    pub fn sees_global_termination(&self) -> bool {
+        (self.phase == Phase::Inactive || self.phase == Phase::Dead)
+            && (0..self.c)
+                .all(|r| r == self.rank || !matches!(self.statuses.get(r), CoreState::Active))
+    }
+
+    /// Collect queued outgoing envelopes (the driver delivers them).
+    pub fn drain_outbox(&mut self) -> Vec<Envelope> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    fn push_msg(&mut self, to: Dest, msg: Message) {
+        let transmissions = match to {
+            Dest::One(_) => 1,
+            Dest::All => (self.c - 1) as u64,
+        };
+        self.stats.comm.messages_sent += transmissions;
+        self.stats.comm.bytes_sent += msg.wire_bytes() as u64 * transmissions;
+        self.outbox.push(Envelope { to, msg });
+    }
+
+    fn request_from(&mut self, victim: Rank) {
+        debug_assert_ne!(victim, self.rank);
+        self.stats.comm.tasks_requested += 1;
+        self.push_msg(Dest::One(victim), Message::TaskRequest { from: self.rank });
+    }
+
+    /// Handle one inbound message.  Never blocks.
+    pub fn handle(&mut self, msg: Message) {
+        match msg {
+            Message::StatusUpdate { from, state } => {
+                self.statuses.set(from, state);
+            }
+            Message::Notification { best, .. } => {
+                if best < self.best {
+                    self.best = best;
+                    // The solution payload lives on the finder; peers only
+                    // need the cost for pruning (paper §IV-B).
+                }
+            }
+            Message::TaskRequest { from } => {
+                // Inactive/dead/idle workers answer null so requesters
+                // never block forever.
+                let mut tasks = Vec::new();
+                if self.phase == Phase::Working {
+                    if let Some(stepper) = self.stepper.as_mut() {
+                        for _ in 0..self.cfg.donate_batch.max(1) {
+                            match stepper.donate() {
+                                Some(idx) => tasks.push(idx),
+                                None => break,
+                            }
+                        }
+                    }
+                }
+                self.stats.comm.tasks_donated += tasks.len() as u64;
+                self.push_msg(Dest::One(from), Message::TaskResponse { from: self.rank, tasks });
+            }
+            Message::TaskResponse { tasks, .. } => {
+                if self.phase != Phase::Waiting {
+                    return; // stale response
+                }
+                let was_init = std::mem::take(&mut self.init);
+                if was_init {
+                    // Paper Fig. 7 line 14: after the initial response the
+                    // parent pointer moves to (r+1) mod c.
+                    self.parent = (self.rank + 1) % self.c;
+                    if self.parent == self.rank {
+                        self.parent = (self.parent + 1) % self.c;
+                    }
+                }
+                if tasks.is_empty() {
+                    self.on_null_response();
+                } else {
+                    self.stats.comm.tasks_received += tasks.len() as u64;
+                    let mut it = tasks.into_iter();
+                    let first = it.next().unwrap();
+                    self.pending.extend(it);
+                    match Stepper::from_index(self.problem, &first) {
+                        Ok(stepper) => {
+                            self.stepper = Some(stepper);
+                            self.phase = Phase::Working;
+                            self.probes_this_pass = 0;
+                            self.passes = 0;
+                        }
+                        Err(_) => {
+                            // Corrupt index: treat as a failed probe. Cannot
+                            // happen with a correct peer; defensive only.
+                            self.pending.clear();
+                            self.on_null_response();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_null_response(&mut self) {
+        self.probes_this_pass += 1;
+        if self.probes_this_pass >= self.pass_size() {
+            self.probes_this_pass = 0;
+            self.passes += 1;
+            if self.passes > self.cfg.max_passes {
+                self.go_inactive();
+                return;
+            }
+        }
+        self.probe_next();
+    }
+
+    /// Advance the parent pointer, skipping peers already known inactive or
+    /// dead (each skip still counts as an unsuccessful probe — without this
+    /// the tail of the run floods the network, §III-A).
+    /// Probes per pass under the configured topology (Hypercube probes only
+    /// its ⌈log2 c⌉ neighbours — the §VII bounded-degree experiment).
+    fn pass_size(&self) -> usize {
+        match self.cfg.victims {
+            VictimStrategy::Hypercube => self.hypercube_degree().max(1),
+            _ => probes_per_pass(self.c),
+        }
+    }
+
+    fn hypercube_degree(&self) -> usize {
+        (usize::BITS - (self.c - 1).leading_zeros()) as usize
+    }
+
+    /// The next hypercube neighbour after `current` in dimension order.
+    fn next_hypercube_victim(&self, current: Rank) -> Rank {
+        let dims = self.hypercube_degree();
+        // Find the dimension of the edge used for `current` and advance.
+        let start = (0..dims)
+            .find(|&i| current == (self.rank ^ (1 << i)) % self.c.next_power_of_two() && current < self.c)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        for off in 0..dims {
+            let d = (start + off) % dims;
+            let v = self.rank ^ (1 << d);
+            if v < self.c && v != self.rank {
+                return v;
+            }
+        }
+        // Degenerate tiny c: fall back to round robin.
+        get_next_parent(current, self.rank, self.c)
+    }
+
+    fn probe_next(&mut self) {
+        let mut victim = match self.cfg.victims {
+            VictimStrategy::Random => self.random_victim(),
+            VictimStrategy::Hypercube => self.next_hypercube_victim(self.parent),
+            _ => get_next_parent(self.parent, self.rank, self.c),
+        };
+        let mut skipped = 0usize;
+        while !matches!(self.statuses.get(victim), CoreState::Active) {
+            self.probes_this_pass += 1;
+            skipped += 1;
+            if self.probes_this_pass >= self.pass_size() {
+                self.probes_this_pass = 0;
+                self.passes += 1;
+                if self.passes > self.cfg.max_passes {
+                    self.go_inactive();
+                    return;
+                }
+            }
+            if skipped >= self.c {
+                // everyone inactive; force pass completion
+                self.go_inactive();
+                return;
+            }
+            victim = match self.cfg.victims {
+                VictimStrategy::Random => self.random_victim(),
+                VictimStrategy::Hypercube => self.next_hypercube_victim(victim),
+                _ => get_next_parent(victim, self.rank, self.c),
+            };
+        }
+        self.parent = victim;
+        self.request_from(victim);
+        self.phase = Phase::Waiting;
+    }
+
+    fn go_inactive(&mut self) {
+        self.phase = Phase::Inactive;
+        self.statuses.set(self.rank, CoreState::Inactive);
+        self.push_msg(
+            Dest::All,
+            Message::StatusUpdate { from: self.rank, state: CoreState::Inactive },
+        );
+    }
+
+    /// Join-leave (§VII): leave the computation now. Returns a checkpoint
+    /// of the unfinished subtree (if any) that a replacement core restores
+    /// with [`Stepper::from_checkpoint`].
+    pub fn leave(&mut self) -> Option<Vec<u8>> {
+        let cp = match self.stepper.take() {
+            Some(s) => {
+                let st = s.stats;
+                self.stats.search.merge(&st);
+                (!s.is_exhausted()).then(|| s.checkpoint_bytes())
+            }
+            None => None,
+        };
+        self.phase = Phase::Dead;
+        self.statuses.set(self.rank, CoreState::Dead);
+        self.push_msg(Dest::All, Message::StatusUpdate { from: self.rank, state: CoreState::Dead });
+        cp
+    }
+
+    /// Advance the search by up to `n` node visits (PARALLEL-RB-SOLVER's
+    /// compute between polls). Returns the number of visits performed.
+    pub fn step_batch(&mut self, n: u32) -> u32 {
+        if self.phase != Phase::Working {
+            return 0;
+        }
+        let Some(stepper) = self.stepper.as_mut() else {
+            return 0;
+        };
+        let mut done = 0u32;
+        let mut improvements: Vec<Cost> = Vec::new();
+        for _ in 0..n {
+            match stepper.step(self.best) {
+                StepResult::Progress { improved } => {
+                    done += 1;
+                    if let Some((cost, sol)) = improved {
+                        self.best = cost;
+                        self.best_solution = Some(sol);
+                        improvements.push(cost);
+                    }
+                }
+                StepResult::Exhausted => break,
+            }
+        }
+        let exhausted = stepper.is_exhausted();
+        let finished_stats = exhausted.then(|| stepper.stats);
+        if self.cfg.broadcast_solutions {
+            for cost in improvements {
+                self.stats.comm.notifications += 1;
+                self.push_msg(Dest::All, Message::Notification { from: self.rank, best: cost });
+            }
+        }
+        if let Some(st) = finished_stats {
+            self.stats.search.merge(&st);
+            self.stepper = None;
+            // §IV-C multi-task responses: run the remaining siblings before
+            // asking anyone for more work.
+            while let Some(next) = self.pending.pop_front() {
+                if let Ok(stepper) = Stepper::from_index(self.problem, &next) {
+                    self.stepper = Some(stepper);
+                    return done;
+                }
+            }
+            if self.c == 1 {
+                self.go_inactive();
+            } else {
+                self.probe_next();
+            }
+        }
+        done
+    }
+
+    /// The configured poll interval (driver hint).
+    pub fn poll_interval(&self) -> u32 {
+        self.cfg.poll_interval
+    }
+
+    /// Does this worker currently hold (unexhausted) work?
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || self.stepper.as_ref().map_or(false, |s| !s.is_exhausted())
+    }
+
+    /// Simulator endgame collapse: once no work exists anywhere in the
+    /// system, the remaining protocol activity is a deterministic probe
+    /// storm — every still-active core probes every peer until its passes
+    /// run out (the paper's growing `T_R` gap, Fig. 10).  Rather than
+    /// simulate O(c²) null request/response events, charge the storm
+    /// analytically and go inactive.  Returns the number of requests
+    /// charged (the caller advances virtual time accordingly).
+    pub fn collapse_endgame(&mut self) -> u64 {
+        if matches!(self.phase, Phase::Inactive | Phase::Dead) {
+            return 0;
+        }
+        let per_pass = self.pass_size() as u64;
+        let full_budget = (self.cfg.max_passes as u64 + 1) * per_pass;
+        let spent = (self.passes as u64) * per_pass + self.probes_this_pass as u64;
+        let remaining = full_budget.saturating_sub(spent);
+        self.stats.comm.tasks_requested += remaining;
+        self.stats.comm.messages_sent += remaining;
+        self.stats.comm.bytes_sent += remaining * 9;
+        self.stepper = None;
+        self.go_inactive();
+        remaining
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::toy::ToyTree;
+
+    /// Deterministic single-threaded message pump over a set of workers —
+    /// lets unit tests exercise the protocol without thread scheduling
+    /// nondeterminism.
+    fn pump(problem: &ToyTree, c: usize, cfg: WorkerConfig) -> Vec<Worker<'_, ToyTree>> {
+        let mut workers: Vec<Worker<'_, ToyTree>> =
+            (0..c).map(|r| Worker::new(problem, r, c, cfg)).collect();
+        let mut queues: Vec<Vec<Message>> = vec![Vec::new(); c];
+        for _round in 0..200_000 {
+            // Deliver.
+            for r in 0..c {
+                let envs = workers[r].drain_outbox();
+                for env in envs {
+                    match env.to {
+                        Dest::One(to) => queues[to].push(env.msg.clone()),
+                        Dest::All => {
+                            for (to, q) in queues.iter_mut().enumerate() {
+                                if to != r {
+                                    q.push(env.msg.clone());
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Handle + step.
+            let mut any = false;
+            for r in 0..c {
+                for msg in std::mem::take(&mut queues[r]) {
+                    workers[r].handle(msg);
+                    any = true;
+                }
+                if workers[r].phase() == Phase::Working {
+                    workers[r].step_batch(4);
+                    any = true;
+                }
+            }
+            if !any && workers.iter().all(|w| w.sees_global_termination()) {
+                return workers;
+            }
+        }
+        panic!("pump did not terminate");
+    }
+
+    #[test]
+    fn two_workers_complete_decomposition() {
+        let p = ToyTree { height: 8 };
+        let ws = pump(&p, 2, WorkerConfig { broadcast_solutions: false, ..Default::default() });
+        let nodes: u64 = ws.iter().map(|w| w.stats.search.nodes).sum();
+        let sols: u64 = ws.iter().map(|w| w.stats.search.solutions).sum();
+        assert_eq!(nodes, (1 << 9) - 1);
+        assert_eq!(sols, 1 << 8);
+        // Both workers did real work.
+        assert!(ws.iter().all(|w| w.stats.search.nodes > 0));
+        let best = ws.iter().map(|w| w.best).min().unwrap();
+        assert_eq!(best, 1);
+    }
+
+    #[test]
+    fn eight_workers_all_participate() {
+        let p = ToyTree { height: 10 };
+        let ws = pump(&p, 8, WorkerConfig::default());
+        let nodes: u64 = ws.iter().map(|w| w.stats.search.nodes).sum();
+        assert_eq!(nodes, (1 << 11) - 1);
+        let participating = ws.iter().filter(|w| w.stats.search.nodes > 0).count();
+        assert_eq!(participating, 8, "implicit load balancing reaches every core");
+        // T_S == donations globally.
+        let ts: u64 = ws.iter().map(|w| w.stats.comm.tasks_received).sum();
+        let don: u64 = ws.iter().map(|w| w.stats.comm.tasks_donated).sum();
+        assert_eq!(ts, don);
+    }
+
+    #[test]
+    fn initial_requests_follow_virtual_tree() {
+        let p = ToyTree { height: 4 };
+        let c = 8;
+        let workers: Vec<Worker<'_, ToyTree>> =
+            (0..c).map(|r| Worker::new(&p, r, c, WorkerConfig::default())).collect();
+        for (r, mut w) in workers.into_iter().enumerate() {
+            let envs = w.drain_outbox();
+            if r == 0 {
+                assert!(envs.is_empty(), "C_0 starts on the root task");
+                assert_eq!(w.phase(), Phase::Working);
+            } else {
+                assert_eq!(envs.len(), 1);
+                assert_eq!(envs[0].to, Dest::One(crate::topology::get_parent(r, c)));
+                assert!(matches!(envs[0].msg, Message::TaskRequest { .. }));
+                assert_eq!(w.phase(), Phase::Waiting);
+            }
+        }
+    }
+
+    #[test]
+    fn notification_tightens_best() {
+        let p = ToyTree { height: 4 };
+        let mut w = Worker::new(&p, 0, 2, WorkerConfig::default());
+        assert_eq!(w.best, COST_INF);
+        w.handle(Message::Notification { from: 1, best: 42 });
+        assert_eq!(w.best, 42);
+        w.handle(Message::Notification { from: 1, best: 50 });
+        assert_eq!(w.best, 42, "worse incumbents ignored");
+    }
+
+    #[test]
+    fn inactive_worker_answers_null() {
+        let p = ToyTree { height: 3 };
+        let mut w = Worker::new(&p, 1, 2, WorkerConfig::default());
+        w.drain_outbox();
+        // Exhaust the passes: null responses until inactive.
+        for _ in 0..4 {
+            w.handle(Message::TaskResponse { from: 0, tasks: vec![] });
+            w.drain_outbox();
+        }
+        assert_eq!(w.phase(), Phase::Inactive);
+        w.handle(Message::TaskRequest { from: 0 });
+        let envs = w.drain_outbox();
+        assert_eq!(envs.len(), 1);
+        assert!(matches!(
+            envs[0].msg,
+            Message::TaskResponse { ref tasks, .. } if tasks.is_empty()
+        ));
+    }
+
+    #[test]
+    fn leave_exports_checkpoint_that_resumes() {
+        use crate::engine::{serial, Stepper, StepResult};
+        let p = ToyTree { height: 8 };
+        let mut w = Worker::new(&p, 0, 2, WorkerConfig::default());
+        w.step_batch(37); // partway through the root subtree
+        let visited_before = w.stats.search.nodes
+            + 0; // stats merged on leave below
+        let cp = w.leave().expect("unfinished work must checkpoint");
+        assert_eq!(w.phase(), Phase::Dead);
+        let visited = w.stats.search.nodes;
+        assert!(visited >= 37 || visited_before > 0);
+
+        // A replacement resumes and finishes the rest, exactly once each.
+        let mut resumed = Stepper::from_checkpoint(&p, &cp).unwrap();
+        let mut best = COST_INF;
+        loop {
+            match resumed.step(best) {
+                StepResult::Progress { improved } => {
+                    if let Some((c, _)) = improved {
+                        best = c;
+                    }
+                }
+                StepResult::Exhausted => break,
+            }
+        }
+        let serial = serial::solve_serial(&p, u64::MAX);
+        assert_eq!(visited + resumed.stats.nodes, serial.stats.nodes);
+        let total_solutions = w.stats.search.solutions + resumed.stats.solutions;
+        assert_eq!(total_solutions, serial.stats.solutions);
+    }
+
+    #[test]
+    fn stale_response_ignored_while_working() {
+        let p = ToyTree { height: 6 };
+        let mut w = Worker::new(&p, 0, 3, WorkerConfig::default());
+        assert_eq!(w.phase(), Phase::Working);
+        let nodes_before = 0;
+        // A response arriving while Working (e.g. duplicated) must not
+        // clobber the current stepper.
+        w.handle(Message::TaskResponse {
+            from: 1,
+            tasks: vec![crate::index::NodeIndex(vec![1])],
+        });
+        assert_eq!(w.phase(), Phase::Working);
+        assert_eq!(w.stats.comm.tasks_received, nodes_before);
+        w.step_batch(200);
+        // Full tree solved by rank 0 alone (no task was accepted twice).
+        assert_eq!(w.stats.search.nodes, 127);
+    }
+
+    #[test]
+    fn multi_task_donation_roundtrip() {
+        // donate_batch = 3: one response carries up to 3 sibling tasks; the
+        // receiver runs all of them before probing again.
+        let p = ToyTree { height: 10 };
+        let cfg = WorkerConfig { donate_batch: 3, ..Default::default() };
+        let ws = pump(&p, 4, cfg);
+        let nodes: u64 = ws.iter().map(|w| w.stats.search.nodes).sum();
+        assert_eq!(nodes, (1 << 11) - 1, "work conserved with batched donation");
+        // Multi-task responses mean fewer requests per task received.
+        let ts: u64 = ws.iter().map(|w| w.stats.comm.tasks_received).sum();
+        let don: u64 = ws.iter().map(|w| w.stats.comm.tasks_donated).sum();
+        assert_eq!(ts, don);
+    }
+
+    #[test]
+    fn hypercube_topology_completes() {
+        let p = ToyTree { height: 10 };
+        let cfg = WorkerConfig { victims: VictimStrategy::Hypercube, ..Default::default() };
+        let ws = pump(&p, 8, cfg);
+        let nodes: u64 = ws.iter().map(|w| w.stats.search.nodes).sum();
+        assert_eq!(nodes, (1 << 11) - 1, "hypercube topology conserves work");
+        // Bounded degree: per-pass budget is log2(c)=3, so T_R per worker is
+        // far below the fully-connected 3*(c-1).
+        for w in &ws {
+            assert!(
+                w.stats.comm.tasks_requested <= 3 * 3 + 10,
+                "rank {} requested {} times",
+                w.rank,
+                w.stats.comm.tasks_requested
+            );
+        }
+    }
+
+    #[test]
+    fn broadcast_on_improvement() {
+        let p = ToyTree { height: 3 };
+        let mut w = Worker::new(&p, 0, 3, WorkerConfig::default());
+        // Run to first solution: the all-left leaf improves best.
+        w.step_batch(4);
+        let envs = w.drain_outbox();
+        assert!(envs
+            .iter()
+            .any(|e| matches!(e.msg, Message::Notification { .. }) && e.to == Dest::All));
+        assert!(w.stats.comm.notifications >= 1);
+    }
+}

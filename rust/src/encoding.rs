@@ -1,0 +1,195 @@
+//! Task-encoding schemes (paper §III-B vs §IV-A) — the A1 ablation.
+//!
+//! The paper's core memory claim: encoding a task as its search-tree index
+//! is O(d) bytes, versus the Finkel–Manber style full-state copy which is
+//! O(n + m) (the whole modified graph).  [`IndexEncoding`] and
+//! [`FullStateEncoding`] make both measurable on real VERTEX COVER states,
+//! including the decode cost (`CONVERTINDEX` replay vs direct
+//! deserialization) that §III-D's "butterfly effect" worries about.
+
+use crate::engine::Stepper;
+use crate::graph::Graph;
+use crate::index::NodeIndex;
+use crate::problems::vertex_cover::{VcState, VertexCover};
+use anyhow::Result;
+
+/// How a VERTEX COVER task travels between cores.
+pub trait TaskEncoding {
+    /// Encoded bytes for the task at `index` (given the sender's state).
+    fn encode(&self, problem: &VertexCover, index: &NodeIndex) -> Result<Vec<u8>>;
+    /// Rebuild a runnable stepper from the encoding.
+    fn decode(&self, problem: &VertexCover, bytes: &[u8]) -> Result<Stepper<VertexCover>>;
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's scheme: the task IS its index; decode = CONVERTINDEX replay.
+pub struct IndexEncoding;
+
+impl TaskEncoding for IndexEncoding {
+    fn encode(&self, _problem: &VertexCover, index: &NodeIndex) -> Result<Vec<u8>> {
+        Ok(index.encode())
+    }
+
+    fn decode(&self, problem: &VertexCover, bytes: &[u8]) -> Result<Stepper<VertexCover>> {
+        let idx = NodeIndex::decode(bytes)
+            .ok_or_else(|| anyhow::anyhow!("corrupt index encoding"))?;
+        Stepper::from_index(problem, &idx)
+    }
+
+    fn name(&self) -> &'static str {
+        "index (paper §IV-A)"
+    }
+}
+
+/// Finkel–Manber style [18]: serialize the entire search-node — the active
+/// subgraph's edge list plus the partial cover.  Decode rebuilds the state
+/// directly (no replay) by searching from a fresh graph built from the
+/// serialized remnant; to stay comparable we re-enter via the index too,
+/// but the *wire* cost is the full state.
+pub struct FullStateEncoding;
+
+impl FullStateEncoding {
+    /// Serialize the state the index denotes: replay, then dump the active
+    /// edges and the cover (what [18] would put in its task buffer).
+    pub fn state_bytes(problem: &VertexCover, index: &NodeIndex) -> Result<Vec<u8>> {
+        let stepper = Stepper::from_index(problem, index)?;
+        let st: &VcState = stepper.state();
+        let h = st.graph_view();
+        let mut out = Vec::new();
+        // header: n, cover_len, edge count
+        out.extend_from_slice(&(h.num_vertices() as u32).to_le_bytes());
+        out.extend_from_slice(&(st.cover_size() as u32).to_le_bytes());
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for u in h.active_vertices() {
+            for v in h.neighbors(u) {
+                if u < v {
+                    edges.push((u, v));
+                }
+            }
+        }
+        out.extend_from_slice(&(edges.len() as u32).to_le_bytes());
+        for (u, v) in edges {
+            out.extend_from_slice(&u.to_le_bytes());
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        // the cover itself (solution reconstruction needs it)
+        for i in 0..st.cover_size() {
+            out.extend_from_slice(&(i as u32).to_le_bytes());
+        }
+        // the index rides along so decode can position the search
+        out.extend_from_slice(&index.encode());
+        Ok(out)
+    }
+}
+
+impl TaskEncoding for FullStateEncoding {
+    fn encode(&self, problem: &VertexCover, index: &NodeIndex) -> Result<Vec<u8>> {
+        Self::state_bytes(problem, index)
+    }
+
+    fn decode(&self, problem: &VertexCover, bytes: &[u8]) -> Result<Stepper<VertexCover>> {
+        // The trailing index positions the search (the edge/cover payload is
+        // what a buffered design would consume; we've paid its wire cost).
+        let n = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+        let cover_len = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+        let m = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
+        let idx_start = 12 + 8 * m + 4 * cover_len;
+        let _ = n;
+        let idx = NodeIndex::decode(&bytes[idx_start..])
+            .ok_or_else(|| anyhow::anyhow!("corrupt full-state encoding"))?;
+        Stepper::from_index(problem, &idx)
+    }
+
+    fn name(&self) -> &'static str {
+        "full-state (Finkel–Manber [18])"
+    }
+}
+
+/// Measure both encodings over the first `k` donatable tasks of a graph:
+/// returns (encoding name, mean bytes/task, mean decode µs/task).
+pub fn compare_encodings(g: &Graph, k: usize) -> Result<Vec<(String, f64, f64)>> {
+    let problem = VertexCover::new(g);
+    // Collect k real donated indices by running a donor.
+    let mut donor = Stepper::at_root(&problem);
+    let mut indices = Vec::new();
+    let mut best = crate::COST_INF;
+    while indices.len() < k {
+        match donor.step(best) {
+            crate::engine::StepResult::Progress { improved } => {
+                if let Some((c, _)) = improved {
+                    best = c;
+                }
+            }
+            crate::engine::StepResult::Exhausted => break,
+        }
+        if let Some(idx) = donor.donate() {
+            indices.push(idx);
+        }
+    }
+    let encs: Vec<Box<dyn TaskEncoding>> = vec![Box::new(IndexEncoding), Box::new(FullStateEncoding)];
+    let mut out = Vec::new();
+    for enc in &encs {
+        let mut bytes_total = 0usize;
+        let mut decode_secs = 0.0;
+        for idx in &indices {
+            let b = enc.encode(&problem, idx)?;
+            bytes_total += b.len();
+            let t = std::time::Instant::now();
+            let _stepper = enc.decode(&problem, &b)?;
+            decode_secs += t.elapsed().as_secs_f64();
+        }
+        let n = indices.len().max(1) as f64;
+        out.push((enc.name().to_string(), bytes_total as f64 / n, decode_secs / n * 1e6));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instances::generators;
+
+    #[test]
+    fn index_encoding_roundtrip() {
+        let g = generators::gnm(20, 60, 1);
+        let p = VertexCover::new(&g);
+        let idx = NodeIndex(vec![0, 1, 0]);
+        let enc = IndexEncoding;
+        let bytes = enc.encode(&p, &idx).unwrap();
+        let stepper = enc.decode(&p, &bytes).unwrap();
+        assert_eq!(stepper.current_node(), idx);
+    }
+
+    #[test]
+    fn index_is_much_smaller_than_full_state() {
+        let g = generators::gnm(30, 150, 2);
+        let p = VertexCover::new(&g);
+        let idx = NodeIndex(vec![0, 1]);
+        let a = IndexEncoding.encode(&p, &idx).unwrap();
+        let b = FullStateEncoding.encode(&p, &idx).unwrap();
+        assert!(b.len() > 10 * a.len(), "full={} index={}", b.len(), a.len());
+    }
+
+    #[test]
+    fn compare_reports_both() {
+        let g = generators::gnm(24, 90, 3);
+        let rows = compare_encodings(&g, 10).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].1 < rows[1].1, "index bytes < full-state bytes");
+    }
+
+    #[test]
+    fn full_state_decode_positions_search() {
+        // Use a real donated index (guaranteed to exist in the tree).
+        let g = generators::gnm(16, 40, 4);
+        let p = VertexCover::new(&g);
+        let mut donor = Stepper::at_root(&p);
+        for _ in 0..6 {
+            donor.step(crate::COST_INF);
+        }
+        let idx = donor.donate().expect("donatable after a few steps");
+        let bytes = FullStateEncoding.encode(&p, &idx).unwrap();
+        let stepper = FullStateEncoding.decode(&p, &bytes).unwrap();
+        assert_eq!(stepper.current_node(), idx);
+    }
+}

@@ -1,0 +1,498 @@
+//! The generic backtracking engine (paper §II, §IV).
+//!
+//! A problem plugs in via [`Problem`] + [`SearchState`]; the engine supplies
+//! everything else: DFS order, index bookkeeping, donation of the heaviest
+//! unexplored node, and `CONVERTINDEX` replay.  The DFS is implemented as an
+//! explicit-stack state machine ([`Stepper`]) that advances **one node visit
+//! per [`Stepper::step`] call** — the same code path is driven at native
+//! speed by the thread runner and under virtual time by the discrete-event
+//! simulator, so scaling results never come from simulator-only logic.
+//!
+//! ## Determinism contract (§II)
+//!
+//! For a fixed input, `evaluate` must return the same child count on every
+//! visit of the same node, and `apply(k)` must produce the same child — the
+//! search tree of every execution is identical.  This is what makes an
+//! index a complete task encoding.
+
+pub mod serial;
+
+use crate::index::{CurrentIndex, NodeIndex};
+use crate::Cost;
+use anyhow::{bail, Result};
+
+/// What the problem reports about the node the state currently sits at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeEval {
+    /// Number of children (0 = leaf). Must be identical across visits.
+    pub children: u32,
+    /// `Some(cost)` iff this node is a complete solution of that cost
+    /// (the paper's `IsSolution`, minus the `best_so_far` comparison,
+    /// which the engine owns).
+    pub solution: Option<Cost>,
+    /// Lower bound on the cost of any solution in this subtree; the engine
+    /// prunes when `bound >= best`. Use 0 for "no bound".
+    pub bound: Cost,
+}
+
+/// Mutable search state with implicit backtracking.
+///
+/// Call discipline (enforced by [`Stepper`]):
+/// 1. `evaluate()` is called exactly once per arrival at a node, immediately
+///    after construction (root) or after `apply`; it may mutate the state
+///    (apply reduction rules) as long as `undo` reverts it.
+/// 2. `apply(k)` descends to child `k` (`k < children` of the last
+///    evaluate). Siblings may be applied in sequence at the same level:
+///    `apply(0) … undo() … apply(1)`.
+/// 3. `undo()` reverts one `apply` *and* the evaluation mutations of the
+///    node it descended into.
+pub trait SearchState {
+    /// Solution payload (e.g. the cover vertex list).
+    type Sol: Clone + Send + 'static;
+
+    /// Evaluate the current node (may apply reduction rules).
+    fn evaluate(&mut self) -> NodeEval;
+
+    /// Descend into child `k` of the current node.
+    fn apply(&mut self, k: u32);
+
+    /// Revert the most recent `apply` (and its evaluation side effects).
+    fn undo(&mut self);
+
+    /// Extract the solution at the current node. Only called when the last
+    /// `evaluate` returned `solution: Some(_)`.
+    fn solution(&self) -> Self::Sol;
+}
+
+/// A problem definition: a factory of fresh root states.
+pub trait Problem: Sync {
+    type State: SearchState;
+
+    /// A fresh state positioned at the search-tree root (not yet evaluated).
+    fn make_state(&self) -> Self::State;
+
+    /// Instance name for reporting.
+    fn name(&self) -> String;
+}
+
+/// Per-stepper search statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Search-nodes visited (evaluations consumed).
+    pub nodes: u64,
+    /// Solution nodes encountered (improving or not) — N-QUEENS counting.
+    pub solutions: u64,
+    /// Subtrees cut by the bound.
+    pub pruned: u64,
+    /// Maximum global depth reached.
+    pub max_depth: usize,
+}
+
+impl SearchStats {
+    pub fn merge(&mut self, o: &SearchStats) {
+        self.nodes += o.nodes;
+        self.solutions += o.solutions;
+        self.pruned += o.pruned;
+        self.max_depth = self.max_depth.max(o.max_depth);
+    }
+}
+
+/// Outcome of one [`Stepper::step`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepResult<S> {
+    /// One node visited; `improved` carries a new incumbent found here.
+    Progress { improved: Option<(Cost, S)> },
+    /// The assigned subtree is exhausted.
+    Exhausted,
+}
+
+/// Explicit-stack DFS over the subtree rooted at a [`NodeIndex`], with the
+/// paper's index bookkeeping and heaviest-task donation.
+pub struct Stepper<P: Problem> {
+    state: P::State,
+    ci: CurrentIndex,
+    /// Evaluation of the node the state currently sits at (None once done).
+    pending: Option<NodeEval>,
+    done: bool,
+    pub stats: SearchStats,
+}
+
+impl<P: Problem> Stepper<P> {
+    /// Start at the global root (`C_0`'s main task `N_{0,0}`).
+    pub fn at_root(problem: &P) -> Self {
+        Self::from_index(problem, &NodeIndex::root()).expect("root replay cannot fail")
+    }
+
+    /// The paper's `CONVERTINDEX`: replay the index digits from the root.
+    /// Fails if the index does not address a node of this search tree.
+    pub fn from_index(problem: &P, index: &NodeIndex) -> Result<Self> {
+        let mut state = problem.make_state();
+        let mut ev = state.evaluate();
+        for (depth, &digit) in index.0.iter().enumerate() {
+            if digit >= ev.children {
+                bail!(
+                    "corrupt index at depth {depth}: digit {digit} but node has {} children",
+                    ev.children
+                );
+            }
+            state.apply(digit);
+            ev = state.evaluate();
+        }
+        Ok(Stepper {
+            state,
+            ci: CurrentIndex::new(index.clone()),
+            pending: Some(ev),
+            done: false,
+            stats: SearchStats::default(),
+        })
+    }
+
+    /// Has the assigned subtree been fully explored?
+    pub fn is_exhausted(&self) -> bool {
+        self.done
+    }
+
+    /// Global index of the node currently being explored.
+    pub fn current_node(&self) -> NodeIndex {
+        self.ci.current_node()
+    }
+
+    /// Donate the heaviest unexplored node of this subtree (paper Fig. 4 /
+    /// §IV-C). Returns its global index, which the receiver replays.
+    pub fn donate(&mut self) -> Option<NodeIndex> {
+        if self.done {
+            return None;
+        }
+        self.ci.donate_heaviest()
+    }
+
+    /// Number of currently donatable nodes.
+    pub fn donatable(&self) -> u64 {
+        if self.done {
+            0
+        } else {
+            self.ci.donatable()
+        }
+    }
+
+    /// Access to the underlying state (frontier export for the XLA
+    /// evaluator, solution extraction in tests).
+    pub fn state(&self) -> &P::State {
+        &self.state
+    }
+
+    /// Serialize the index bookkeeping (checkpointing / join-leave, §VII).
+    /// A replacement core restores with [`Stepper::from_checkpoint`].
+    pub fn checkpoint_bytes(&self) -> Vec<u8> {
+        self.ci.to_checkpoint()
+    }
+
+    /// Resume a checkpointed subtree: the current node is replayed via
+    /// `CONVERTINDEX` and the unexplored-sibling counts are restored, so
+    /// exploration continues exactly where the leaver stopped.
+    pub fn from_checkpoint(problem: &P, bytes: &[u8]) -> Result<Self> {
+        let Some(ci) = CurrentIndex::from_checkpoint(bytes) else {
+            bail!("corrupt checkpoint");
+        };
+        let node = ci.current_node();
+        let mut stepper = Self::from_index(problem, &node)?;
+        stepper.ci = ci;
+        Ok(stepper)
+    }
+
+    /// Visit one node: record solutions, prune against `best`, descend to
+    /// the first child or backtrack to the next unexplored sibling.
+    pub fn step(&mut self, best: Cost) -> StepResult<<P::State as SearchState>::Sol> {
+        if self.done {
+            return StepResult::Exhausted;
+        }
+        let ev = self.pending.take().expect("pending eval when not done");
+        self.stats.nodes += 1;
+        self.stats.max_depth = self.stats.max_depth.max(self.ci.root_depth() + self.ci.local_depth());
+
+        // IsSolution (paper line 2-3): engine owns the best_so_far compare.
+        let mut improved = None;
+        let mut best_now = best;
+        if let Some(cost) = ev.solution {
+            self.stats.solutions += 1;
+            if cost < best_now {
+                best_now = cost;
+                improved = Some((cost, self.state.solution()));
+            }
+        }
+
+        // Descend or backtrack.
+        let prune = ev.bound != 0 && ev.bound >= best_now;
+        if prune {
+            self.stats.pruned += 1;
+        }
+        if ev.children > 0 && !prune {
+            self.ci.push(0, ev.children);
+            self.state.apply(0);
+            self.pending = Some(self.state.evaluate());
+        } else {
+            self.backtrack();
+        }
+        StepResult::Progress { improved }
+    }
+
+    /// Apply backtracking (paper line 5: undo operations) until the DFS
+    /// finds the next unexplored sibling or exhausts the subtree.
+    fn backtrack(&mut self) {
+        loop {
+            if self.ci.local_depth() == 0 {
+                self.done = true;
+                self.pending = None;
+                return;
+            }
+            match self.ci.pop_and_advance() {
+                Some(next_digit) => {
+                    self.state.undo(); // leave previous sibling
+                    self.state.apply(next_digit);
+                    self.pending = Some(self.state.evaluate());
+                    return;
+                }
+                None => {
+                    self.state.undo(); // leave this level entirely
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod toy {
+    //! A tiny deterministic toy problem for engine tests: the complete
+    //! binary tree of height `h`; leaves at depth `h` are solutions with
+    //! cost = number of 1-digits on the path (so the unique best is the
+    //! all-0 path with cost 0... offset by +1 to avoid the bound-0 sentinel).
+
+    use super::*;
+
+    pub struct ToyTree {
+        pub height: usize,
+    }
+
+    pub struct ToyState {
+        pub path: Vec<u32>,
+        pub height: usize,
+    }
+
+    impl SearchState for ToyState {
+        type Sol = Vec<u32>;
+
+        fn evaluate(&mut self) -> NodeEval {
+            if self.path.len() == self.height {
+                let cost = 1 + self.path.iter().map(|&d| d as u64).sum::<u64>();
+                NodeEval { children: 0, solution: Some(cost), bound: 0 }
+            } else {
+                NodeEval { children: 2, solution: None, bound: 0 }
+            }
+        }
+
+        fn apply(&mut self, k: u32) {
+            self.path.push(k);
+        }
+
+        fn undo(&mut self) {
+            self.path.pop();
+        }
+
+        fn solution(&self) -> Vec<u32> {
+            self.path.clone()
+        }
+    }
+
+    impl Problem for ToyTree {
+        type State = ToyState;
+
+        fn make_state(&self) -> ToyState {
+            ToyState { path: Vec::new(), height: self.height }
+        }
+
+        fn name(&self) -> String {
+            format!("toy-binary-h{}", self.height)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::toy::ToyTree;
+    use super::*;
+    use crate::COST_INF;
+
+    fn run_to_exhaustion(stepper: &mut Stepper<ToyTree>) -> (Cost, u64) {
+        let mut best = COST_INF;
+        loop {
+            match stepper.step(best) {
+                StepResult::Progress { improved } => {
+                    if let Some((c, _)) = improved {
+                        best = c;
+                    }
+                }
+                StepResult::Exhausted => return (best, stepper.stats.nodes),
+            }
+        }
+    }
+
+    #[test]
+    fn full_tree_visit_count() {
+        // Complete binary tree height 4: 2^5 - 1 = 31 nodes, 16 leaves.
+        let p = ToyTree { height: 4 };
+        let mut s = Stepper::at_root(&p);
+        let (best, nodes) = run_to_exhaustion(&mut s);
+        assert_eq!(best, 1); // all-zero path
+        assert_eq!(nodes, 31);
+        assert_eq!(s.stats.solutions, 16);
+        assert!(s.is_exhausted());
+        assert_eq!(s.step(COST_INF), StepResult::Exhausted);
+    }
+
+    #[test]
+    fn from_index_explores_only_subtree() {
+        let p = ToyTree { height: 4 };
+        // Subtree at path [1]: 15 nodes, 8 leaves, best cost 1 + 1 = 2.
+        let mut s = Stepper::from_index(&p, &NodeIndex(vec![1])).unwrap();
+        let (best, nodes) = run_to_exhaustion(&mut s);
+        assert_eq!(nodes, 15);
+        assert_eq!(best, 2);
+        assert_eq!(s.stats.solutions, 8);
+    }
+
+    #[test]
+    fn corrupt_index_rejected() {
+        let p = ToyTree { height: 2 };
+        assert!(Stepper::from_index(&p, &NodeIndex(vec![2])).is_err());
+        assert!(Stepper::from_index(&p, &NodeIndex(vec![0, 0, 0])).is_err()); // leaf has no children
+    }
+
+    #[test]
+    fn donation_partitions_the_tree() {
+        // Donate every possible task from the root worker; run donor and all
+        // donated subtrees to exhaustion; total node visits must equal the
+        // serial count and every leaf must be seen exactly once.
+        let p = ToyTree { height: 5 };
+        let mut donor = Stepper::at_root(&p);
+        let mut best = COST_INF;
+        let mut total_nodes = 0u64;
+        let mut total_solutions = 0u64;
+        let mut donated: Vec<NodeIndex> = Vec::new();
+
+        // Interleave: every 3 steps, donate once if possible.
+        loop {
+            for _ in 0..3 {
+                if let StepResult::Progress { improved } = donor.step(best) {
+                    if let Some((c, _)) = improved {
+                        best = c;
+                    }
+                } else {
+                    break;
+                }
+            }
+            if donor.is_exhausted() {
+                break;
+            }
+            if let Some(idx) = donor.donate() {
+                donated.push(idx);
+            }
+        }
+        total_nodes += donor.stats.nodes;
+        total_solutions += donor.stats.solutions;
+
+        // Recursively run donated subtrees (they may donate too — here we
+        // just run them straight).
+        for idx in donated {
+            let mut w = Stepper::from_index(&p, &idx).unwrap();
+            let (b, n) = run_to_exhaustion(&mut w);
+            best = best.min(b);
+            total_nodes += n;
+            total_solutions += w.stats.solutions;
+        }
+
+        assert_eq!(total_solutions, 32); // every leaf exactly once
+        assert_eq!(total_nodes, 63); // every node exactly once
+        assert_eq!(best, 1);
+    }
+
+    #[test]
+    fn pruning_cuts_subtrees() {
+        // With bound = path-ones + 1, once best = 1 everything with a 1 can
+        // be cut. ToyTree has bound 0 (no bound); wrap it to add one.
+        struct Bounded(ToyTree);
+        struct BState(super::toy::ToyState);
+        impl SearchState for BState {
+            type Sol = Vec<u32>;
+            fn evaluate(&mut self) -> NodeEval {
+                let mut ev = self.0.evaluate();
+                ev.bound = 1 + self.0.path.iter().map(|&d| d as u64).sum::<u64>();
+                ev
+            }
+            fn apply(&mut self, k: u32) {
+                self.0.apply(k)
+            }
+            fn undo(&mut self) {
+                self.0.undo()
+            }
+            fn solution(&self) -> Vec<u32> {
+                self.0.solution()
+            }
+        }
+        impl Problem for Bounded {
+            type State = BState;
+            fn make_state(&self) -> BState {
+                BState(self.0.make_state())
+            }
+            fn name(&self) -> String {
+                "bounded-toy".into()
+            }
+        }
+        let p = Bounded(ToyTree { height: 6 });
+        let mut s = Stepper::at_root(&p);
+        let mut best = COST_INF;
+        loop {
+            match s.step(best) {
+                StepResult::Progress { improved } => {
+                    if let Some((c, _)) = improved {
+                        best = c;
+                    }
+                }
+                StepResult::Exhausted => break,
+            }
+        }
+        assert_eq!(best, 1);
+        // Far fewer than the full 127 nodes: the all-left path (7 nodes)
+        // plus bound-cut frontier.
+        assert!(s.stats.nodes < 30, "nodes = {}", s.stats.nodes);
+        assert!(s.stats.pruned > 0);
+    }
+
+    #[test]
+    fn determinism_same_tree_twice() {
+        let p = ToyTree { height: 6 };
+        let mut a = Stepper::at_root(&p);
+        let mut b = Stepper::at_root(&p);
+        let ra = run_to_exhaustion(&mut a);
+        let rb = run_to_exhaustion(&mut b);
+        assert_eq!(ra, rb);
+        assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn donate_when_fresh_returns_none() {
+        let p = ToyTree { height: 3 };
+        let mut s = Stepper::at_root(&p);
+        assert_eq!(s.donate(), None); // nothing pushed yet
+        s.step(COST_INF);
+        assert!(s.donate().is_some()); // after first descent
+    }
+
+    #[test]
+    fn current_node_is_global() {
+        let p = ToyTree { height: 4 };
+        let mut s = Stepper::from_index(&p, &NodeIndex(vec![1, 0])).unwrap();
+        assert_eq!(s.current_node(), NodeIndex(vec![1, 0]));
+        s.step(COST_INF);
+        assert_eq!(s.current_node(), NodeIndex(vec![1, 0, 0]));
+    }
+}

@@ -1,0 +1,75 @@
+//! SERIAL-RB (paper Fig. 1): the single-core driver, used as the speedup
+//! baseline (`T_1`) and by correctness tests.
+
+use super::{Problem, SearchState, SearchStats, StepResult, Stepper};
+use crate::util::Stopwatch;
+use crate::{Cost, COST_INF};
+
+/// Result of a serial run.
+#[derive(Debug, Clone)]
+pub struct SerialReport<S> {
+    /// Best solution cost found (None if the tree holds no solution).
+    pub best_cost: Option<Cost>,
+    /// The best solution payload.
+    pub best_solution: Option<S>,
+    pub stats: SearchStats,
+    pub wall_secs: f64,
+    /// True if the node budget expired before exhaustion.
+    pub budget_exhausted: bool,
+}
+
+/// Run SERIAL-RB to completion (or until `node_budget` visits).
+pub fn solve_serial<P: Problem>(
+    problem: &P,
+    node_budget: u64,
+) -> SerialReport<<P::State as SearchState>::Sol> {
+    let sw = Stopwatch::new();
+    let mut stepper = Stepper::at_root(problem);
+    let mut best = COST_INF;
+    let mut best_solution = None;
+    let mut budget_exhausted = false;
+    loop {
+        match stepper.step(best) {
+            StepResult::Progress { improved } => {
+                if let Some((cost, sol)) = improved {
+                    best = cost;
+                    best_solution = Some(sol);
+                }
+            }
+            StepResult::Exhausted => break,
+        }
+        if stepper.stats.nodes >= node_budget {
+            budget_exhausted = true;
+            break;
+        }
+    }
+    SerialReport {
+        best_cost: (best != COST_INF).then_some(best),
+        best_solution,
+        stats: stepper.stats,
+        wall_secs: sw.elapsed_secs(),
+        budget_exhausted,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::toy::ToyTree;
+
+    #[test]
+    fn serial_solves_toy() {
+        let r = solve_serial(&ToyTree { height: 5 }, u64::MAX);
+        assert_eq!(r.best_cost, Some(1));
+        assert_eq!(r.stats.nodes, 63);
+        assert!(!r.budget_exhausted);
+        assert_eq!(r.best_solution, Some(vec![0, 0, 0, 0, 0]));
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let r = solve_serial(&ToyTree { height: 10 }, 100);
+        assert!(r.budget_exhausted);
+        assert_eq!(r.stats.nodes, 100);
+    }
+}

@@ -1,0 +1,195 @@
+//! Immutable input graph in CSR form.
+//!
+//! This is the parse/generate-time representation; the search mutates a
+//! [`super::HybridGraph`] built from it.
+
+use anyhow::{bail, Result};
+
+/// Undirected simple graph, vertices `0..n`, CSR adjacency.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Name for reporting (instance id).
+    pub name: String,
+    offsets: Vec<usize>,
+    neighbors: Vec<u32>,
+    num_edges: usize,
+}
+
+impl Graph {
+    /// Build from an edge list; duplicate edges and self-loops are rejected.
+    pub fn from_edges(name: impl Into<String>, n: usize, edges: &[(u32, u32)]) -> Result<Self> {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut seen = std::collections::HashSet::with_capacity(edges.len());
+        for &(u, v) in edges {
+            if u as usize >= n || v as usize >= n {
+                bail!("edge ({u},{v}) out of range for n={n}");
+            }
+            if u == v {
+                bail!("self-loop at {u}");
+            }
+            let key = (u.min(v), u.max(v));
+            if !seen.insert(key) {
+                bail!("duplicate edge ({u},{v})");
+            }
+            adj[u as usize].push(v);
+            adj[v as usize].push(u);
+        }
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut neighbors = Vec::with_capacity(2 * edges.len());
+        offsets.push(0);
+        for l in &adj {
+            neighbors.extend_from_slice(l);
+            offsets.push(neighbors.len());
+        }
+        Ok(Graph { name: name.into(), offsets, neighbors, num_edges: edges.len() })
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    /// Sorted neighbours of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.neighbors[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// O(log deg) adjacency test on the CSR form.
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// All edges as (u, v) with u < v, in sorted order.
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.num_edges);
+        for u in 0..self.num_vertices() as u32 {
+            for &v in self.neighbors(u) {
+                if u < v {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Complement graph (used to solve MAX CLIQUE as VC on the complement).
+    pub fn complement(&self, name: impl Into<String>) -> Graph {
+        let n = self.num_vertices();
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for v in (u + 1)..n as u32 {
+                if !self.has_edge(u, v) {
+                    edges.push((u, v));
+                }
+            }
+        }
+        Graph::from_edges(name, n, &edges).expect("complement of a simple graph is simple")
+    }
+
+    /// Check that a vertex set covers every edge (VC verifier).
+    pub fn is_vertex_cover(&self, cover: &[u32]) -> bool {
+        let inset: std::collections::HashSet<u32> = cover.iter().copied().collect();
+        for u in 0..self.num_vertices() as u32 {
+            for &v in self.neighbors(u) {
+                if u < v && !inset.contains(&u) && !inset.contains(&v) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Check that a vertex set dominates every vertex (DS verifier).
+    pub fn is_dominating_set(&self, ds: &[u32]) -> bool {
+        let inset: std::collections::HashSet<u32> = ds.iter().copied().collect();
+        for v in 0..self.num_vertices() as u32 {
+            if inset.contains(&v) {
+                continue;
+            }
+            if !self.neighbors(v).iter().any(|u| inset.contains(u)) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        Graph::from_edges("tri", 3, &[(0, 1), (1, 2), (0, 2)]).unwrap()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = triangle();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.degree(1), 2);
+        assert!(g.has_edge(0, 2) && g.has_edge(2, 0));
+    }
+
+    #[test]
+    fn rejects_bad_edges() {
+        assert!(Graph::from_edges("x", 2, &[(0, 0)]).is_err());
+        assert!(Graph::from_edges("x", 2, &[(0, 3)]).is_err());
+        assert!(Graph::from_edges("x", 3, &[(0, 1), (1, 0)]).is_err());
+    }
+
+    #[test]
+    fn edges_listing() {
+        let g = triangle();
+        assert_eq!(g.edges(), vec![(0, 1), (0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn complement_of_triangle_is_empty() {
+        let g = triangle().complement("co-tri");
+        assert_eq!(g.num_edges(), 0);
+        let p3 = Graph::from_edges("p3", 3, &[(0, 1), (1, 2)]).unwrap();
+        let c = p3.complement("co-p3");
+        assert_eq!(c.edges(), vec![(0, 2)]);
+    }
+
+    #[test]
+    fn vc_verifier() {
+        let g = triangle();
+        assert!(g.is_vertex_cover(&[0, 1]));
+        assert!(!g.is_vertex_cover(&[0]));
+        assert!(g.is_vertex_cover(&[0, 1, 2]));
+    }
+
+    #[test]
+    fn ds_verifier() {
+        // star: center 0 dominates everything
+        let g = Graph::from_edges("star", 5, &[(0, 1), (0, 2), (0, 3), (0, 4)]).unwrap();
+        assert!(g.is_dominating_set(&[0]));
+        assert!(!g.is_dominating_set(&[1]));
+        assert!(g.is_dominating_set(&[1, 0]));
+    }
+
+    #[test]
+    fn isolated_vertices_allowed() {
+        let g = Graph::from_edges("iso", 4, &[(0, 1)]).unwrap();
+        assert_eq!(g.degree(2), 0);
+        assert!(!g.is_dominating_set(&[0])); // 2,3 undominated
+        assert!(g.is_dominating_set(&[0, 2, 3]));
+    }
+}

@@ -1,0 +1,14 @@
+//! Graph substrates.
+//!
+//! * [`Graph`] — immutable CSR-style input graph (parse/generate once).
+//! * [`hybrid::HybridGraph`] — the mutable search-time structure from the
+//!   authors' earlier work (ref [17], "A hybrid graph representation for
+//!   recursive backtracking algorithms"): adjacency-matrix bitset rows for
+//!   O(1) adjacency tests + adjacency lists for O(deg) iteration + an undo
+//!   ledger for O(1)-amortised implicit backtracking.
+
+pub mod csr;
+pub mod hybrid;
+
+pub use csr::Graph;
+pub use hybrid::HybridGraph;

@@ -1,0 +1,123 @@
+//! Line-for-line port of the paper's Figure 4 for binary trees, kept as the
+//! executable specification of `GETHEAVIESTTASKINDEX` / `FIXINDEX`.
+//!
+//! `current_idx` entries: the digit taken at each depth (`0` left, `1`
+//! right, `-1` = right sibling delegated to another core).  Index arrays
+//! here include the paper's leading root digit `1`.
+//!
+//! The engine itself uses the generalized two-row form
+//! ([`super::CurrentIndex`]); property tests pin the two against each other
+//! on binary trees (rust/tests/proptests.rs).
+
+/// Figure 4, `GETHEAVIESTTASKINDEX`: scan `current_idx` shallow-to-deep for
+/// the first `0` (a left branch whose right sibling is unexplored), mark it
+/// `-1` (delegated) and return the prefix up to and including that depth.
+/// Returns `None` when nothing is donatable (the paper's `null`).
+pub fn get_heaviest_task_index(current_idx: &mut [i32]) -> Option<Vec<i32>> {
+    for i in 0..current_idx.len() {
+        if current_idx[i] == 0 {
+            current_idx[i] = -1;
+            return Some(current_idx[0..=i].to_vec());
+        }
+    }
+    None
+}
+
+/// Figure 4, `FIXINDEX`: on the receiving core, earlier `-1` markers in the
+/// prefix are the donor's *own* path digits (which were `0` when donated),
+/// and the final digit flips to `1` — the donated right sibling.
+pub fn fix_index(temp_idx: &mut Vec<i32>) -> &Vec<i32> {
+    let len = temp_idx.len();
+    for i in 0..len.saturating_sub(1) {
+        if temp_idx[i] < 0 {
+            temp_idx[i] = 0;
+        }
+    }
+    if let Some(last) = temp_idx.last_mut() {
+        *last = 1;
+    }
+    temp_idx
+}
+
+/// Convert a fixed binary index (with leading root digit `1`) into path
+/// digits for [`crate::index::NodeIndex`].
+pub fn to_node_index(fixed: &[i32]) -> crate::index::NodeIndex {
+    debug_assert_eq!(fixed.first(), Some(&1), "paper indices start with the root digit 1");
+    crate::index::NodeIndex(fixed[1..].iter().map(|&d| d as u32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_walkthrough_first_donation() {
+        // §IV-A: C_i explores N_{3,2}, current_idx = {1, 0, 1, 0}.
+        let mut current = vec![1, 0, 1, 0];
+        let temp = get_heaviest_task_index(&mut current).unwrap();
+        assert_eq!(temp, vec![1, -1]);
+        assert_eq!(current, vec![1, -1, 1, 0]);
+        let mut temp = temp;
+        fix_index(&mut temp);
+        assert_eq!(temp, vec![1, 1]); // N_{1,1}, the heaviest task
+    }
+
+    #[test]
+    fn paper_walkthrough_second_donation() {
+        // Continuing: second request while still at N_{3,2}.
+        let mut current = vec![1, -1, 1, 0];
+        let temp = get_heaviest_task_index(&mut current).unwrap();
+        assert_eq!(current, vec![1, -1, 1, -1]);
+        let mut temp = temp;
+        fix_index(&mut temp);
+        assert_eq!(temp, vec![1, 0, 1, 1]); // the paper's stated result
+    }
+
+    #[test]
+    fn nothing_donatable_returns_null() {
+        let mut current = vec![1, 1, -1, 1];
+        assert_eq!(get_heaviest_task_index(&mut current), None);
+        assert_eq!(current, vec![1, 1, -1, 1]); // untouched
+    }
+
+    #[test]
+    fn root_digit_never_donated() {
+        let mut current = vec![1];
+        assert_eq!(get_heaviest_task_index(&mut current), None);
+    }
+
+    #[test]
+    fn fix_index_flips_only_last_and_negatives() {
+        let mut t = vec![1, -1, 0, -1];
+        fix_index(&mut t);
+        assert_eq!(t, vec![1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn to_node_index_strips_root() {
+        let idx = to_node_index(&[1, 0, 1, 1]);
+        assert_eq!(idx, crate::index::NodeIndex(vec![0, 1, 1]));
+    }
+
+    #[test]
+    fn matches_generalized_form_on_example() {
+        // Same scenario driven through CurrentIndex must donate the same node.
+        use crate::index::{CurrentIndex, NodeIndex};
+        let mut ci = CurrentIndex::new(NodeIndex::root());
+        ci.push(0, 2);
+        ci.push(1, 2);
+        ci.push(0, 2);
+
+        let mut current = vec![1, 0, 1, 0];
+        let mut t = get_heaviest_task_index(&mut current).unwrap();
+        fix_index(&mut t);
+        assert_eq!(to_node_index(&t), ci.donate_heaviest().unwrap());
+
+        let mut t2 = get_heaviest_task_index(&mut current).unwrap();
+        fix_index(&mut t2);
+        assert_eq!(to_node_index(&t2), ci.donate_heaviest().unwrap());
+
+        assert_eq!(get_heaviest_task_index(&mut current), None);
+        assert_eq!(ci.donate_heaviest(), None);
+    }
+}

@@ -1,0 +1,359 @@
+//! Indexed search trees (paper §IV-A, §IV-C).
+//!
+//! Every search-node is addressed by the digit string of its root-to-node
+//! path; a task *is* its index (`E(N) = idx(N)`, O(d) bytes).  This module
+//! provides:
+//!
+//! * [`NodeIndex`] — the index itself (digit string; root = empty).
+//! * [`binary`] — a line-for-line port of the paper's Figure 4
+//!   `GETHEAVIESTTASKINDEX` / `FIXINDEX` over the `current_idx` array for
+//!   binary trees, kept as the executable specification.
+//! * [`CurrentIndex`] — the generalized two-row (`idx1`/`idx2`, Fig. 8)
+//!   bookkeeping for arbitrary branching factors used by the engine: row 0
+//!   holds the digit taken at each depth, row 1 the count of *unexplored*
+//!   right-siblings at that depth.  Donating the heaviest task = find the
+//!   shallowest depth with a positive sibling count, hand out the **last**
+//!   sibling there (§IV-C requires donated sets to be suffixes of the
+//!   sibling order), and decrement.
+
+pub mod binary;
+
+/// A search-node index: child digits along the root-to-node path.
+/// The paper writes the root as index "1"; we store only the path digits
+/// (root = empty vector), which is the same encoding minus the constant.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct NodeIndex(pub Vec<u32>);
+
+impl NodeIndex {
+    pub fn root() -> Self {
+        NodeIndex(Vec::new())
+    }
+
+    pub fn depth(&self) -> usize {
+        self.0.len()
+    }
+
+    /// The paper's task weight `w(N) = 1/(d+1)` — heavier = shallower.
+    pub fn weight(&self) -> f64 {
+        1.0 / (self.depth() as f64 + 1.0)
+    }
+
+    pub fn child(&self, k: u32) -> NodeIndex {
+        let mut d = self.0.clone();
+        d.push(k);
+        NodeIndex(d)
+    }
+
+    /// Is `self` an ancestor of (or equal to) `other`?
+    pub fn is_prefix_of(&self, other: &NodeIndex) -> bool {
+        other.0.len() >= self.0.len() && other.0[..self.0.len()] == self.0[..]
+    }
+
+    /// Wire encoding: one u32 digit per depth (O(d) bytes, §IV-A).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + 4 * self.0.len());
+        out.extend_from_slice(&(self.0.len() as u32).to_le_bytes());
+        for &d in &self.0 {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out
+    }
+
+    /// Inverse of [`encode`](Self::encode).
+    pub fn decode(bytes: &[u8]) -> Option<NodeIndex> {
+        if bytes.len() < 4 {
+            return None;
+        }
+        let len = u32::from_le_bytes(bytes[0..4].try_into().ok()?) as usize;
+        if bytes.len() != 4 + 4 * len {
+            return None;
+        }
+        let digits = (0..len)
+            .map(|i| u32::from_le_bytes(bytes[4 + 4 * i..8 + 4 * i].try_into().unwrap()))
+            .collect();
+        Some(NodeIndex(digits))
+    }
+}
+
+impl std::fmt::Display for NodeIndex {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "1")?; // the paper's root digit
+        for d in &self.0 {
+            write!(f, "{d}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Generalized `current_idx` (Fig. 8): per-depth (digit, unexplored-sibling
+/// count) pairs for the worker's *own* subtree, rooted at a donated index.
+#[derive(Debug, Clone, Default)]
+pub struct CurrentIndex {
+    /// Path digits of the subtree root (owned entirely by this worker).
+    root: Vec<u32>,
+    /// Row 0: digit taken at each depth below the root.
+    digits: Vec<u32>,
+    /// Row 1: unexplored right-siblings remaining at that depth.
+    remaining: Vec<u32>,
+}
+
+impl CurrentIndex {
+    /// Start a fresh bookkeeping for the subtree rooted at `root`.
+    pub fn new(root: NodeIndex) -> Self {
+        CurrentIndex { root: root.0, digits: Vec::new(), remaining: Vec::new() }
+    }
+
+    /// Depth of the subtree root in the global tree.
+    pub fn root_depth(&self) -> usize {
+        self.root.len()
+    }
+
+    /// Current DFS depth below the subtree root.
+    pub fn local_depth(&self) -> usize {
+        self.digits.len()
+    }
+
+    /// Record a descent: at the current node we take child `digit` out of
+    /// `num_children` total (the paper's `current_idx[d] ← p` plus the
+    /// sibling count for row 1).
+    pub fn push(&mut self, digit: u32, num_children: u32) {
+        debug_assert!(digit < num_children);
+        self.digits.push(digit);
+        self.remaining.push(num_children - digit - 1);
+    }
+
+    /// Backtrack to the parent. Returns the next unexplored sibling digit at
+    /// that level, if any (and consumes it): the DFS advance rule.
+    pub fn pop_and_advance(&mut self) -> Option<u32> {
+        let digit = self.digits.pop()?;
+        let rem = self.remaining.pop()?;
+        if rem > 0 {
+            // advance to the next sibling in order
+            self.digits.push(digit + 1);
+            self.remaining.push(rem - 1);
+            Some(digit + 1)
+        } else {
+            None
+        }
+    }
+
+    /// The paper's `GETHEAVIESTTASKINDEX` generalized (§IV-C): find the
+    /// shallowest depth with unexplored siblings, donate the **last** one
+    /// (position `digit + remaining`), mark it delegated by decrementing.
+    /// Returns the donated node's *global* index.
+    pub fn donate_heaviest(&mut self) -> Option<NodeIndex> {
+        for i in 0..self.digits.len() {
+            if self.remaining[i] > 0 {
+                let donated_digit = self.digits[i] + self.remaining[i];
+                self.remaining[i] -= 1;
+                let mut path = Vec::with_capacity(self.root.len() + i + 1);
+                path.extend_from_slice(&self.root);
+                path.extend_from_slice(&self.digits[..i]);
+                path.push(donated_digit);
+                return Some(NodeIndex(path));
+            }
+        }
+        None
+    }
+
+    /// Weight of the heaviest donatable task, if any.
+    pub fn heaviest_weight(&self) -> Option<f64> {
+        for i in 0..self.digits.len() {
+            if self.remaining[i] > 0 {
+                return Some(1.0 / ((self.root.len() + i + 1) as f64 + 1.0));
+            }
+        }
+        None
+    }
+
+    /// Global index of the node currently being explored.
+    pub fn current_node(&self) -> NodeIndex {
+        let mut path = self.root.clone();
+        path.extend_from_slice(&self.digits);
+        NodeIndex(path)
+    }
+
+    /// Total unexplored siblings across all depths (donatable supply).
+    pub fn donatable(&self) -> u64 {
+        self.remaining.iter().map(|&r| r as u64).sum()
+    }
+
+    /// Checkpoint support (§VII): serialize the full bookkeeping so a core
+    /// can leave the computation and a replacement can resume.
+    pub fn to_checkpoint(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        let dump = |out: &mut Vec<u8>, xs: &[u32]| {
+            out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+            for &x in xs {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        };
+        dump(&mut out, &self.root);
+        dump(&mut out, &self.digits);
+        dump(&mut out, &self.remaining);
+        out
+    }
+
+    /// Inverse of [`to_checkpoint`](Self::to_checkpoint).
+    pub fn from_checkpoint(bytes: &[u8]) -> Option<Self> {
+        let mut pos = 0usize;
+        let mut load = || -> Option<Vec<u32>> {
+            if bytes.len() < pos + 4 {
+                return None;
+            }
+            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().ok()?) as usize;
+            pos += 4;
+            if bytes.len() < pos + 4 * len {
+                return None;
+            }
+            let v = (0..len)
+                .map(|i| u32::from_le_bytes(bytes[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap()))
+                .collect();
+            pos += 4 * len;
+            Some(v)
+        };
+        let root = load()?;
+        let digits = load()?;
+        let remaining = load()?;
+        if digits.len() != remaining.len() {
+            return None;
+        }
+        Some(CurrentIndex { root, digits, remaining })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_index_basics() {
+        let r = NodeIndex::root();
+        assert_eq!(r.depth(), 0);
+        assert_eq!(r.weight(), 1.0);
+        let c = r.child(0).child(1);
+        assert_eq!(c.depth(), 2);
+        assert!((c.weight() - 1.0 / 3.0).abs() < 1e-12);
+        assert!(r.is_prefix_of(&c));
+        assert!(!c.is_prefix_of(&r));
+        assert_eq!(c.to_string(), "101");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for idx in [NodeIndex::root(), NodeIndex(vec![0, 1, 1, 0]), NodeIndex(vec![5, 0, 2])] {
+            let bytes = idx.encode();
+            assert_eq!(NodeIndex::decode(&bytes), Some(idx.clone()));
+        }
+        assert_eq!(NodeIndex::decode(&[1, 2, 3]), None);
+        assert_eq!(NodeIndex::decode(&[2, 0, 0, 0, 1]), None);
+    }
+
+    #[test]
+    fn donate_paper_example() {
+        // Paper §IV-A walkthrough: worker owns the root, is exploring
+        // N_{3,2} with current_idx = {1,0,1,0} (root digit 1 + path 0,1,0).
+        // Binary tree: every pushed node has 2 children.
+        let mut ci = CurrentIndex::new(NodeIndex::root());
+        ci.push(0, 2); // depth 1: left
+        ci.push(1, 2); // depth 2: right
+        ci.push(0, 2); // depth 3: left
+        // First donation: the heaviest task is N_{1,1} = path [1].
+        let d1 = ci.donate_heaviest().unwrap();
+        assert_eq!(d1, NodeIndex(vec![1]));
+        // Second donation while still at the same node: {1,0,1,1} = [0,1,1].
+        let d2 = ci.donate_heaviest().unwrap();
+        assert_eq!(d2, NodeIndex(vec![0, 1, 1]));
+        // Nothing else is donatable.
+        assert_eq!(ci.donate_heaviest(), None);
+        assert_eq!(ci.donatable(), 0);
+    }
+
+    #[test]
+    fn donated_branch_never_explored() {
+        // After donating at a depth, pop_and_advance at that depth must not
+        // hand the DFS the donated sibling.
+        let mut ci = CurrentIndex::new(NodeIndex::root());
+        ci.push(0, 2);
+        let d = ci.donate_heaviest().unwrap();
+        assert_eq!(d, NodeIndex(vec![1]));
+        // DFS backtracks to depth 0: the right child was donated -> None.
+        assert_eq!(ci.pop_and_advance(), None);
+        assert_eq!(ci.local_depth(), 0);
+    }
+
+    #[test]
+    fn arbitrary_branching_donates_last_sibling_first() {
+        // Node with 4 children; DFS took child 0. Donations must hand out
+        // 3, then 2, then 1 (suffix order, §IV-C).
+        let mut ci = CurrentIndex::new(NodeIndex::root());
+        ci.push(0, 4);
+        assert_eq!(ci.donate_heaviest().unwrap(), NodeIndex(vec![3]));
+        assert_eq!(ci.donate_heaviest().unwrap(), NodeIndex(vec![2]));
+        // DFS finishes child 0, advances to child 1 (2 and 3 are donated).
+        assert_eq!(ci.pop_and_advance(), Some(1));
+        assert_eq!(ci.donate_heaviest(), None);
+        assert_eq!(ci.pop_and_advance(), None);
+    }
+
+    #[test]
+    fn donation_is_shallowest_first() {
+        let mut ci = CurrentIndex::new(NodeIndex::root());
+        ci.push(0, 2);
+        ci.push(0, 3);
+        ci.push(1, 2); // depth 3, no right sibling left? digit 1 of 2 -> rem 0
+        // heaviest = depth 1 right child
+        assert_eq!(ci.heaviest_weight(), Some(0.5));
+        assert_eq!(ci.donate_heaviest().unwrap(), NodeIndex(vec![1]));
+        // next heaviest = depth 2, last sibling = digit 2
+        assert_eq!(ci.donate_heaviest().unwrap(), NodeIndex(vec![0, 2]));
+        assert_eq!(ci.donate_heaviest().unwrap(), NodeIndex(vec![0, 1]));
+        assert_eq!(ci.donate_heaviest(), None);
+        assert_eq!(ci.heaviest_weight(), None);
+    }
+
+    #[test]
+    fn donation_respects_subtree_root_prefix() {
+        let root = NodeIndex(vec![1, 0, 1]);
+        let mut ci = CurrentIndex::new(root.clone());
+        assert_eq!(ci.root_depth(), 3);
+        ci.push(0, 2);
+        let d = ci.donate_heaviest().unwrap();
+        assert_eq!(d, NodeIndex(vec![1, 0, 1, 1]));
+        assert!(root.is_prefix_of(&d));
+    }
+
+    #[test]
+    fn current_node_tracks_path() {
+        let mut ci = CurrentIndex::new(NodeIndex(vec![2]));
+        ci.push(0, 2);
+        ci.push(1, 3);
+        assert_eq!(ci.current_node(), NodeIndex(vec![2, 0, 1]));
+        ci.pop_and_advance(); // depth 2: digit 1 of 3 -> advance to 2
+        assert_eq!(ci.current_node(), NodeIndex(vec![2, 0, 2]));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut ci = CurrentIndex::new(NodeIndex(vec![1, 0]));
+        ci.push(0, 3);
+        ci.push(2, 4);
+        ci.donate_heaviest();
+        let bytes = ci.to_checkpoint();
+        let back = CurrentIndex::from_checkpoint(&bytes).unwrap();
+        assert_eq!(back.current_node(), ci.current_node());
+        assert_eq!(back.donatable(), ci.donatable());
+        assert!(CurrentIndex::from_checkpoint(&[0, 0]).is_none());
+    }
+
+    #[test]
+    fn single_child_nodes_are_not_donatable() {
+        // A chain of forced (single-child) moves has no donatable work —
+        // the binary -1 trick can't express this; the 2-row form can (§IV-C).
+        let mut ci = CurrentIndex::new(NodeIndex::root());
+        ci.push(0, 1);
+        ci.push(0, 1);
+        assert_eq!(ci.donate_heaviest(), None);
+        assert_eq!(ci.heaviest_weight(), None);
+    }
+}

@@ -1,0 +1,138 @@
+//! DIMACS `.clq` / `.col` / `.mis` parser (the format of the paper's
+//! p_hat700-1, p_hat1000-2 and frb30-15-1 inputs).
+//!
+//! Format: comment lines `c ...`, one problem line `p edge <n> <m>` (or
+//! `p col ...`), and edge lines `e <u> <v>` with 1-based vertex ids.
+
+use crate::graph::Graph;
+use anyhow::{bail, Context, Result};
+
+/// Parse DIMACS text into a [`Graph`]. Duplicate edges are tolerated (some
+/// published instances contain them); self-loops are dropped.
+pub fn parse_dimacs(name: &str, text: &str) -> Result<Graph> {
+    let mut n: Option<usize> = None;
+    let mut declared_m = 0usize;
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('c') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("p") => {
+                let _fmt = it.next().context("p line missing format")?;
+                let nv: usize = it
+                    .next()
+                    .context("p line missing n")?
+                    .parse()
+                    .with_context(|| format!("line {}: bad n", lineno + 1))?;
+                declared_m = it
+                    .next()
+                    .context("p line missing m")?
+                    .parse()
+                    .with_context(|| format!("line {}: bad m", lineno + 1))?;
+                n = Some(nv);
+            }
+            Some("e") => {
+                let n = n.context("edge before p line")?;
+                let u: usize = it.next().context("e missing u")?.parse()?;
+                let v: usize = it.next().context("e missing v")?.parse()?;
+                if u == 0 || v == 0 || u > n || v > n {
+                    bail!("line {}: vertex out of range (1..={n})", lineno + 1);
+                }
+                if u == v {
+                    continue; // drop self-loops
+                }
+                let (a, b) = ((u - 1) as u32, (v - 1) as u32);
+                if seen.insert((a.min(b), a.max(b))) {
+                    edges.push((a, b));
+                }
+            }
+            Some(other) => bail!("line {}: unknown record '{other}'", lineno + 1),
+            None => unreachable!(),
+        }
+    }
+    let n = n.context("missing p line")?;
+    if declared_m > 0 && edges.len() > declared_m {
+        bail!("more edges ({}) than declared ({declared_m})", edges.len());
+    }
+    Graph::from_edges(name, n, &edges)
+}
+
+/// Parse a DIMACS file from disk.
+pub fn parse_dimacs_file(path: &str) -> Result<Graph> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let name = std::path::Path::new(path)
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.to_string());
+    parse_dimacs(&name, &text)
+}
+
+/// Serialize a graph back to DIMACS text (for interchange / test fixtures).
+pub fn to_dimacs(g: &Graph) -> String {
+    let mut out = format!("c {}\np edge {} {}\n", g.name, g.num_vertices(), g.num_edges());
+    for (u, v) in g.edges() {
+        out.push_str(&format!("e {} {}\n", u + 1, v + 1));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+c sample instance
+p edge 4 3
+e 1 2
+e 2 3
+e 3 4
+";
+
+    #[test]
+    fn parses_sample() {
+        let g = parse_dimacs("sample", SAMPLE).unwrap();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 3);
+        assert!(g.has_edge(0, 1) && g.has_edge(2, 3));
+    }
+
+    #[test]
+    fn tolerates_duplicates_and_self_loops() {
+        let text = "p edge 3 4\ne 1 2\ne 2 1\ne 2 2\ne 2 3\n";
+        let g = parse_dimacs("dups", text).unwrap();
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(parse_dimacs("bad", "p edge 2 1\ne 1 5\n").is_err());
+        assert!(parse_dimacs("bad", "e 1 2\n").is_err());
+        assert!(parse_dimacs("bad", "q edge 2 1\n").is_err());
+    }
+
+    #[test]
+    fn parse_file_from_disk() {
+        let dir = std::env::temp_dir().join("pbt_dimacs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sample.clq");
+        std::fs::write(&path, SAMPLE).unwrap();
+        let g = parse_dimacs_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(g.name, "sample.clq");
+        assert_eq!(g.num_edges(), 3);
+        assert!(parse_dimacs_file("/nonexistent/x.clq").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let g = parse_dimacs("sample", SAMPLE).unwrap();
+        let text = to_dimacs(&g);
+        let g2 = parse_dimacs("sample2", &text).unwrap();
+        assert_eq!(g.edges(), g2.edges());
+    }
+}

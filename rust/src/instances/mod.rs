@@ -1,0 +1,12 @@
+//! Instance acquisition: DIMACS parsing and seeded generators for the
+//! paper's four VERTEX COVER families and random DOMINATING SET inputs
+//! (§VI).  The paper's exact inputs take core-*days* serially; the
+//! generators reproduce each family's search-tree character at laptop scale
+//! (see DESIGN.md "Substitutions").
+
+pub mod dimacs;
+pub mod generators;
+pub mod suite;
+
+pub use dimacs::{parse_dimacs, parse_dimacs_file};
+pub use suite::{paper_suite_ds, paper_suite_vc, Instance};

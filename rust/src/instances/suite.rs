@@ -1,0 +1,97 @@
+//! The benchmark suite: scaled-down analogues of the paper's §VI inputs,
+//! one per family, sized so the whole Table I/II sweep completes on a
+//! laptop.  `scale` ∈ {0: tiny (CI), 1: default, 2: heavy} trades fidelity
+//! for time.
+
+use crate::graph::Graph;
+use crate::instances::generators;
+
+/// A named benchmark instance with provenance notes.
+pub struct Instance {
+    pub graph: Graph,
+    /// Which paper input this stands in for.
+    pub stands_for: &'static str,
+    /// Family character (reported in EXPERIMENTS.md).
+    pub family: &'static str,
+}
+
+/// The four VERTEX COVER instances of Table I, scaled.
+pub fn paper_suite_vc(scale: usize) -> Vec<Instance> {
+    // Calibrated so serial tree sizes land at ~3-10k (scale 0, CI), ~50-200k
+    // (scale 1, default tables) and ~0.4-1M nodes (scale 2) — see
+    // EXPERIMENTS.md for the calibration run.
+    let (phat1, phat2, frb, cell) = match scale {
+        0 => ((70, 490, 31u64), (80, 640, 32u64), (9, 7, 350, 33u64), 60),
+        1 => ((100, 1000, 31), (110, 990, 32), (12, 8, 700, 33), 84),
+        _ => ((120, 1080, 31), (124, 1240, 32), (13, 9, 900, 33), 96),
+    };
+    let mut phat_a = generators::gnm(phat1.0, phat1.1, phat1.2);
+    phat_a.name = format!("p_hat-like-1 (n={} m={})", phat1.0, phat1.1);
+    let mut phat_b = generators::gnm(phat2.0, phat2.1, phat2.2);
+    phat_b.name = format!("p_hat-like-2 (n={} m={})", phat2.0, phat2.1);
+    let mut frb_g = generators::model_rb(frb.0, frb.1, frb.2, frb.3);
+    frb_g.name = format!("frb-like (n={} k={})", frb.0 * frb.1, frb.1);
+    let mut cell_g = generators::cell60_like(cell);
+    cell_g.name = format!("60-cell-like (n={cell} 4-regular)");
+    vec![
+        Instance { graph: phat_a, stands_for: "p_hat700-1.clq", family: "dense random, pruning-friendly" },
+        Instance { graph: phat_b, stands_for: "p_hat1000-2.clq", family: "dense random, denser core" },
+        Instance { graph: frb_g, stands_for: "frb30-15-1.mis", family: "model RB, phase-transition hard" },
+        Instance { graph: cell_g, stands_for: "60-cell", family: "4-regular vertex-transitive, pruning-hostile" },
+    ]
+}
+
+/// The two DOMINATING SET instances of Table II, scaled.
+pub fn paper_suite_ds(scale: usize) -> Vec<Instance> {
+    let (a, b) = match scale {
+        0 => ((60, 240, 41u64), (66, 396, 42u64)),
+        1 => ((70, 280, 41), (80, 480, 42)),
+        _ => ((84, 336, 41), (90, 540, 42)),
+    };
+    vec![
+        Instance {
+            graph: generators::random_ds(a.0, a.1, a.2),
+            stands_for: "201x1500.ds",
+            family: "sparse random DS",
+        },
+        Instance {
+            graph: generators::random_ds(b.0, b.1, b.2),
+            stands_for: "251x6000.ds",
+            family: "dense random DS",
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vc_suite_has_four_families() {
+        let s = paper_suite_vc(0);
+        assert_eq!(s.len(), 4);
+        assert!(s[3].graph.name.contains("60-cell-like"));
+        // 60-cell-like is 4-regular
+        for v in 0..s[3].graph.num_vertices() as u32 {
+            assert_eq!(s[3].graph.degree(v), 4);
+        }
+    }
+
+    #[test]
+    fn ds_suite_has_two() {
+        let s = paper_suite_ds(0);
+        assert_eq!(s.len(), 2);
+        assert!(s[0].graph.name.ends_with(".ds"));
+    }
+
+    #[test]
+    fn scales_are_monotone() {
+        for scale in 0..3 {
+            let s = paper_suite_vc(scale);
+            assert_eq!(s.len(), 4);
+        }
+        let small = paper_suite_vc(0)[0].graph.num_vertices();
+        let big = paper_suite_vc(2)[0].graph.num_vertices();
+        assert!(small < big);
+    }
+}

@@ -1,0 +1,66 @@
+//! # pbt — Parallel Backtracking Framework
+//!
+//! A production-style reproduction of *"An Easy-to-use Scalable Framework for
+//! Parallel Recursive Backtracking"* (Abu-Khzam, Daudjee, Mouawad, Nishimura,
+//! CS.DC 2013).
+//!
+//! The framework turns any deterministic recursive backtracking (branch-and-
+//! reduce) algorithm into a parallel one with:
+//!
+//! * **indexed search trees** — a task *is* the digit string of its
+//!   root-to-node path ([`index`]), eliminating task buffers;
+//! * **implicit load balancing** — workers always donate the *heaviest*
+//!   (shallowest) unexplored node of their own subtree ([`engine::Stepper`]);
+//! * **decentralized communication** — any-to-any task requests over a
+//!   virtual tree topology for initial distribution ([`topology`]), then
+//!   round-robin probing, with a three-state termination protocol
+//!   ([`coordinator`]).
+//!
+//! Problems plug in through the [`engine::Problem`] /
+//! [`engine::SearchState`] traits; [`problems`] ships VERTEX COVER,
+//! DOMINATING SET (via MIN SET COVER) and N-QUEENS.  Scaling beyond the
+//! machine's physical cores is reproduced with a discrete-event simulator
+//! ([`sim`]) that executes the *same* worker state machine under virtual
+//! time.  The XLA/PJRT-backed batched frontier evaluator lives in
+//! [`runtime`] (three-layer integration; see DESIGN.md).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pbt::instances::generators;
+//! use pbt::problems::vertex_cover::VertexCover;
+//! use pbt::runner::{self, RunConfig};
+//!
+//! let g = generators::gnm(60, 240, 42);
+//! let problem = VertexCover::new(&g);
+//! let report = runner::solve(&problem, &RunConfig { workers: 4, ..Default::default() });
+//! println!("minimum vertex cover: {}", report.best_cost.unwrap());
+//! ```
+
+pub mod util;
+pub mod graph;
+pub mod instances;
+pub mod index;
+pub mod engine;
+pub mod topology;
+pub mod comm;
+pub mod coordinator;
+pub mod runner;
+pub mod problems;
+pub mod baselines;
+pub mod sim;
+pub mod runtime;
+pub mod metrics;
+pub mod config;
+pub mod cli;
+pub mod encoding;
+pub mod experiments;
+pub mod testing;
+
+/// Solution cost. Minimisation problems use smaller-is-better; `COST_INF`
+/// marks "no solution yet" (the paper's unset `best_so_far`).
+pub type Cost = u64;
+/// Sentinel for "no incumbent yet".
+pub const COST_INF: Cost = u64::MAX;
+/// Worker rank, as in the paper's `C_i`.
+pub type Rank = usize;

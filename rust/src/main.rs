@@ -1,0 +1,307 @@
+//! `pbt` — the launcher (L3 leader entrypoint + CLI).
+//!
+//! See `pbt help` (or [`pbt::cli::USAGE`]) for the command list.  Every
+//! paper artifact has a command: `table1`, `table2`, `fig9`, `fig10`, the
+//! ablations under `ablate`, and `eval-xla` exercises the AOT-compiled
+//! XLA frontier evaluator against the rust-native path.
+
+use anyhow::{bail, Context, Result};
+use pbt::cli::{Args, USAGE};
+use pbt::config::PbtConfig;
+use pbt::engine::Problem;
+use pbt::graph::Graph;
+use pbt::instances::{self, paper_suite_ds, paper_suite_vc};
+use pbt::metrics::{ascii_chart, fig10_series, fig9_series, paper_table, speedups};
+use pbt::problems::{BoundKind, DominatingSet, NQueens, VertexCover};
+use pbt::runner::{self, RunConfig};
+use pbt::sim::{simulate, SimConfig};
+use pbt::util::table::Table;
+use pbt::util::timer::human_duration;
+use pbt::experiments;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "solve" => cmd_solve(args),
+        "simulate" => cmd_simulate(args),
+        "table1" => cmd_table(args, true),
+        "table2" => cmd_table(args, false),
+        "fig9" => cmd_fig9(args),
+        "fig10" => cmd_fig10(args),
+        "ablate" => cmd_ablate(args),
+        "eval-xla" => cmd_eval_xla(args),
+        "topology" => cmd_topology(args),
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+/// Resolve a named or file-based instance.
+fn load_instance(name: &str, scale: usize) -> Result<Graph> {
+    let vc = paper_suite_vc(scale);
+    let ds = paper_suite_ds(scale);
+    Ok(match name {
+        "phat1" => vc[0].graph.clone(),
+        "phat2" => vc[1].graph.clone(),
+        "frb" => vc[2].graph.clone(),
+        "cell60" => vc[3].graph.clone(),
+        "ds1" => ds[0].graph.clone(),
+        "ds2" => ds[1].graph.clone(),
+        path if path.ends_with(".clq") || path.ends_with(".mis") || path.ends_with(".col") => {
+            instances::parse_dimacs_file(path)?
+        }
+        other => bail!("unknown instance {other:?} (try phat1/phat2/frb/cell60/ds1/ds2 or a DIMACS file)"),
+    })
+}
+
+fn run_config(args: &Args) -> Result<(RunConfig, PbtConfig)> {
+    let base = match args.get("config") {
+        Some(path) => PbtConfig::from_file(path)?,
+        None => PbtConfig::default(),
+    };
+    let workers = args.get_usize("workers", base.workers)?;
+    let mut cfg = RunConfig { workers, worker: base.worker_config(), timeout: None };
+    cfg.worker.poll_interval = args.get_u64("poll-interval", cfg.worker.poll_interval as u64)? as u32;
+    Ok((cfg, base))
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let (cfg, base) = run_config(args)?;
+    let scale = args.get_usize("scale", base.scale)?;
+    let problem_kind = args.get_str("problem", "vc");
+    let inst = args.get_str("instance", "phat1");
+    println!("== pbt solve: problem={problem_kind} instance={inst} workers={}", cfg.workers);
+
+    match problem_kind.as_str() {
+        "vc" => {
+            let g = load_instance(&inst, scale)?;
+            let bound = match args.get_str("bound", &base.bound).as_str() {
+                "none" => BoundKind::None,
+                "matching" => BoundKind::Matching,
+                _ => BoundKind::EdgesOverMaxDeg,
+            };
+            let p = VertexCover::with_bound(&g, bound);
+            report_run(&p, &cfg, |sol| format!("|cover| = {}", sol.len()));
+        }
+        "ds" => {
+            let g = load_instance(&inst, scale)?;
+            let p = DominatingSet::new(&g);
+            report_run(&p, &cfg, |sol| format!("|dominating set| = {}", sol.len()));
+        }
+        "queens" => {
+            let n = args.get_usize("n", 10)? as u32;
+            let p = NQueens::new(n);
+            let r = runner::solve(&p, &cfg);
+            println!(
+                "solutions: {}   time: {}   nodes: {}",
+                r.total_solutions(),
+                human_duration(r.wall_secs),
+                r.total_nodes()
+            );
+        }
+        other => bail!("unknown problem {other:?}"),
+    }
+    Ok(())
+}
+
+fn report_run<P: Problem>(
+    problem: &P,
+    cfg: &RunConfig,
+    describe: impl Fn(&<P::State as pbt::engine::SearchState>::Sol) -> String,
+) {
+    let r = runner::solve(problem, cfg);
+    println!(
+        "best cost: {:?}   time: {}   nodes: {}   T_S(avg): {:.0}   T_R(avg): {:.0}",
+        r.best_cost,
+        human_duration(r.wall_secs),
+        r.total_nodes(),
+        r.avg_tasks_received(),
+        r.avg_tasks_requested(),
+    );
+    if let Some(sol) = &r.best_solution {
+        println!("{}", describe(sol));
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let base = match args.get("config") {
+        Some(path) => PbtConfig::from_file(path)?,
+        None => PbtConfig::default(),
+    };
+    let scale = args.get_usize("scale", base.scale)?;
+    let cores = args.get_usize("cores", 1024)?;
+    let inst = args.get_str("instance", "phat1");
+    let problem_kind = args.get_str("problem", "vc");
+    let sim_cfg = SimConfig {
+        cores,
+        latency: args.get_u64("latency", base.sim_latency)?,
+        batch: args.get_u64("batch", base.sim_batch as u64)? as u32,
+        worker: base.worker_config(),
+        ..Default::default()
+    };
+    println!("== pbt simulate: {problem_kind}/{inst} on {cores} virtual cores");
+    let g = load_instance(&inst, scale)?;
+    let report = match problem_kind.as_str() {
+        "vc" => {
+            let p = VertexCover::new(&g);
+            simulate(&p, &sim_cfg)
+        }
+        "ds" => {
+            let p = DominatingSet::new(&g);
+            simulate(&p, &sim_cfg)
+        }
+        other => bail!("unknown problem {other:?}"),
+    };
+    println!(
+        "virtual time: {}   best: {:?}   nodes: {}   T_S: {:.0}   T_R: {:.0}   util: {:.1}%   events: {}{}",
+        human_duration(report.makespan_secs(experiments::TICKS_PER_SEC)),
+        report.best_cost,
+        report.total_nodes(),
+        report.avg_tasks_received(),
+        report.avg_tasks_requested(),
+        report.utilization() * 100.0,
+        report.events,
+        if report.endgame_collapsed { "   (endgame collapsed)" } else { "" },
+    );
+    Ok(())
+}
+
+fn cmd_table(args: &Args, is_table1: bool) -> Result<()> {
+    let scale = args.get_usize("scale", 1)?;
+    let max_cores = args.get_usize("max-cores", 4096)?;
+    let rows = if is_table1 {
+        println!("== Table I: PARALLEL-VERTEX-COVER statistics (scaled reproduction)");
+        experiments::table1(scale, max_cores)
+    } else {
+        println!("== Table II: PARALLEL-DOMINATING-SET statistics (scaled reproduction)");
+        experiments::table2(scale, max_cores)
+    };
+    println!("{}", paper_table(&rows).render());
+    println!("normalized speedups (1.0 = linear):");
+    let mut t = Table::new(["Instance", "|C|", "speedup/linear"]);
+    for (inst, c, s) in speedups(&rows) {
+        t.row([inst, format!("{c}"), format!("{s:.2}")]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_fig9(args: &Args) -> Result<()> {
+    let scale = args.get_usize("scale", 1)?;
+    let max_cores = args.get_usize("max-cores", 4096)?;
+    let mut rows = experiments::table1(scale, max_cores);
+    rows.extend(experiments::table2(scale, max_cores));
+    let series = fig9_series(&rows);
+    println!("{}", ascii_chart("Figure 9: log2 running time (s) vs cores", &series, 16));
+    Ok(())
+}
+
+fn cmd_fig10(args: &Args) -> Result<()> {
+    let scale = args.get_usize("scale", 1)?;
+    let max_cores = args.get_usize("max-cores", 4096)?;
+    let mut rows = experiments::table1(scale, max_cores);
+    rows.extend(experiments::table2(scale, max_cores));
+    let series = fig10_series(&rows);
+    // Flatten into two chart series per instance (T_S black, T_R gray).
+    let mut chart: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
+    for (name, pts) in &series {
+        chart.push((format!("{name} T_S"), pts.iter().map(|&(c, s, _)| (c, s)).collect()));
+        chart.push((format!("{name} T_R"), pts.iter().map(|&(c, _, r)| (c, r)).collect()));
+    }
+    println!("{}", ascii_chart("Figure 10: log2 avg message transmissions vs cores", &chart, 16));
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args) -> Result<()> {
+    let scale = args.get_usize("scale", 0)?;
+    let threads = args.get_usize("workers", 4)?;
+    let which = args.get_str("which", "encoding");
+    let table = match which.as_str() {
+        "encoding" => experiments::ablate_encoding(scale),
+        "buffers" => experiments::ablate_buffers(scale, threads),
+        "topology" => experiments::ablate_topology(scale, threads),
+        "broadcast" => experiments::ablate_broadcast(scale, threads),
+        "donation" => experiments::ablate_donation(scale, args.get_usize("cores", 64)?),
+        "hypercube" => experiments::ablate_hypercube(scale, args.get_usize("max-cores", 256)?),
+        other => bail!("unknown ablation {other:?}"),
+    };
+    println!("== ablation: {which}");
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_eval_xla(args: &Args) -> Result<()> {
+    use pbt::runtime::evaluator::{native_frontier_eval, XlaEvaluator};
+    let dir = args.get_str("artifacts", "artifacts");
+    let scale = args.get_usize("scale", 0)?;
+    let inst = args.get_str("instance", "phat1");
+    let g = load_instance(&inst, scale)?;
+    println!("== XLA frontier evaluator vs rust-native (instance {})", g.name);
+
+    let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+    let eval = XlaEvaluator::from_artifacts_dir(&client, &dir, g.num_vertices())?;
+    println!("artifact variant: n={} b={}", eval.padded_n(), eval.batch_size());
+
+    let adj = eval.padded_adjacency(&g)?;
+    // A batch of real frontier masks: all real vertices active, plus a few
+    // partially-deleted variants (padding vertices stay 0).
+    let mut full_real = pbt::util::BitSet::new(eval.padded_n());
+    for v in 0..g.num_vertices() {
+        full_real.insert(v);
+    }
+    let mut m1 = full_real.clone();
+    for v in 0..g.num_vertices().min(4) {
+        m1.remove(v);
+    }
+    let mut m2 = full_real.clone();
+    m2.remove(0);
+    let mask_refs = vec![&full_real, &m1, &m2];
+    let packed = eval.padded_masks(&mask_refs)?;
+    let batch = eval.eval(&adj, &packed)?;
+
+    let mut ok = true;
+    for (row, mask) in mask_refs.iter().enumerate() {
+        let (_, bv, m, lb) = native_frontier_eval(&adj, eval.padded_n(), mask);
+        let (xb, xm, xl) =
+            (batch.branch_vertex[row], batch.num_edges[row], batch.lower_bound[row]);
+        let matched = bv == xb && m == xm && lb == xl;
+        ok &= matched;
+        println!(
+            "mask {row}: native (bv={bv}, m={m}, lb={lb})  xla (bv={xb}, m={xm}, lb={xl})  {}",
+            if matched { "OK" } else { "MISMATCH" }
+        );
+    }
+    if !ok {
+        bail!("XLA evaluator disagrees with the native path");
+    }
+    println!("parity OK — L1 Pallas kernel ≡ L2 jnp ≡ L3 rust-native");
+    Ok(())
+}
+
+fn cmd_topology(args: &Args) -> Result<()> {
+    let c = args.get_usize("cores", 16)?;
+    println!("== GETPARENT virtual tree for c = {c}");
+    let tree = pbt::topology::initial_tree(c);
+    for (parent, children) in tree.iter().enumerate() {
+        if !children.is_empty() {
+            println!("C_{parent} <- {:?}", children);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,199 @@
+//! Experiment metrics: speedup/efficiency math and the paper-style table
+//! rows (Tables I/II, Figures 9/10).
+
+use crate::util::table::{thousands, Table};
+
+/// One sweep row: a (instance, core-count) measurement.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub instance: String,
+    pub cores: usize,
+    /// Wall (threads) or virtual (simulator) time in seconds.
+    pub time_secs: f64,
+    /// Average tasks received per core (paper `T_S`).
+    pub t_s: f64,
+    /// Average tasks requested per core (paper `T_R`).
+    pub t_r: f64,
+    /// Total node visits (work conservation check).
+    pub nodes: u64,
+    pub best_cost: Option<u64>,
+}
+
+/// Render rows in the paper's Table I/II format.
+pub fn paper_table(rows: &[SweepRow]) -> Table {
+    let mut t = Table::new(["Graph", "|C|", "Time", "T_S", "T_R"]);
+    for r in rows {
+        t.row([
+            r.instance.clone(),
+            thousands(r.cores as u64),
+            crate::util::timer::human_duration(r.time_secs),
+            format!("{:.0}", r.t_s),
+            format!("{:.0}", r.t_r),
+        ]);
+    }
+    t
+}
+
+/// Figure 9 series: (cores, log2 time-seconds) per instance.
+pub fn fig9_series(rows: &[SweepRow]) -> Vec<(String, Vec<(usize, f64)>)> {
+    series_by_instance(rows, |r| r.time_secs.max(1e-9).log2())
+}
+
+/// Figure 10 series: (cores, log2 T_S) and (cores, log2 T_R) per instance.
+pub fn fig10_series(rows: &[SweepRow]) -> Vec<(String, Vec<(usize, f64, f64)>)> {
+    let mut out: Vec<(String, Vec<(usize, f64, f64)>)> = Vec::new();
+    for r in rows {
+        let entry = match out.iter_mut().find(|(name, _)| *name == r.instance) {
+            Some(e) => e,
+            None => {
+                out.push((r.instance.clone(), Vec::new()));
+                out.last_mut().unwrap()
+            }
+        };
+        entry.1.push((r.cores, r.t_s.max(1.0).log2(), r.t_r.max(1.0).log2()));
+    }
+    out
+}
+
+fn series_by_instance(
+    rows: &[SweepRow],
+    f: impl Fn(&SweepRow) -> f64,
+) -> Vec<(String, Vec<(usize, f64)>)> {
+    let mut out: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
+    for r in rows {
+        let entry = match out.iter_mut().find(|(name, _)| *name == r.instance) {
+            Some(e) => e,
+            None => {
+                out.push((r.instance.clone(), Vec::new()));
+                out.last_mut().unwrap()
+            }
+        };
+        entry.1.push((r.cores, f(r)));
+    }
+    out
+}
+
+/// Speedup of each row relative to the smallest core count of its instance.
+pub fn speedups(rows: &[SweepRow]) -> Vec<(String, usize, f64)> {
+    let mut out = Vec::new();
+    for r in rows {
+        let base = rows
+            .iter()
+            .filter(|x| x.instance == r.instance)
+            .min_by_key(|x| x.cores)
+            .unwrap();
+        let rel_cores = r.cores as f64 / base.cores as f64;
+        let speedup = base.time_secs / r.time_secs.max(1e-12);
+        out.push((r.instance.clone(), r.cores, speedup / rel_cores));
+    }
+    out
+}
+
+/// ASCII log-log chart (Figures 9/10 visualization in the terminal).
+pub fn ascii_chart(title: &str, series: &[(String, Vec<(usize, f64)>)], height: usize) -> String {
+    let mut ys: Vec<f64> = Vec::new();
+    for (_, pts) in series {
+        for &(_, y) in pts {
+            ys.push(y);
+        }
+    }
+    if ys.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (ymin, ymax) = ys.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &y| (lo.min(y), hi.max(y)));
+    let span = (ymax - ymin).max(1e-9);
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let cores: Vec<usize> = {
+        let mut cs: Vec<usize> =
+            series.iter().flat_map(|(_, p)| p.iter().map(|&(c, _)| c)).collect();
+        cs.sort_unstable();
+        cs.dedup();
+        cs
+    };
+    let width = cores.len().max(1);
+    let mut grid = vec![vec![' '; width * 3]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(c, y) in pts {
+            let xi = cores.iter().position(|&x| x == c).unwrap() * 3 + 1;
+            let yi = ((ymax - y) / span * (height - 1) as f64).round() as usize;
+            grid[yi.min(height - 1)][xi] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("{title}  [y: {ymin:.1}..{ymax:.1}]\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width * 3));
+    out.push('\n');
+    out.push(' ');
+    for c in &cores {
+        out.push_str(&format!("{:<3}", log2_label(*c)));
+    }
+    out.push('\n');
+    let mut legend = String::from("  x-axis: log2(cores);");
+    for (si, (name, _)) in series.iter().enumerate() {
+        legend.push_str(&format!(" {}={}", marks[si % marks.len()], name));
+    }
+    out.push_str(&legend);
+    out.push('\n');
+    out
+}
+
+fn log2_label(c: usize) -> String {
+    format!("{}", (c as f64).log2().round() as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> Vec<SweepRow> {
+        vec![
+            SweepRow { instance: "a".into(), cores: 2, time_secs: 8.0, t_s: 10.0, t_r: 12.0, nodes: 100, best_cost: Some(5) },
+            SweepRow { instance: "a".into(), cores: 4, time_secs: 4.0, t_s: 11.0, t_r: 20.0, nodes: 100, best_cost: Some(5) },
+            SweepRow { instance: "b".into(), cores: 2, time_secs: 3.0, t_s: 5.0, t_r: 6.0, nodes: 50, best_cost: Some(3) },
+        ]
+    }
+
+    #[test]
+    fn table_has_all_rows() {
+        let t = paper_table(&rows());
+        let s = t.render();
+        assert_eq!(s.lines().count(), 2 + 3);
+        assert!(s.contains("T_S"));
+    }
+
+    #[test]
+    fn fig9_groups_by_instance() {
+        let s = fig9_series(&rows());
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].1.len(), 2);
+        assert!((s[0].1[0].1 - 3.0).abs() < 1e-9); // log2(8)
+    }
+
+    #[test]
+    fn perfect_scaling_speedup_is_one() {
+        let s = speedups(&rows());
+        // instance a: 2->4 cores halves time -> normalized speedup 1.0
+        let a4 = s.iter().find(|(n, c, _)| n == "a" && *c == 4).unwrap();
+        assert!((a4.2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ascii_chart_renders() {
+        let s = fig9_series(&rows());
+        let chart = ascii_chart("fig9", &s, 10);
+        assert!(chart.contains('*'));
+        assert!(chart.lines().count() > 10);
+    }
+
+    #[test]
+    fn fig10_has_both_series() {
+        let s = fig10_series(&rows());
+        assert_eq!(s[0].1[0].1, (10.0f64).log2());
+        assert_eq!(s[0].1[0].2, (12.0f64).log2());
+    }
+}

@@ -1,0 +1,447 @@
+//! DOMINATING SET via MINIMUM SET COVER (paper §V, refs [2], [4]).
+//!
+//! The reduction: universe = V, one candidate set per vertex `v` holding its
+//! closed neighbourhood `N[v]`; a minimum set cover corresponds exactly to a
+//! minimum dominating set.
+//!
+//! The MSC branch-and-reduce (Fomin–Grandoni–Kratsch style, simplified to
+//! maintenance-light rules per the paper's §V "excluding complex processing
+//! rules"):
+//!
+//! * branching (binary, deterministic): pick the alive set with the most
+//!   uncovered elements, smallest id on ties; left = take it, right =
+//!   discard it;
+//! * reductions: discard empty sets; an uncovered element contained in
+//!   exactly one alive set forces that set;
+//! * infeasible nodes (an uncovered element no alive set contains) are cut
+//!   with an infinite bound;
+//! * bound: `|chosen| + ceil(uncovered / max live set size)`.
+//!
+//! All mutations go through a fine-grained op ledger; ops are undone in
+//! reverse, which makes stale `live_size` counters of dead sets
+//! self-repairing (see `Op` docs).
+
+use crate::engine::{NodeEval, Problem, SearchState};
+use crate::graph::Graph;
+use crate::util::BitSet;
+use crate::Cost;
+
+/// A MINIMUM SET COVER instance (also usable standalone).
+#[derive(Debug, Clone)]
+pub struct SetCoverInstance {
+    pub name: String,
+    /// Number of universe elements.
+    pub num_elements: usize,
+    /// Elements of each candidate set, sorted.
+    pub sets: Vec<Vec<u32>>,
+    /// For each element, the sets containing it, sorted.
+    pub element_sets: Vec<Vec<u32>>,
+}
+
+impl SetCoverInstance {
+    pub fn new(name: impl Into<String>, num_elements: usize, sets: Vec<Vec<u32>>) -> Self {
+        let mut element_sets = vec![Vec::new(); num_elements];
+        for (si, elems) in sets.iter().enumerate() {
+            for &e in elems {
+                assert!((e as usize) < num_elements, "element {e} out of range");
+                element_sets[e as usize].push(si as u32);
+            }
+        }
+        SetCoverInstance { name: name.into(), num_elements, sets, element_sets }
+    }
+
+    /// The DS reduction: set `v` = closed neighbourhood `N[v]`.
+    pub fn from_graph_domination(g: &Graph) -> Self {
+        let n = g.num_vertices();
+        let sets: Vec<Vec<u32>> = (0..n as u32)
+            .map(|v| {
+                let mut s: Vec<u32> = g.neighbors(v).to_vec();
+                s.push(v);
+                s.sort_unstable();
+                s
+            })
+            .collect();
+        Self::new(format!("msc({})", g.name), n, sets)
+    }
+}
+
+/// DOMINATING SET problem (a thin wrapper around the MSC engine).
+pub struct DominatingSet {
+    instance: SetCoverInstance,
+}
+
+impl DominatingSet {
+    pub fn new(g: &Graph) -> Self {
+        DominatingSet { instance: SetCoverInstance::from_graph_domination(g) }
+    }
+
+    /// Solve an explicit set cover instance instead.
+    pub fn from_instance(instance: SetCoverInstance) -> Self {
+        DominatingSet { instance }
+    }
+
+    pub fn instance(&self) -> &SetCoverInstance {
+        &self.instance
+    }
+}
+
+/// Ledger ops, undone in reverse order.
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    /// Set `s` was killed (chosen or discarded): revive it and re-increment
+    /// `freq` of all its elements.
+    KillSet(u32),
+    /// Element `e` became covered: uncover it and re-increment `live_size`
+    /// of the alive sets containing it.
+    CoverElem(u32),
+    /// Set `s` was appended to `chosen`.
+    Chose,
+}
+
+/// Per-descend frame.
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    ledger_len: usize,
+    branch_len: usize,
+}
+
+pub struct MscState {
+    inst: std::sync::Arc<SetCoverInstance>,
+    alive: BitSet,
+    covered: BitSet,
+    /// Uncovered elements per alive set (stale while a set is dead; exact
+    /// again by the time it is revived — ops undo in reverse order).
+    live_size: Vec<u32>,
+    /// Alive sets containing each element (covered or not).
+    freq: Vec<u32>,
+    uncovered: usize,
+    chosen: Vec<u32>,
+    branch_stack: Vec<u32>,
+    frames: Vec<Frame>,
+    ledger: Vec<Op>,
+}
+
+impl MscState {
+    fn kill_set(&mut self, s: u32) {
+        debug_assert!(self.alive.contains(s as usize));
+        self.alive.remove(s as usize);
+        for &e in &self.inst.sets[s as usize] {
+            self.freq[e as usize] -= 1;
+        }
+        self.ledger.push(Op::KillSet(s));
+    }
+
+    fn cover_elem(&mut self, e: u32) {
+        debug_assert!(!self.covered.contains(e as usize));
+        self.covered.insert(e as usize);
+        self.uncovered -= 1;
+        for &t in &self.inst.element_sets[e as usize] {
+            if self.alive.contains(t as usize) {
+                self.live_size[t as usize] -= 1;
+            }
+        }
+        self.ledger.push(Op::CoverElem(e));
+    }
+
+    fn choose_set(&mut self, s: u32) {
+        self.chosen.push(s);
+        self.ledger.push(Op::Chose);
+        self.kill_set(s);
+        // Arc handle instead of cloning the element vector (§Perf: this is
+        // the DS hot path — one clone per chosen set added up).
+        let inst = std::sync::Arc::clone(&self.inst);
+        for &e in &inst.sets[s as usize] {
+            if !self.covered.contains(e as usize) {
+                self.cover_elem(e);
+            }
+        }
+    }
+
+    fn rollback(&mut self, ledger_len: usize) {
+        while self.ledger.len() > ledger_len {
+            match self.ledger.pop().unwrap() {
+                Op::KillSet(s) => {
+                    self.alive.insert(s as usize);
+                    for &e in &self.inst.sets[s as usize] {
+                        self.freq[e as usize] += 1;
+                    }
+                }
+                Op::CoverElem(e) => {
+                    self.covered.remove(e as usize);
+                    self.uncovered += 1;
+                    for &t in &self.inst.element_sets[e as usize] {
+                        if self.alive.contains(t as usize) {
+                            self.live_size[t as usize] += 1;
+                        }
+                    }
+                }
+                Op::Chose => {
+                    self.chosen.pop();
+                }
+            }
+        }
+    }
+
+    /// Reductions to fixpoint. Returns `false` if the node is infeasible.
+    /// Allocation-free: raw-id scans against the alive bitset (§Perf).
+    fn reduce(&mut self) -> bool {
+        let num_sets = self.inst.sets.len();
+        loop {
+            let mut fired = false;
+            // Discard empty alive sets (id order).
+            for s in 0..num_sets {
+                if self.alive.contains(s) && self.live_size[s] == 0 {
+                    self.kill_set(s as u32);
+                    fired = true;
+                }
+            }
+            // Forced sets: uncovered element with frequency 1 (or 0 = dead end).
+            for e in 0..self.inst.num_elements {
+                if self.covered.contains(e) {
+                    continue;
+                }
+                match self.freq[e] {
+                    0 => return false,
+                    1 => {
+                        let s = self.inst.element_sets[e]
+                            .iter()
+                            .copied()
+                            .find(|&t| self.alive.contains(t as usize))
+                            .expect("freq says one alive set");
+                        self.choose_set(s);
+                        fired = true;
+                    }
+                    _ => {}
+                }
+            }
+            if !fired {
+                return true;
+            }
+        }
+    }
+
+    /// Max-live-size alive set, smallest id on ties.
+    fn branch_set(&self) -> Option<u32> {
+        let mut best: Option<(u32, u32)> = None;
+        for s in self.alive.iter() {
+            let sz = self.live_size[s];
+            if sz > 0 && best.map_or(true, |(bs, _)| sz > bs) {
+                best = Some((sz, s as u32));
+            }
+        }
+        best.map(|(_, s)| s)
+    }
+
+    pub fn chosen_len(&self) -> usize {
+        self.chosen.len()
+    }
+
+    pub fn uncovered(&self) -> usize {
+        self.uncovered
+    }
+}
+
+impl SearchState for MscState {
+    type Sol = Vec<u32>;
+
+    fn evaluate(&mut self) -> NodeEval {
+        if !self.reduce() {
+            // Infeasible: prune unconditionally (leaf, no solution).
+            return NodeEval { children: 0, solution: None, bound: Cost::MAX };
+        }
+        if self.uncovered == 0 {
+            return NodeEval {
+                children: 0,
+                solution: Some(self.chosen.len() as Cost),
+                bound: self.chosen.len() as Cost,
+            };
+        }
+        let bs = self.branch_set().expect("uncovered elements have alive sets after reduce");
+        self.branch_stack.push(bs);
+        let max_sz = self.live_size[bs as usize] as u64;
+        NodeEval {
+            children: 2,
+            solution: None,
+            bound: self.chosen.len() as Cost + (self.uncovered as u64).div_ceil(max_sz),
+        }
+    }
+
+    fn apply(&mut self, k: u32) {
+        let bs = *self.branch_stack.last().expect("apply after evaluate");
+        self.frames.push(Frame { ledger_len: self.ledger.len(), branch_len: self.branch_stack.len() });
+        match k {
+            0 => self.choose_set(bs),
+            1 => self.kill_set(bs),
+            _ => panic!("binary tree: child {k} out of range"),
+        }
+    }
+
+    fn undo(&mut self) {
+        let f = self.frames.pop().expect("undo without apply");
+        self.rollback(f.ledger_len);
+        self.branch_stack.truncate(f.branch_len);
+    }
+
+    fn solution(&self) -> Vec<u32> {
+        self.chosen.clone()
+    }
+}
+
+impl Problem for DominatingSet {
+    type State = MscState;
+
+    fn make_state(&self) -> MscState {
+        let inst = std::sync::Arc::new(self.instance.clone());
+        let num_sets = inst.sets.len();
+        let live_size: Vec<u32> = inst.sets.iter().map(|s| s.len() as u32).collect();
+        let freq: Vec<u32> = inst.element_sets.iter().map(|s| s.len() as u32).collect();
+        MscState {
+            alive: BitSet::full(num_sets),
+            covered: BitSet::new(inst.num_elements),
+            live_size,
+            freq,
+            uncovered: inst.num_elements,
+            chosen: Vec::new(),
+            branch_stack: Vec::new(),
+            frames: Vec::new(),
+            ledger: Vec::new(),
+            inst,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("dominating-set/{}", self.instance.name)
+    }
+}
+
+/// Exhaustive minimum dominating set for tiny graphs (test oracle).
+pub fn brute_force_ds(g: &Graph) -> usize {
+    let n = g.num_vertices();
+    assert!(n <= 24);
+    let mut best = n;
+    'outer: for mask in 0u32..(1 << n) {
+        let size = mask.count_ones() as usize;
+        if size >= best {
+            continue;
+        }
+        for v in 0..n as u32 {
+            let dominated = mask & (1 << v) != 0
+                || g.neighbors(v).iter().any(|&u| mask & (1 << u) != 0);
+            if !dominated {
+                continue 'outer;
+            }
+        }
+        best = size;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::serial::solve_serial;
+    use crate::instances::generators;
+    use crate::Cost;
+
+    fn solve(g: &Graph) -> (Option<Cost>, Option<Vec<u32>>) {
+        let p = DominatingSet::new(g);
+        let r = solve_serial(&p, u64::MAX);
+        (r.best_cost, r.best_solution)
+    }
+
+    #[test]
+    fn star_dominated_by_center() {
+        let g = Graph::from_edges("star", 6, &[(0, 1), (0, 2), (0, 3), (0, 4), (0, 5)]).unwrap();
+        let (cost, sol) = solve(&g);
+        assert_eq!(cost, Some(1));
+        assert_eq!(sol.unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn path6_needs_two() {
+        let g =
+            Graph::from_edges("p6", 6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]).unwrap();
+        let (cost, sol) = solve(&g);
+        assert_eq!(cost, Some(2)); // e.g. {1, 4}
+        assert!(g.is_dominating_set(&sol.unwrap()));
+    }
+
+    #[test]
+    fn isolated_vertices_force_themselves() {
+        let g = Graph::from_edges("iso", 4, &[(0, 1)]).unwrap();
+        let (cost, sol) = solve(&g);
+        let sol = sol.unwrap();
+        assert_eq!(cost, Some(3)); // one of {0,1} + both isolated vertices
+        assert!(g.is_dominating_set(&sol));
+        assert!(sol.contains(&2) && sol.contains(&3));
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_graphs() {
+        for seed in 0..8u64 {
+            let n = 10 + (seed as usize % 5);
+            let m = n + 2 * (seed as usize);
+            let g = generators::gnm(n, m.min(n * (n - 1) / 2), seed + 100);
+            let expected = brute_force_ds(&g) as Cost;
+            let (cost, sol) = solve(&g);
+            assert_eq!(cost, Some(expected), "seed={seed}");
+            assert!(g.is_dominating_set(&sol.unwrap()), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn deterministic_tree() {
+        let g = generators::random_ds(14, 30, 7);
+        let p = DominatingSet::new(&g);
+        let a = solve_serial(&p, u64::MAX);
+        let b = solve_serial(&p, u64::MAX);
+        assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn set_cover_standalone() {
+        // U = {0..4}, sets: {0,1}, {2,3}, {4}, {0,1,2,3} -> optimum 2
+        let inst = SetCoverInstance::new(
+            "toy-msc",
+            5,
+            vec![vec![0, 1], vec![2, 3], vec![4], vec![0, 1, 2, 3]],
+        );
+        let p = DominatingSet::from_instance(inst);
+        let r = solve_serial(&p, u64::MAX);
+        assert_eq!(r.best_cost, Some(2));
+        let sol = r.best_solution.unwrap();
+        assert!(sol.contains(&2) && sol.contains(&3));
+    }
+
+    #[test]
+    fn infeasible_when_element_uncoverable() {
+        // Element 2 appears in no set: no cover exists.
+        let inst = SetCoverInstance::new("infeasible", 3, vec![vec![0], vec![1]]);
+        let p = DominatingSet::from_instance(inst);
+        let r = solve_serial(&p, u64::MAX);
+        assert_eq!(r.best_cost, None);
+    }
+
+    #[test]
+    fn state_undo_restores_exactly() {
+        use crate::engine::SearchState;
+        let g = generators::gnm(12, 26, 3);
+        let p = DominatingSet::new(&g);
+        let mut s = p.make_state();
+        let ev = s.evaluate();
+        if ev.children == 0 {
+            return; // degenerate; nothing to test
+        }
+        let unc0 = s.uncovered;
+        let chosen0 = s.chosen.len();
+        let alive0 = s.alive.len();
+        for k in [0u32, 1] {
+            s.apply(k);
+            s.evaluate();
+            s.undo();
+            assert_eq!(s.uncovered, unc0);
+            assert_eq!(s.chosen.len(), chosen0);
+            assert_eq!(s.alive.len(), alive0);
+        }
+    }
+}

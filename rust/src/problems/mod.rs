@@ -1,0 +1,27 @@
+//! Problem plug-ins (paper §V) — each is a [`crate::engine::Problem`]
+//! implementation with the paper's deterministic branching rules:
+//!
+//! * [`vertex_cover`] — branch on a max-degree vertex `v` (smallest id on
+//!   ties): left = `v` into the cover, right = `N(v)` into the cover;
+//!   degree-0/1 reduction rules; `ceil(m/Δ)` or greedy-matching bound.
+//! * [`dominating_set`] — solved by reduction to MINIMUM SET COVER
+//!   (Fomin–Grandoni–Kratsch style [4]): branch on a max-size set; forced-
+//!   set (unique-element) reduction; `ceil(uncovered/maxsize)` bound.
+//! * [`nqueens`] — N-QUEENS solution counting, the arbitrary-branching-
+//!   factor demonstration of §IV-C (one child per feasible column).
+//! * [`max_clique`] — MAX CLIQUE via VERTEX COVER on the complement graph
+//!   (the DIMACS `.clq` benchmarks are clique instances).
+//! * [`vertex_cover_k`] — the parameterized decision variant (cover ≤ k)
+//!   with budget pruning and the high-degree kernelization rule [3], [20].
+
+pub mod vertex_cover;
+pub mod vertex_cover_k;
+pub mod dominating_set;
+pub mod nqueens;
+pub mod max_clique;
+
+pub use dominating_set::DominatingSet;
+pub use max_clique::max_clique_via_vc;
+pub use nqueens::NQueens;
+pub use vertex_cover::{BoundKind, VertexCover};
+pub use vertex_cover_k::VertexCoverK;

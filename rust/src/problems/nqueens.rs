@@ -1,0 +1,175 @@
+//! N-QUEENS solution counting — the arbitrary-branching-factor exercise of
+//! the framework (§IV-C): each search-node has one child per feasible column
+//! in the next row (up to `n` children), so the generalized two-row index
+//! bookkeeping is on the hot path.
+//!
+//! The engine's `solutions` counter tallies complete placements; costs are
+//! constant (every solution reports cost `1`) so the incumbent machinery
+//! stays quiet after the first solution.
+
+use crate::engine::{NodeEval, Problem, SearchState};
+
+/// N-QUEENS on an `n × n` board (`n <= 32`).
+pub struct NQueens {
+    pub n: u32,
+}
+
+impl NQueens {
+    pub fn new(n: u32) -> Self {
+        assert!(n >= 1 && n <= 32);
+        NQueens { n }
+    }
+
+    /// Known solution counts for validation (OEIS A000170).
+    pub fn known_count(n: u32) -> Option<u64> {
+        [1, 1, 0, 0, 2, 10, 4, 40, 92, 352, 724, 2680, 14200, 73712, 365596]
+            .get(n as usize)
+            .copied()
+    }
+}
+
+/// Per-descend frame: column chosen and the feasible-list stack mark.
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    col: u32,
+    feas_len: usize,
+}
+
+pub struct QueensState {
+    n: u32,
+    /// Row currently being filled (= depth).
+    row: u32,
+    cols: u64,
+    diag1: u64, // row + col
+    diag2: u64, // row - col + n
+    /// Feasible-column lists pushed by each node's `evaluate`.
+    feasible: Vec<Vec<u32>>,
+    frames: Vec<Frame>,
+}
+
+impl QueensState {
+    #[inline]
+    fn is_free(&self, row: u32, col: u32) -> bool {
+        self.cols & (1 << col) == 0
+            && self.diag1 & (1 << (row + col)) == 0
+            && self.diag2 & (1 << (row + self.n - col)) == 0
+    }
+}
+
+impl SearchState for QueensState {
+    type Sol = u64;
+
+    fn evaluate(&mut self) -> NodeEval {
+        if self.row == self.n {
+            return NodeEval { children: 0, solution: Some(1), bound: 0 };
+        }
+        // Children = feasible columns in this row, in column order (§II:
+        // deterministic, well-ordered child generation).
+        let feas: Vec<u32> = (0..self.n).filter(|&c| self.is_free(self.row, c)).collect();
+        let children = feas.len() as u32;
+        self.feasible.push(feas);
+        NodeEval { children, solution: None, bound: 0 }
+    }
+
+    fn apply(&mut self, k: u32) {
+        let feas = self.feasible.last().expect("apply after evaluate");
+        let col = feas[k as usize];
+        self.frames.push(Frame { col, feas_len: self.feasible.len() });
+        self.cols |= 1 << col;
+        self.diag1 |= 1 << (self.row + col);
+        self.diag2 |= 1 << (self.row + self.n - col);
+        self.row += 1;
+    }
+
+    fn undo(&mut self) {
+        let f = self.frames.pop().expect("undo without apply");
+        self.row -= 1;
+        let col = f.col;
+        self.cols &= !(1 << col);
+        self.diag1 &= !(1 << (self.row + col));
+        self.diag2 &= !(1 << (self.row + self.n - col));
+        self.feasible.truncate(f.feas_len);
+    }
+
+    fn solution(&self) -> u64 {
+        1
+    }
+}
+
+impl Problem for NQueens {
+    type State = QueensState;
+
+    fn make_state(&self) -> QueensState {
+        QueensState {
+            n: self.n,
+            row: 0,
+            cols: 0,
+            diag1: 0,
+            diag2: 0,
+            feasible: Vec::with_capacity(self.n as usize + 1),
+            frames: Vec::with_capacity(self.n as usize),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("nqueens-{}", self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::serial::solve_serial;
+    use crate::runner::{self, RunConfig};
+
+    #[test]
+    fn counts_match_oeis_serial() {
+        for n in 1..=9u32 {
+            let p = NQueens::new(n);
+            let r = solve_serial(&p, u64::MAX);
+            assert_eq!(r.stats.solutions, NQueens::known_count(n).unwrap(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn no_solution_boards_report_none_found() {
+        let p = NQueens::new(3);
+        let r = solve_serial(&p, u64::MAX);
+        assert_eq!(r.stats.solutions, 0);
+        assert_eq!(r.best_cost, None);
+    }
+
+    #[test]
+    fn counts_match_in_parallel() {
+        // Arbitrary branching factor through the full parallel protocol.
+        for workers in [2usize, 4] {
+            let p = NQueens::new(8);
+            let r = runner::solve(&p, &RunConfig { workers, ..Default::default() });
+            assert_eq!(r.total_solutions(), 92, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn undo_restores_masks() {
+        use crate::engine::SearchState;
+        let p = NQueens::new(6);
+        let mut s = p.make_state();
+        let ev = s.evaluate();
+        assert_eq!(ev.children, 6);
+        s.apply(2);
+        s.evaluate();
+        s.undo();
+        assert_eq!(s.cols, 0);
+        assert_eq!(s.diag1, 0);
+        assert_eq!(s.diag2, 0);
+        assert_eq!(s.row, 0);
+    }
+
+    #[test]
+    fn parallel_node_count_matches_serial() {
+        let p = NQueens::new(7);
+        let serial = solve_serial(&p, u64::MAX);
+        let r = runner::solve(&p, &RunConfig { workers: 3, ..Default::default() });
+        assert_eq!(r.total_nodes(), serial.stats.nodes);
+    }
+}

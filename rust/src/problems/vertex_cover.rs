@@ -1,0 +1,379 @@
+//! VERTEX COVER (paper §V).
+//!
+//! Branching (binary, deterministic): pick the active vertex `v` of maximum
+//! degree, smallest id on ties.  Left child: `v` joins the cover.  Right
+//! child: all of `N(v)` joins the cover (any cover missing `v` must contain
+//! all its neighbours).  Reduction rules applied at every node, in id order
+//! (determinism, §II):
+//!
+//! * degree-0 vertices leave the graph (never in an optimal cover);
+//! * degree-1 vertices force their unique neighbour into the cover.
+//!
+//! Lower bounds for incumbent pruning (`|cover| + LB >= best` cuts the
+//! subtree): `ceil(m/Δ)` (cheap, the default — every vertex covers at most
+//! Δ edges) or a greedy maximal matching (stronger but O(m) per node; the
+//! A1/hotpath benches quantify the trade — the paper's §III-D "butterfly
+//! effect" of per-node overhead).
+
+use crate::engine::{NodeEval, Problem, SearchState};
+use crate::graph::{Graph, HybridGraph};
+use crate::Cost;
+
+/// Which lower bound `evaluate` computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BoundKind {
+    /// No bound (pure enumeration; the 60-cell-like behaviour).
+    None,
+    /// `ceil(m / Δ)` — O(active) per node.
+    #[default]
+    EdgesOverMaxDeg,
+    /// Greedy maximal matching — O(m) per node, tighter.
+    Matching,
+}
+
+/// The VERTEX COVER problem over an input graph.
+pub struct VertexCover {
+    graph: Graph,
+    bound: BoundKind,
+}
+
+impl VertexCover {
+    pub fn new(graph: &Graph) -> Self {
+        VertexCover { graph: graph.clone(), bound: BoundKind::default() }
+    }
+
+    pub fn with_bound(graph: &Graph, bound: BoundKind) -> Self {
+        VertexCover { graph: graph.clone(), bound }
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+}
+
+/// Per-descend frame: everything `undo` needs to revert one level.
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    graph_cp: usize,
+    cover_len: usize,
+    branch_len: usize,
+}
+
+/// Search state: hybrid graph + partial cover + branch-vertex stack.
+pub struct VcState {
+    h: HybridGraph,
+    cover: Vec<u32>,
+    /// Branch vertex pushed by each non-leaf node's `evaluate`.
+    branch_stack: Vec<u32>,
+    frames: Vec<Frame>,
+    bound: BoundKind,
+}
+
+impl VcState {
+    /// Apply reduction rules until fixpoint. Deterministic: scans ids in
+    /// increasing order, repeats until no rule fires.  Allocation-free:
+    /// iterates raw ids against the active bitset (§III-D butterfly effect —
+    /// this runs once per node visit; see EXPERIMENTS.md §Perf).
+    fn reduce(&mut self) {
+        let n = self.h.num_vertices() as u32;
+        // Counter-gated: the scan runs only while a degree-0/1 vertex
+        // exists — the common case deep in the tree is zero scans.
+        while self.h.has_low_degree() {
+            let mut fired = false;
+            for v in 0..n {
+                if !self.h.is_active(v) {
+                    continue;
+                }
+                match self.h.degree(v) {
+                    0 => {
+                        self.h.remove_vertex(v);
+                        fired = true;
+                    }
+                    1 => {
+                        let u = self.h.neighbors(v).next().expect("degree-1 vertex has a neighbor");
+                        self.cover.push(u);
+                        self.h.remove_vertex(u);
+                        self.h.remove_vertex(v); // now degree 0
+                        fired = true;
+                    }
+                    _ => {}
+                }
+            }
+            debug_assert!(fired, "low-degree counter set but no rule fired");
+            if !fired {
+                return;
+            }
+        }
+    }
+
+    fn lower_bound_with(&self, max_deg: u32) -> Cost {
+        let m = self.h.num_edges() as u64;
+        if m == 0 {
+            return 0;
+        }
+        match self.bound {
+            BoundKind::None => 1,
+            BoundKind::EdgesOverMaxDeg => m.div_ceil(max_deg as u64),
+            BoundKind::Matching => self.h.greedy_matching_size() as u64,
+        }
+    }
+
+    /// Active-vertex mask access (XLA frontier export).
+    pub fn graph_view(&self) -> &HybridGraph {
+        &self.h
+    }
+
+    /// Force `v` into the cover (used by the parameterized variant's
+    /// high-degree rule; recorded on the current undo region).
+    pub fn force_into_cover(&mut self, v: u32) {
+        debug_assert!(self.h.is_active(v));
+        self.cover.push(v);
+        self.h.remove_vertex(v);
+    }
+
+    pub fn cover_size(&self) -> usize {
+        self.cover.len()
+    }
+}
+
+impl SearchState for VcState {
+    type Sol = Vec<u32>;
+
+    fn evaluate(&mut self) -> NodeEval {
+        self.reduce();
+        if self.h.num_edges() == 0 {
+            // Edgeless: the partial cover is a complete solution.
+            return NodeEval {
+                children: 0,
+                solution: Some(self.cover.len() as Cost),
+                bound: self.cover.len() as Cost,
+            };
+        }
+        // One fused scan finds the branch vertex AND the max degree the
+        // cheap bound needs (was two scans + an alloc; see §Perf).
+        let (bv, max_deg) = self.h.max_degree_vertex_and_degree().expect("edges exist");
+        self.branch_stack.push(bv);
+        NodeEval {
+            children: 2,
+            solution: None,
+            bound: self.cover.len() as Cost + self.lower_bound_with(max_deg),
+        }
+    }
+
+    fn apply(&mut self, k: u32) {
+        let bv = *self.branch_stack.last().expect("apply after evaluate");
+        self.frames.push(Frame {
+            graph_cp: self.h.checkpoint(),
+            cover_len: self.cover.len(),
+            branch_len: self.branch_stack.len(),
+        });
+        match k {
+            0 => {
+                // v into the cover.
+                self.cover.push(bv);
+                self.h.remove_vertex(bv);
+            }
+            1 => {
+                // N(v) into the cover; v leaves the graph uncovered.
+                let neigh: Vec<u32> = self.h.neighbors(bv).collect();
+                for u in neigh {
+                    self.cover.push(u);
+                    self.h.remove_vertex(u);
+                }
+                self.h.remove_vertex(bv);
+            }
+            _ => panic!("binary tree: child {k} out of range"),
+        }
+    }
+
+    fn undo(&mut self) {
+        let f = self.frames.pop().expect("undo without apply");
+        self.h.rollback(f.graph_cp);
+        self.cover.truncate(f.cover_len);
+        self.branch_stack.truncate(f.branch_len);
+    }
+
+    fn solution(&self) -> Vec<u32> {
+        self.cover.clone()
+    }
+}
+
+impl Problem for VertexCover {
+    type State = VcState;
+
+    fn make_state(&self) -> VcState {
+        VcState {
+            h: HybridGraph::new(&self.graph),
+            cover: Vec::with_capacity(self.graph.num_vertices()),
+            branch_stack: Vec::with_capacity(64),
+            frames: Vec::with_capacity(64),
+            bound: self.bound,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("vertex-cover/{}", self.graph.name)
+    }
+}
+
+/// Exhaustive minimum vertex cover for tiny graphs (test oracle).
+pub fn brute_force_vc(g: &Graph) -> usize {
+    let n = g.num_vertices();
+    assert!(n <= 24, "brute force only for tiny graphs");
+    let edges = g.edges();
+    let mut best = n;
+    for mask in 0u32..(1 << n) {
+        let size = mask.count_ones() as usize;
+        if size >= best {
+            continue;
+        }
+        if edges.iter().all(|&(u, v)| mask & (1 << u) != 0 || mask & (1 << v) != 0) {
+            best = size;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::serial::solve_serial;
+    use crate::instances::generators;
+    use crate::Cost;
+
+    fn solve(g: &Graph) -> (Option<Cost>, Option<Vec<u32>>) {
+        let p = VertexCover::new(g);
+        let r = solve_serial(&p, u64::MAX);
+        (r.best_cost, r.best_solution)
+    }
+
+    #[test]
+    fn triangle_needs_two() {
+        let g = Graph::from_edges("tri", 3, &[(0, 1), (1, 2), (0, 2)]).unwrap();
+        let (cost, sol) = solve(&g);
+        assert_eq!(cost, Some(2));
+        assert!(g.is_vertex_cover(&sol.unwrap()));
+    }
+
+    #[test]
+    fn path_reductions_solve_without_branching() {
+        // P4: degree-1 rule alone solves it (cover {1, 2} or {1, 3}).
+        let g = Graph::from_edges("p4", 4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        let p = VertexCover::new(&g);
+        let r = solve_serial(&p, u64::MAX);
+        assert_eq!(r.best_cost, Some(2));
+        assert_eq!(r.stats.nodes, 1, "reductions solve P4 at the root");
+        assert!(g.is_vertex_cover(&r.best_solution.unwrap()));
+    }
+
+    #[test]
+    fn star_needs_one() {
+        let g = Graph::from_edges("star", 6, &[(0, 1), (0, 2), (0, 3), (0, 4), (0, 5)]).unwrap();
+        let (cost, sol) = solve(&g);
+        assert_eq!(cost, Some(1));
+        assert_eq!(sol.unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn empty_graph_zero_cover() {
+        let g = Graph::from_edges("none", 5, &[]).unwrap();
+        let (cost, sol) = solve(&g);
+        assert_eq!(cost, Some(0));
+        assert!(sol.unwrap().is_empty());
+    }
+
+    #[test]
+    fn complete_graph_needs_all_but_one() {
+        let mut edges = Vec::new();
+        for u in 0..6u32 {
+            for v in (u + 1)..6 {
+                edges.push((u, v));
+            }
+        }
+        let g = Graph::from_edges("k6", 6, &edges).unwrap();
+        let (cost, _) = solve(&g);
+        assert_eq!(cost, Some(5));
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_graphs() {
+        for seed in 0..8u64 {
+            let n = 12 + (seed as usize % 5);
+            let m = (n * (n - 1) / 2).min(2 * n + seed as usize);
+            let g = generators::gnm(n, m, seed);
+            let expected = brute_force_vc(&g) as Cost;
+            let (cost, sol) = solve(&g);
+            assert_eq!(cost, Some(expected), "seed={seed} n={n} m={m}");
+            let sol = sol.unwrap();
+            assert!(g.is_vertex_cover(&sol), "seed={seed}");
+            assert_eq!(sol.len() as Cost, expected);
+        }
+    }
+
+    #[test]
+    fn all_bounds_agree() {
+        for bound in [BoundKind::None, BoundKind::EdgesOverMaxDeg, BoundKind::Matching] {
+            let g = generators::gnm(16, 40, 3);
+            let p = VertexCover::with_bound(&g, bound);
+            let r = solve_serial(&p, u64::MAX);
+            assert_eq!(r.best_cost, Some(brute_force_vc(&g) as Cost), "{bound:?}");
+        }
+    }
+
+    #[test]
+    fn stronger_bounds_visit_fewer_nodes() {
+        let g = generators::gnm(20, 60, 5);
+        let nodes = |b| {
+            let p = VertexCover::with_bound(&g, b);
+            solve_serial(&p, u64::MAX).stats.nodes
+        };
+        let none = nodes(BoundKind::None);
+        let cheap = nodes(BoundKind::EdgesOverMaxDeg);
+        let matching = nodes(BoundKind::Matching);
+        assert!(cheap <= none, "ceil(m/Δ) prunes: {cheap} <= {none}");
+        assert!(matching <= none, "matching prunes: {matching} <= {none}");
+    }
+
+    #[test]
+    fn deterministic_tree() {
+        let g = generators::gnm(18, 50, 9);
+        let p = VertexCover::new(&g);
+        let a = solve_serial(&p, u64::MAX);
+        let b = solve_serial(&p, u64::MAX);
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.best_cost, b.best_cost);
+    }
+
+    #[test]
+    fn state_undo_restores_exactly() {
+        use crate::engine::SearchState;
+        let g = generators::gnm(20, 70, 2);
+        let p = VertexCover::new(&g);
+        let mut s = p.make_state();
+        let ev = s.evaluate();
+        assert_eq!(ev.children, 2);
+        let edges0 = s.h.num_edges();
+        let cover0 = s.cover.len();
+        s.apply(0);
+        s.evaluate();
+        s.undo();
+        assert_eq!(s.h.num_edges(), edges0);
+        assert_eq!(s.cover.len(), cover0);
+        s.apply(1);
+        s.evaluate();
+        s.undo();
+        assert_eq!(s.h.num_edges(), edges0);
+        assert_eq!(s.cover.len(), cover0);
+    }
+
+    #[test]
+    fn cell60_like_cover_size() {
+        // 4-regular circulant on 24 vertices: every vertex covers 4 of the
+        // 48 edges, so LB = 12; regular structure means OPT is close to 2n/3.
+        let g = generators::cell60_like(24);
+        let (cost, sol) = solve(&g);
+        let c = cost.unwrap();
+        assert!(g.is_vertex_cover(&sol.unwrap()));
+        assert!((12..=16).contains(&c), "got {c}");
+    }
+}

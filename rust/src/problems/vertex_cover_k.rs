@@ -1,0 +1,172 @@
+//! Parameterized (decision) VERTEX COVER — the FPT variant the paper's
+//! lineage targets (refs [3], [20]: `O(kn + 1.2738^k)`-style algorithms):
+//! *is there a cover of size ≤ k?*
+//!
+//! Implemented as a wrapper over the optimization state with two extra
+//! rules the budget enables:
+//!
+//! * **budget pruning** — any node with `|cover| + LB > k` is cut with an
+//!   infinite bound;
+//! * **high-degree rule** (the classic kernelization step): a vertex with
+//!   degree > remaining budget must be in the cover (otherwise all its
+//!   > budget neighbours would be).
+//!
+//! The search stops improving below `k+1` automatically, so the engine's
+//! incumbent machinery handles the decision semantics: answer = "yes" iff
+//! the run reports any solution.
+
+use crate::engine::{NodeEval, Problem, SearchState};
+use crate::graph::Graph;
+use crate::problems::vertex_cover::{VcState, VertexCover};
+use crate::Cost;
+
+/// Decision problem: cover of size ≤ k.
+pub struct VertexCoverK {
+    inner: VertexCover,
+    pub k: u64,
+}
+
+impl VertexCoverK {
+    pub fn new(graph: &Graph, k: u64) -> Self {
+        VertexCoverK { inner: VertexCover::new(graph), k }
+    }
+
+    /// Convenience: run serially and report the decision.
+    pub fn decide_serial(graph: &Graph, k: u64) -> bool {
+        let p = VertexCoverK::new(graph, k);
+        crate::engine::serial::solve_serial(&p, u64::MAX).best_cost.is_some()
+    }
+}
+
+pub struct VcKState {
+    inner: VcState,
+    k: u64,
+}
+
+impl SearchState for VcKState {
+    type Sol = Vec<u32>;
+
+    fn evaluate(&mut self) -> NodeEval {
+        // High-degree rule: repeatedly force any vertex whose degree exceeds
+        // the remaining budget into the cover. Applied as extra reductions
+        // *before* the inner evaluation so the branch vertex is chosen on
+        // the kernelized graph. Determinism: smallest id first.
+        loop {
+            let budget = self.k.saturating_sub(self.inner.cover_size() as u64);
+            let Some(v) = self
+                .inner
+                .graph_view()
+                .active_vertices()
+                .find(|&v| self.inner.graph_view().degree(v) as u64 > budget)
+            else {
+                break;
+            };
+            if budget == 0 {
+                break; // no budget left; inner bound will cut below
+            }
+            self.inner.force_into_cover(v);
+        }
+
+        let mut ev = self.inner.evaluate();
+        // Budget pruning: decision semantics.
+        if let Some(cost) = ev.solution {
+            if cost > self.k {
+                ev.solution = None;
+                ev.bound = Cost::MAX;
+            }
+        } else if ev.bound > self.k {
+            ev.bound = Cost::MAX;
+        }
+        ev
+    }
+
+    fn apply(&mut self, child: u32) {
+        self.inner.apply(child)
+    }
+
+    fn undo(&mut self) {
+        self.inner.undo()
+    }
+
+    fn solution(&self) -> Vec<u32> {
+        self.inner.solution()
+    }
+}
+
+impl Problem for VertexCoverK {
+    type State = VcKState;
+
+    fn make_state(&self) -> VcKState {
+        VcKState { inner: self.inner.make_state(), k: self.k }
+    }
+
+    fn name(&self) -> String {
+        format!("{}-k{}", self.inner.name(), self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::serial::solve_serial;
+    use crate::instances::generators;
+    use crate::problems::vertex_cover::brute_force_vc;
+    use crate::runner::{self, RunConfig};
+
+    #[test]
+    fn decision_matches_optimum_threshold() {
+        for seed in 0..6u64 {
+            let n = 12 + (seed as usize % 4);
+            let g = generators::gnm(n, 2 * n, seed + 50);
+            let opt = brute_force_vc(&g) as u64;
+            assert!(VertexCoverK::decide_serial(&g, opt), "k = OPT must be yes (seed {seed})");
+            if opt > 0 {
+                assert!(
+                    !VertexCoverK::decide_serial(&g, opt - 1),
+                    "k = OPT-1 must be no (seed {seed})"
+                );
+            }
+            assert!(VertexCoverK::decide_serial(&g, n as u64), "k = n is always yes");
+        }
+    }
+
+    #[test]
+    fn budget_pruning_shrinks_tree() {
+        let g = generators::gnm(40, 200, 7);
+        let opt = solve_serial(&VertexCover::new(&g), u64::MAX).best_cost.unwrap();
+        let unbounded = solve_serial(&VertexCover::new(&g), u64::MAX).stats.nodes;
+        let tight = solve_serial(&VertexCoverK::new(&g, opt), u64::MAX).stats.nodes;
+        assert!(
+            tight <= unbounded,
+            "k-budget tree {tight} should not exceed optimization tree {unbounded}"
+        );
+        // An infeasible budget dies fast.
+        let infeasible = solve_serial(&VertexCoverK::new(&g, opt / 2), u64::MAX);
+        assert!(infeasible.best_cost.is_none());
+        assert!(infeasible.stats.nodes < unbounded);
+    }
+
+    #[test]
+    fn parallel_decision_agrees() {
+        let g = generators::gnm(30, 140, 3);
+        let opt = solve_serial(&VertexCover::new(&g), u64::MAX).best_cost.unwrap();
+        let p_yes = VertexCoverK::new(&g, opt);
+        let r = runner::solve(&p_yes, &RunConfig { workers: 4, ..Default::default() });
+        assert!(r.best_cost.is_some());
+        assert!(r.best_cost.unwrap() <= opt);
+
+        let p_no = VertexCoverK::new(&g, opt - 1);
+        let r = runner::solve(&p_no, &RunConfig { workers: 4, ..Default::default() });
+        assert!(r.best_cost.is_none());
+    }
+
+    #[test]
+    fn witness_is_a_valid_cover_within_budget() {
+        let g = generators::gnm(25, 100, 9);
+        let opt = solve_serial(&VertexCover::new(&g), u64::MAX).best_cost.unwrap();
+        let r = solve_serial(&VertexCoverK::new(&g, opt + 2), u64::MAX);
+        let sol = r.best_solution.unwrap();
+        assert!(g.is_vertex_cover(&sol));
+        assert!(sol.len() as u64 <= opt + 2);
+    }
+}

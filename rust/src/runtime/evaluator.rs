@@ -1,0 +1,206 @@
+//! The XLA batched frontier evaluator — the three-layer integration point.
+//!
+//! Wraps one compiled `(n, b)` variant of the L2 `frontier_eval` program
+//! (L1 Pallas masked-degree kernel inside).  The coordinator's accelerated
+//! mode batches up to `b` frontier search-nodes (active-vertex masks),
+//! pads the instance adjacency to `n`, and gets back per-node degrees,
+//! the deterministic branching vertex, remaining edge count and the
+//! `ceil(m/Δ)` bound — bit-identical to the rust-native evaluation (pinned
+//! by `rust/tests/runtime_xla.rs`).
+
+use crate::graph::Graph;
+use crate::util::BitSet;
+use anyhow::{bail, Context, Result};
+
+/// Result of one batched evaluation.
+#[derive(Debug, Clone)]
+pub struct FrontierBatch {
+    pub b: usize,
+    pub n: usize,
+    /// Row-major `[b, n]` induced degrees.
+    pub degrees: Vec<f32>,
+    /// `[b]` branch vertex (max degree, smallest id; 0 when edgeless).
+    pub branch_vertex: Vec<i32>,
+    /// `[b]` remaining edges.
+    pub num_edges: Vec<f32>,
+    /// `[b]` `ceil(m/Δ)` lower bound (0 when edgeless).
+    pub lower_bound: Vec<f32>,
+}
+
+/// A compiled frontier evaluator for a fixed padded size `(n, b)`.
+pub struct XlaEvaluator {
+    exe: xla::PjRtLoadedExecutable,
+    n: usize,
+    b: usize,
+}
+
+impl XlaEvaluator {
+    /// Compile the given HLO text artifact for padded size `(n, b)`.
+    pub fn load(client: &xla::PjRtClient, path: &str, n: usize, b: usize) -> Result<Self> {
+        let exe = super::compile_hlo_text(client, path)?;
+        Ok(XlaEvaluator { exe, n, b })
+    }
+
+    /// Pick the smallest artifact variant in `dir` that fits a graph of
+    /// `n_vertices` vertices.
+    pub fn from_artifacts_dir(
+        client: &xla::PjRtClient,
+        dir: &str,
+        n_vertices: usize,
+    ) -> Result<Self> {
+        let variants = super::discover_variants(dir)?;
+        let (n, b, path) = variants
+            .into_iter()
+            .find(|(n, _, _)| *n >= n_vertices)
+            .with_context(|| format!("no artifact variant fits n={n_vertices} in {dir}"))?;
+        Self::load(client, &path, n, b)
+    }
+
+    pub fn padded_n(&self) -> usize {
+        self.n
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.b
+    }
+
+    /// Build the padded row-major `[n, n]` adjacency for `g`.
+    pub fn padded_adjacency(&self, g: &Graph) -> Result<Vec<f32>> {
+        let nv = g.num_vertices();
+        if nv > self.n {
+            bail!("graph has {nv} vertices; evaluator padded to {}", self.n);
+        }
+        let mut adj = vec![0f32; self.n * self.n];
+        for (u, v) in g.edges() {
+            adj[u as usize * self.n + v as usize] = 1.0;
+            adj[v as usize * self.n + u as usize] = 1.0;
+        }
+        Ok(adj)
+    }
+
+    /// Build the padded `[b, n]` mask block from active-vertex sets (spare
+    /// batch rows are zero = edgeless, harmless).
+    pub fn padded_masks(&self, masks: &[&BitSet]) -> Result<Vec<f32>> {
+        if masks.len() > self.b {
+            bail!("{} masks exceed batch size {}", masks.len(), self.b);
+        }
+        let mut out = vec![0f32; self.b * self.n];
+        for (row, m) in masks.iter().enumerate() {
+            if m.capacity() > self.n {
+                bail!("mask capacity {} exceeds padded n {}", m.capacity(), self.n);
+            }
+            for v in m.iter() {
+                out[row * self.n + v] = 1.0;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Execute one batch: `adj` is `[n, n]`, `masks` is `[b, n]`, both
+    /// row-major f32 (use the `padded_*` helpers).
+    pub fn eval(&self, adj: &[f32], masks: &[f32]) -> Result<FrontierBatch> {
+        if adj.len() != self.n * self.n {
+            bail!("adj len {} != n*n {}", adj.len(), self.n * self.n);
+        }
+        if masks.len() != self.b * self.n {
+            bail!("masks len {} != b*n {}", masks.len(), self.b * self.n);
+        }
+        let adj_lit = xla::Literal::vec1(adj).reshape(&[self.n as i64, self.n as i64])?;
+        let masks_lit = xla::Literal::vec1(masks).reshape(&[self.b as i64, self.n as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[adj_lit, masks_lit])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: a 4-tuple.
+        let (deg, bv, m, lb) = result.to_tuple4()?;
+        Ok(FrontierBatch {
+            b: self.b,
+            n: self.n,
+            degrees: deg.to_vec::<f32>()?,
+            branch_vertex: bv.to_vec::<i32>()?,
+            num_edges: m.to_vec::<f32>()?,
+            lower_bound: lb.to_vec::<f32>()?,
+        })
+    }
+}
+
+/// Rust-native reference of the same computation (the parity oracle and the
+/// default hot path): evaluate one mask against the padded adjacency.
+pub fn native_frontier_eval(adj: &[f32], n: usize, mask: &BitSet) -> (Vec<f32>, i32, f32, f32) {
+    let mut degrees = vec![0f32; n];
+    for v in mask.iter() {
+        let mut d = 0f32;
+        let row = &adj[v * n..(v + 1) * n];
+        for u in mask.iter() {
+            d += row[u];
+        }
+        degrees[v] = d;
+    }
+    let mut bv = 0i32;
+    let mut maxd = f32::MIN;
+    let mut m2 = 0f32;
+    for (v, &d) in degrees.iter().enumerate() {
+        m2 += d;
+        if d > maxd {
+            maxd = d;
+            bv = v as i32;
+        }
+    }
+    let m = m2 / 2.0;
+    let lb = if maxd > 0.0 { (m / maxd).ceil() } else { 0.0 };
+    (degrees, bv, m, lb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instances::generators;
+
+    #[test]
+    fn native_eval_matches_hand_example() {
+        // path 0-1-2-3 padded to n=8
+        let n = 8;
+        let mut adj = vec![0f32; n * n];
+        for (u, v) in [(0, 1), (1, 2), (2, 3)] {
+            adj[u * n + v] = 1.0;
+            adj[v * n + u] = 1.0;
+        }
+        let mask = BitSet::full(n);
+        let (deg, bv, m, lb) = native_frontier_eval(&adj, n, &mask);
+        assert_eq!(deg[0], 1.0);
+        assert_eq!(deg[1], 2.0);
+        assert_eq!(bv, 1);
+        assert_eq!(m, 3.0);
+        assert_eq!(lb, 2.0);
+    }
+
+    #[test]
+    fn native_eval_respects_mask() {
+        let n = 4;
+        let mut adj = vec![0f32; n * n];
+        adj[0 * n + 1] = 1.0;
+        adj[1 * n + 0] = 1.0;
+        let mut mask = BitSet::full(n);
+        mask.remove(1);
+        let (deg, bv, m, lb) = native_frontier_eval(&adj, n, &mask);
+        assert_eq!(deg, vec![0.0; 4]);
+        assert_eq!(bv, 0);
+        assert_eq!(m, 0.0);
+        assert_eq!(lb, 0.0);
+    }
+
+    #[test]
+    fn padded_adjacency_shape() {
+        // Without a compiled executable we can still test the padding
+        // helpers through a fake-size evaluator is impossible (needs PJRT),
+        // so exercise the free function paths used by them.
+        let g = generators::gnm(10, 20, 1);
+        let edges = g.edges();
+        let n = 16;
+        let mut adj = vec![0f32; n * n];
+        for (u, v) in edges {
+            adj[u as usize * n + v as usize] = 1.0;
+            adj[v as usize * n + u as usize] = 1.0;
+        }
+        let ones: f32 = adj.iter().sum();
+        assert_eq!(ones, 40.0);
+    }
+}

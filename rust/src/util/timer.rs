@@ -1,0 +1,113 @@
+//! Wall-clock timing helpers (the offline crate set has no `criterion`;
+//! benches use these directly).
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Run `f` repeatedly until `min_time` has elapsed (at least `min_iters`),
+/// returning (mean, min, iterations).  A no-frills criterion substitute.
+pub fn bench<F: FnMut()>(min_time: Duration, min_iters: usize, mut f: F) -> BenchResult {
+    // Warmup.
+    f();
+    let mut iters = 0usize;
+    let mut total = Duration::ZERO;
+    let mut best = Duration::MAX;
+    while total < min_time || iters < min_iters {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed();
+        total += dt;
+        best = best.min(dt);
+        iters += 1;
+        if iters > 1_000_000 {
+            break;
+        }
+    }
+    BenchResult { mean: total / iters as u32, min: best, iters }
+}
+
+/// Result of [`bench`].
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub mean: Duration,
+    pub min: Duration,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Human-readable duration, paper style ("19.5hrs", "38min", "5.39min", "2.9s").
+pub fn human_duration(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{:.1}hrs", secs / 3600.0)
+    } else if secs >= 60.0 {
+        format!("{:.1}min", secs / 60.0)
+    } else if secs >= 1.0 {
+        format!("{:.2}s", secs)
+    } else {
+        format!("{:.2}ms", secs * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::new();
+        let a = sw.elapsed();
+        let b = sw.elapsed();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn bench_runs_min_iters() {
+        let mut n = 0;
+        let r = bench(Duration::from_millis(1), 5, || n += 1);
+        assert!(r.iters >= 5);
+        assert!(n >= 6); // warmup + iters
+        assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn human_duration_formats() {
+        assert_eq!(human_duration(7200.0), "2.0hrs");
+        assert_eq!(human_duration(90.0), "1.5min");
+        assert_eq!(human_duration(2.5), "2.50s");
+        assert_eq!(human_duration(0.0015), "1.50ms");
+    }
+}

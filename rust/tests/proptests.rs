@@ -1,0 +1,399 @@
+//! Property-based tests over the framework's core invariants, driven by the
+//! in-house `proptest_lite` harness (deterministic, seeded — see DESIGN.md
+//! "Substitutions" for why proptest itself is absent).
+//!
+//! The invariants here are the paper's correctness arguments:
+//!  1. GETHEAVIESTTASKINDEX/FIXINDEX (binary spec) ≡ the generalized
+//!     two-row bookkeeping on random binary trees;
+//!  2. donation partitions the tree: donor + all donated subtrees visit
+//!     every node exactly once, regardless of the donation schedule;
+//!  3. donated tasks are always the heaviest (shallowest) available;
+//!  4. CONVERTINDEX replay is exact: a stepper replayed at any reachable
+//!     index explores exactly the nodes of that subtree;
+//!  5. GETPARENT yields a tree over the ranks (no cycles, root 0);
+//!  6. parallel runs (message-pump, threads, simulator) conserve work and
+//!     agree with SERIAL-RB on the optimum for random VC instances;
+//!  7. hybrid-graph rollback restores the exact state under random
+//!     remove/rollback interleavings.
+
+use pbt::engine::serial::solve_serial;
+use pbt::engine::{NodeEval, Problem, SearchState, StepResult, Stepper};
+use pbt::graph::HybridGraph;
+use pbt::index::{binary, CurrentIndex, NodeIndex};
+use pbt::instances::generators;
+use pbt::problems::vertex_cover::{brute_force_vc, VertexCover};
+use pbt::runner::{self, RunConfig};
+use pbt::sim::{simulate, SimConfig};
+use pbt::testing::{Gen, Runner};
+use pbt::{prop_assert, Cost, COST_INF};
+
+/// A random-shape deterministic tree: child counts derived by hashing the
+/// path, so the tree is irregular but identical across replays.
+struct HashTree {
+    depth: usize,
+    max_children: u32,
+    salt: u64,
+}
+
+struct HashState {
+    path: Vec<u32>,
+    depth: usize,
+    max_children: u32,
+    salt: u64,
+}
+
+fn hash_path(path: &[u32], salt: u64) -> u64 {
+    let mut h = salt ^ 0x9E37_79B9_7F4A_7C15;
+    for &d in path {
+        h ^= d as u64;
+        h = h.wrapping_mul(0x100000001B3);
+        h ^= h >> 31;
+    }
+    h
+}
+
+impl SearchState for HashState {
+    type Sol = u64;
+
+    fn evaluate(&mut self) -> NodeEval {
+        if self.path.len() >= self.depth {
+            return NodeEval {
+                children: 0,
+                solution: Some(1 + hash_path(&self.path, self.salt) % 1000),
+                bound: 0,
+            };
+        }
+        let children = (hash_path(&self.path, self.salt) % (self.max_children as u64 + 1)) as u32;
+        if children == 0 {
+            // childless internal node: count as a non-solution leaf
+            return NodeEval { children: 0, solution: None, bound: 0 };
+        }
+        NodeEval { children, solution: None, bound: 0 }
+    }
+
+    fn apply(&mut self, k: u32) {
+        self.path.push(k);
+    }
+
+    fn undo(&mut self) {
+        self.path.pop();
+    }
+
+    fn solution(&self) -> u64 {
+        hash_path(&self.path, self.salt)
+    }
+}
+
+impl Problem for HashTree {
+    type State = HashState;
+
+    fn make_state(&self) -> HashState {
+        HashState { path: Vec::new(), depth: self.depth, max_children: self.max_children, salt: self.salt }
+    }
+
+    fn name(&self) -> String {
+        format!("hashtree-d{}-b{}-s{}", self.depth, self.max_children, self.salt)
+    }
+}
+
+fn run_to_end<P: Problem>(s: &mut Stepper<P>) -> (Cost, u64, u64) {
+    let mut best = COST_INF;
+    loop {
+        match s.step(best) {
+            StepResult::Progress { improved } => {
+                if let Some((c, _)) = improved {
+                    best = c;
+                }
+            }
+            StepResult::Exhausted => break,
+        }
+    }
+    (best, s.stats.nodes, s.stats.solutions)
+}
+
+#[test]
+fn prop_binary_spec_matches_generalized_bookkeeping() {
+    Runner::new(200, 11).run(|g| {
+        // Random binary descent with random interleaved donations.
+        let depth = g.usize_in(1, 12);
+        let mut ci = CurrentIndex::new(NodeIndex::root());
+        let mut spec: Vec<i32> = vec![1]; // paper arrays start with root digit 1
+        for _ in 0..depth {
+            let digit = g.u32_in(0, 2);
+            ci.push(digit, 2);
+            spec.push(digit as i32);
+            if g.bool(0.4) {
+                let from_spec = binary::get_heaviest_task_index(&mut spec).map(|mut t| {
+                    binary::fix_index(&mut t);
+                    binary::to_node_index(&t)
+                });
+                let from_ci = ci.donate_heaviest();
+                prop_assert!(
+                    from_spec == from_ci,
+                    "spec {from_spec:?} != generalized {from_ci:?}"
+                );
+            }
+        }
+        // Drain both donors completely.
+        loop {
+            let from_spec = binary::get_heaviest_task_index(&mut spec).map(|mut t| {
+                binary::fix_index(&mut t);
+                binary::to_node_index(&t)
+            });
+            let from_ci = ci.donate_heaviest();
+            prop_assert!(from_spec == from_ci, "drain {from_spec:?} != {from_ci:?}");
+            if from_ci.is_none() {
+                break;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_donation_partitions_tree() {
+    Runner::new(60, 22).run(|g| {
+        let p = HashTree {
+            depth: g.usize_in(3, 9),
+            max_children: g.u32_in(1, 4),
+            salt: g.seed(),
+        };
+        let serial = solve_serial(&p, u64::MAX);
+
+        // Donor runs with a random donation schedule; donated subtrees are
+        // themselves run with further random donations (one level deep).
+        let mut donor = Stepper::at_root(&p);
+        let mut tasks: Vec<NodeIndex> = Vec::new();
+        let mut nodes = 0u64;
+        let mut solutions = 0u64;
+        let mut best = COST_INF;
+        loop {
+            match donor.step(best) {
+                StepResult::Progress { improved } => {
+                    if let Some((c, _)) = improved {
+                        best = c;
+                    }
+                }
+                StepResult::Exhausted => break,
+            }
+            if g.bool(0.3) {
+                if let Some(idx) = donor.donate() {
+                    tasks.push(idx);
+                }
+            }
+        }
+        nodes += donor.stats.nodes;
+        solutions += donor.stats.solutions;
+
+        while let Some(idx) = tasks.pop() {
+            let mut w = Stepper::from_index(&p, &idx).expect("donated index is valid");
+            loop {
+                match w.step(best) {
+                    StepResult::Progress { improved } => {
+                        if let Some((c, _)) = improved {
+                            best = c;
+                        }
+                    }
+                    StepResult::Exhausted => break,
+                }
+                if g.bool(0.15) {
+                    if let Some(d) = w.donate() {
+                        tasks.push(d);
+                    }
+                }
+            }
+            nodes += w.stats.nodes;
+            solutions += w.stats.solutions;
+        }
+
+        prop_assert!(
+            nodes == serial.stats.nodes,
+            "visited {nodes} != serial {} (tree {})",
+            serial.stats.nodes,
+            p.name()
+        );
+        prop_assert!(
+            solutions == serial.stats.solutions,
+            "solutions {solutions} != serial {}",
+            serial.stats.solutions
+        );
+        prop_assert!(
+            best == serial.best_cost.unwrap_or(COST_INF),
+            "best {best} != serial {:?}",
+            serial.best_cost
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_donated_task_is_heaviest() {
+    Runner::new(80, 33).run(|g| {
+        let p = HashTree { depth: g.usize_in(3, 8), max_children: 3, salt: g.seed() };
+        let mut s = Stepper::at_root(&p);
+        let steps = g.usize_in(1, 60);
+        for _ in 0..steps {
+            if let StepResult::Exhausted = s.step(COST_INF) {
+                break;
+            }
+        }
+        // Whatever is donated first must be at least as shallow as anything
+        // donated afterwards at the same instant.
+        let mut prev_depth = 0usize;
+        while let Some(idx) = s.donate() {
+            prop_assert!(
+                idx.depth() >= prev_depth,
+                "donations got shallower: {} then {}",
+                prev_depth,
+                idx.depth()
+            );
+            prev_depth = idx.depth();
+            if g.bool(0.5) {
+                break;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_convert_index_replay_is_exact() {
+    Runner::new(60, 44).run(|g| {
+        let p = HashTree { depth: g.usize_in(3, 8), max_children: 3, salt: g.seed() };
+        // Walk serially, harvesting a random reachable index via donation.
+        let mut s = Stepper::at_root(&p);
+        for _ in 0..g.usize_in(1, 40) {
+            if let StepResult::Exhausted = s.step(COST_INF) {
+                return Ok(()); // tiny tree; nothing to replay
+            }
+        }
+        let Some(idx) = s.donate() else { return Ok(()) };
+
+        // Replay it twice; both runs must agree exactly.
+        let mut a = Stepper::from_index(&p, &idx).expect("valid");
+        let mut b = Stepper::from_index(&p, &idx).expect("valid");
+        let ra = run_to_end(&mut a);
+        let rb = run_to_end(&mut b);
+        prop_assert!(ra == rb, "replay disagrees: {ra:?} vs {rb:?}");
+        prop_assert!(a.stats == b.stats, "stats disagree");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_getparent_forms_tree() {
+    Runner::new(100, 55).run(|g| {
+        let c = g.usize_in(2, 2000);
+        let mut seen = 1usize;
+        for r in 1..c {
+            let parent = pbt::topology::get_parent(r, c);
+            prop_assert!(parent < r, "parent {parent} >= rank {r}");
+            seen += 1;
+        }
+        prop_assert!(seen == c, "not all ranks have parents");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_vc_agrees_with_serial_and_bruteforce() {
+    Runner::new(12, 66).run(|g| {
+        let n = g.usize_in(10, 17);
+        let max_m = n * (n - 1) / 2;
+        let m = g.usize_in(n, max_m.min(3 * n));
+        let seed = g.seed();
+        let graph = generators::gnm(n, m, seed);
+        let expected = brute_force_vc(&graph) as Cost;
+        let p = VertexCover::new(&graph);
+
+        let serial = solve_serial(&p, u64::MAX);
+        prop_assert!(
+            serial.best_cost == Some(expected),
+            "serial {:?} != brute force {expected} (n={n} m={m} seed={seed})",
+            serial.best_cost
+        );
+
+        let threads = runner::solve(&p, &RunConfig { workers: 3, ..Default::default() });
+        prop_assert!(
+            threads.best_cost == Some(expected),
+            "threads {:?} != {expected}",
+            threads.best_cost
+        );
+
+        let sim = simulate(&p, &SimConfig { cores: 5, ..Default::default() });
+        prop_assert!(sim.best_cost == Some(expected), "sim {:?} != {expected}", sim.best_cost);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hybrid_rollback_exact() {
+    Runner::new(60, 77).run(|g| {
+        let n = g.usize_in(8, 40);
+        let max_m = n * (n - 1) / 2;
+        let m = g.usize_in(1, max_m);
+        let graph = generators::gnm(n, m, g.seed());
+        let mut h = HybridGraph::new(&graph);
+
+        // Random interleaving of removals and nested rollbacks.
+        let mut checkpoints: Vec<(usize, usize, usize)> = Vec::new(); // (cp, active, edges)
+        for _ in 0..g.usize_in(1, 60) {
+            if g.bool(0.4) || checkpoints.is_empty() {
+                if h.num_active() == 0 {
+                    continue;
+                }
+                if g.bool(0.3) {
+                    checkpoints.push((h.checkpoint(), h.num_active(), h.num_edges()));
+                }
+                let actives: Vec<u32> = h.active_vertices().collect();
+                let v = actives[g.usize_in(0, actives.len())];
+                h.remove_vertex(v);
+            } else {
+                let (cp, active, edges) = checkpoints.pop().unwrap();
+                h.rollback(cp);
+                prop_assert!(
+                    h.num_active() == active && h.num_edges() == edges,
+                    "rollback mismatch: ({}, {}) != ({active}, {edges})",
+                    h.num_active(),
+                    h.num_edges()
+                );
+            }
+        }
+        // Final deep rollback to the initial state.
+        h.rollback(0);
+        prop_assert!(h.num_active() == n, "final active {}", h.num_active());
+        prop_assert!(h.num_edges() == m, "final edges {}", h.num_edges());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checkpoint_resume_conserves_work() {
+    Runner::new(40, 88).run(|g| {
+        let p = HashTree { depth: g.usize_in(3, 8), max_children: 3, salt: g.seed() };
+        let serial = solve_serial(&p, u64::MAX);
+
+        let mut s = Stepper::at_root(&p);
+        let pause_after = g.usize_in(0, serial.stats.nodes as usize + 1);
+        let mut visited = 0u64;
+        for _ in 0..pause_after {
+            match s.step(COST_INF) {
+                StepResult::Progress { .. } => visited += 1,
+                StepResult::Exhausted => break,
+            }
+        }
+        if s.is_exhausted() {
+            prop_assert!(visited == serial.stats.nodes, "exhausted early mismatch");
+            return Ok(());
+        }
+        let cp = s.checkpoint_bytes();
+        let mut resumed = Stepper::from_checkpoint(&p, &cp).expect("valid checkpoint");
+        let (_, nodes, _) = run_to_end(&mut resumed);
+        prop_assert!(
+            visited + nodes == serial.stats.nodes,
+            "paused {visited} + resumed {nodes} != serial {}",
+            serial.stats.nodes
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,134 @@
+//! Three-layer parity tests: the AOT-compiled XLA frontier evaluator
+//! (L1 Pallas kernel inside the L2 jax program, loaded via PJRT) against
+//! the rust-native reference on real instances.
+//!
+//! Requires `artifacts/` (run `make artifacts` first); tests self-skip with
+//! a message when artifacts are absent so `cargo test` stays green in a
+//! fresh checkout.
+
+use pbt::instances::generators;
+use pbt::runtime::evaluator::{native_frontier_eval, XlaEvaluator};
+use pbt::runtime::discover_variants;
+use pbt::util::BitSet;
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts", "../../artifacts"] {
+        if let Ok(v) = discover_variants(dir) {
+            if !v.is_empty() {
+                return Some(dir.to_string());
+            }
+        }
+    }
+    None
+}
+
+#[test]
+fn xla_evaluator_matches_native_on_random_masks() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return;
+    };
+    let client = xla::PjRtClient::cpu().expect("PJRT CPU client");
+    let g = generators::gnm(100, 800, 42);
+    let eval = XlaEvaluator::from_artifacts_dir(&client, &dir, g.num_vertices())
+        .expect("variant fits n=100");
+    let n = eval.padded_n();
+    let adj = eval.padded_adjacency(&g).unwrap();
+
+    // Random frontier masks over the real vertices.
+    let mut rng = pbt::util::Rng::new(7);
+    let mut masks = Vec::new();
+    for _ in 0..eval.batch_size().min(16) {
+        let mut m = BitSet::new(n);
+        for v in 0..g.num_vertices() {
+            if rng.gen_bool(0.8) {
+                m.insert(v);
+            }
+        }
+        masks.push(m);
+    }
+    let refs: Vec<&BitSet> = masks.iter().collect();
+    let packed = eval.padded_masks(&refs).unwrap();
+    let batch = eval.eval(&adj, &packed).expect("XLA execution");
+
+    for (row, mask) in masks.iter().enumerate() {
+        let (deg, bv, m, lb) = native_frontier_eval(&adj, n, mask);
+        assert_eq!(batch.branch_vertex[row], bv, "branch vertex row {row}");
+        assert_eq!(batch.num_edges[row], m, "edges row {row}");
+        assert_eq!(batch.lower_bound[row], lb, "bound row {row}");
+        for v in 0..n {
+            assert_eq!(
+                batch.degrees[row * n + v],
+                deg[v],
+                "degree mismatch at row {row} vertex {v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_evaluator_tie_break_is_smallest_id() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return;
+    };
+    let client = xla::PjRtClient::cpu().expect("PJRT CPU client");
+    // Two equal-degree stars; centre with the smaller id must win (§V).
+    let g = pbt::graph::Graph::from_edges(
+        "ties",
+        20,
+        &[(5, 10), (5, 11), (5, 12), (2, 15), (2, 16), (2, 17)],
+    )
+    .unwrap();
+    let eval = XlaEvaluator::from_artifacts_dir(&client, &dir, 20).unwrap();
+    let adj = eval.padded_adjacency(&g).unwrap();
+    let mut mask = BitSet::new(eval.padded_n());
+    for v in 0..20 {
+        mask.insert(v);
+    }
+    let packed = eval.padded_masks(&[&mask]).unwrap();
+    let batch = eval.eval(&adj, &packed).unwrap();
+    assert_eq!(batch.branch_vertex[0], 2);
+    assert_eq!(batch.num_edges[0], 6.0);
+}
+
+#[test]
+fn xla_evaluator_consistent_with_search_states() {
+    // Drive a real VC search a few nodes in, export its frontier masks,
+    // and check that XLA's branch vertex equals the vertex the rust
+    // engine actually branched on.
+    use pbt::engine::{SearchState, Stepper};
+    use pbt::problems::VertexCover;
+
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return;
+    };
+    let client = xla::PjRtClient::cpu().expect("PJRT CPU client");
+    let g = generators::gnm(60, 500, 3);
+    let p = VertexCover::new(&g);
+    let eval = XlaEvaluator::from_artifacts_dir(&client, &dir, g.num_vertices()).unwrap();
+    let adj = eval.padded_adjacency(&g).unwrap();
+
+    let mut stepper = Stepper::at_root(&p);
+    for _ in 0..5 {
+        stepper.step(pbt::COST_INF);
+    }
+    let state = stepper.state();
+    let h = state.graph_view();
+
+    // Export the current active mask.
+    let mut mask = BitSet::new(eval.padded_n());
+    for v in h.active_vertices() {
+        mask.insert(v as usize);
+    }
+    let packed = eval.padded_masks(&[&mask]).unwrap();
+    let batch = eval.eval(&adj, &packed).unwrap();
+
+    // The engine's next branch vertex for this state.
+    let expected = h.max_degree_vertex();
+    if let Some(bv) = expected {
+        assert_eq!(batch.branch_vertex[0] as u32, bv);
+        assert_eq!(batch.num_edges[0] as usize, h.num_edges());
+    }
+}
