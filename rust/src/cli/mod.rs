@@ -88,6 +88,13 @@ COMMANDS:
     solve       solve one instance with PARALLEL-RB on real threads
                   --problem vc|ds|queens  --instance <name|path.clq>  --workers N
                   --bound none|edges|matching  --config file.toml
+    cluster     multi-process PARALLEL-RB over TCP (see docs/WIRE_PROTOCOL.md)
+                  cluster listen --bind HOST:PORT --peers C  [solve flags]
+                  cluster join   --connect HOST:PORT [--advertise HOST]  [solve flags]
+                  cluster run    --peers C                   [solve flags]
+                (listen = rendezvous + rank 0; join = one extra rank;
+                 run = spawn C-1 local join processes and listen — the
+                 one-command localhost demo)
     simulate    virtual-time run on simulated cores
                   --problem vc|ds  --instance <name>  --cores N  --latency T  --batch B
     table1      regenerate Table I  (PARALLEL-VERTEX-COVER sweep)   [--scale 0|1|2] [--max-cores N]

@@ -29,13 +29,13 @@ impl LocalTransport {
             .map(|(rank, rx)| LocalTransport { rank, rx, txs: txs.clone() })
             .collect()
     }
-
-    pub fn rank(&self) -> Rank {
-        self.rank
-    }
 }
 
 impl Transport for LocalTransport {
+    fn rank(&self) -> Rank {
+        self.rank
+    }
+
     fn send(&self, to: Rank, msg: Message) {
         // A receiver that already exited only happens after global
         // termination; dropping the message is then harmless.

@@ -2,12 +2,19 @@
 //!
 //! Three message kinds, exactly the paper's: status updates, task
 //! requests/responses, and (optional) solution notifications.  The
-//! [`Transport`] trait abstracts delivery so the same worker state machine
+//! [`Transport`] trait abstracts delivery so the *same* worker state machine
 //! runs over OS threads ([`local::LocalTransport`], an MPI stand-in built on
-//! `std::sync::mpsc`) and under the discrete-event simulator's virtual time
-//! (`sim::SimNet`).
+//! `std::sync::mpsc`), across machines ([`tcp::TcpTransport`], length-prefixed
+//! frames of the [`wire`] codec over real sockets), and under the
+//! discrete-event simulator's virtual time (`sim::SimNet`) — the paper's
+//! claim that the worker logic is transport-oblivious, made concrete.
+//!
+//! The byte-level message format is specified in `docs/WIRE_PROTOCOL.md`
+//! and implemented (with exhaustive round-trip tests) in [`wire`].
 
 pub mod local;
+pub mod tcp;
+pub mod wire;
 
 use crate::index::NodeIndex;
 use crate::{Cost, Rank};
@@ -15,7 +22,9 @@ use crate::{Cost, Rank};
 /// A core's externally visible state (paper §III-F: three states).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CoreState {
+    /// Working on a subtree, or still probing peers for one.
     Active,
+    /// Out of work after the final pass; still answers requests with `null`.
     Inactive,
     /// Left the computation (join-leave, §VII); treated as permanently
     /// inactive by peers but no longer responds to requests.
@@ -39,16 +48,27 @@ pub enum Message {
 }
 
 impl Message {
-    /// Wire size in bytes (for the encoding-overhead ablation A1): every
-    /// variant is a tag byte + fixed fields; indices are O(d).
+    /// Wire size in bytes: the exact length of the [`wire`] codec payload
+    /// for this message (tag byte + fixed fields; indices are O(d)).
+    ///
+    /// Delegates to [`wire::encoded_len`] so the figure used by the
+    /// encoding-overhead ablation (A1) and by [`CommStats::bytes_sent`]
+    /// accounting is the *real* framed payload, never a drifting model of
+    /// it.  The TCP transport adds [`wire::FRAME_HEADER_BYTES`] per frame
+    /// on top (reported separately by `tcp::TcpTransport::bytes_on_wire`).
     pub fn wire_bytes(&self) -> usize {
+        wire::encoded_len(self)
+    }
+
+    /// The sender rank carried by every variant.  Transports use this to
+    /// reject frames whose claimed origin does not match the connection
+    /// they arrived on (messages are never relayed).
+    pub fn from_rank(&self) -> Rank {
         match self {
-            Message::StatusUpdate { .. } => 1 + 8 + 1,
-            Message::TaskRequest { .. } => 1 + 8,
-            Message::TaskResponse { tasks, .. } => {
-                1 + 8 + 4 + tasks.iter().map(|t| t.encode().len()).sum::<usize>()
-            }
-            Message::Notification { .. } => 1 + 8 + 8,
+            Message::StatusUpdate { from, .. }
+            | Message::TaskRequest { from }
+            | Message::TaskResponse { from, .. }
+            | Message::Notification { from, .. } => *from,
         }
     }
 }
@@ -56,6 +76,7 @@ impl Message {
 /// Message destination.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dest {
+    /// Point-to-point delivery to a single rank.
     One(Rank),
     /// Broadcast to every peer (expanded to `c-1` transmissions).
     All,
@@ -64,12 +85,17 @@ pub enum Dest {
 /// An outgoing envelope produced by the worker state machine.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Envelope {
+    /// Where the message goes (one peer, or everyone but the sender).
     pub to: Dest,
+    /// The message itself.
     pub msg: Message,
 }
 
-/// Delivery abstraction for the thread runner.
+/// Delivery abstraction for the runners (threads and TCP cluster).
 pub trait Transport {
+    /// The rank this endpoint belongs to (the worker driven over it must
+    /// be constructed with the same rank).
+    fn rank(&self) -> Rank;
     /// Send to one rank.
     fn send(&self, to: Rank, msg: Message);
     /// Broadcast to all ranks except `from`.
@@ -95,9 +121,16 @@ pub struct CommStats {
     pub bytes_sent: u64,
     /// Incumbent notifications broadcast.
     pub notifications: u64,
+    /// Peers observed going [`CoreState::Dead`] while still believed
+    /// Active — i.e. mid-run losses (crash or severed link), as opposed to
+    /// clean exits, which broadcast Inactive first.  Non-zero means the run
+    /// may be DEGRADED: the lost peer's unfinished subtree was explored by
+    /// nobody (§VII — only a graceful leave exports a checkpoint).
+    pub peers_lost: u64,
 }
 
 impl CommStats {
+    /// Accumulate another worker's statistics into this one.
     pub fn merge(&mut self, o: &CommStats) {
         self.tasks_received += o.tasks_received;
         self.tasks_requested += o.tasks_requested;
@@ -105,6 +138,7 @@ impl CommStats {
         self.messages_sent += o.messages_sent;
         self.bytes_sent += o.bytes_sent;
         self.notifications += o.notifications;
+        self.peers_lost += o.peers_lost;
     }
 }
 

@@ -1,0 +1,602 @@
+//! Multi-process TCP transport (paper §VII: beyond one machine).
+//!
+//! [`TcpTransport`] implements the existing [`Transport`] trait over real
+//! sockets, so the unchanged worker state machine
+//! ([`crate::coordinator::Worker`]) runs across process and machine
+//! boundaries — the framework's transport-obliviousness claim, made
+//! concrete.  Messages travel as length-prefixed frames of the [`wire`]
+//! codec (one message per frame; layout in `docs/WIRE_PROTOCOL.md`).
+//!
+//! ## Rendezvous handshake
+//!
+//! Rank assignment is centralized in one *rendezvous listener* process
+//! (which then participates as rank 0, `C_0`, seeded with the root task):
+//!
+//! 1. Every joiner binds its own ephemeral mesh listener, connects to the
+//!    rendezvous address, and sends `HELLO{advertised mesh address}`.
+//! 2. The rendezvous process accepts `c - 1` joiners, assigns ranks in
+//!    arrival order, and answers each with `ASSIGN{rank, c, addrs[0..c]}`.
+//! 3. Joiners complete the full mesh among themselves: rank `i` dials the
+//!    mesh listeners of ranks `1..i` (sending `DIAL{i}` so the acceptor
+//!    knows who arrived) and accepts connections from ranks `i+1..c`.
+//!    Rank 0 ↔ joiner links reuse the rendezvous connections.
+//!
+//! Every joiner's mesh listener is bound *before* its `HELLO` is sent, so
+//! step 3's dials can never race a missing listener (at worst they queue in
+//! the OS accept backlog).
+//!
+//! ## Delivery and join/leave
+//!
+//! One reader thread per peer decodes frames into a shared inbox;
+//! [`Transport::try_recv`]/[`Transport::recv_timeout`] drain it.  When a
+//! peer's socket closes or errors mid-run, the reader synthesizes
+//! `StatusUpdate { from: peer, state: Dead }` — mapping transport-level
+//! failure onto the worker's existing join-leave path (§VII): the peer is
+//! treated as permanently inactive and never probed again.
+
+use super::wire;
+use super::{CoreState, Message, Transport};
+use crate::Rank;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Handshake frame tags (distinct from the [`wire`] message tags, which
+/// start at `0x01`; handshake frames never share a stream phase with data
+/// frames, but distinct tags keep captures unambiguous).
+const HS_HELLO: u8 = 0x10;
+const HS_ASSIGN: u8 = 0x11;
+const HS_DIAL: u8 = 0x12;
+
+/// Protocol magic sent in every `HELLO` ("PBT1": pbt wire protocol v1).
+pub const MAGIC: &[u8; 4] = b"PBT1";
+
+/// Handshake frames are tiny; anything bigger is not a pbt peer.
+const MAX_HANDSHAKE_BYTES: usize = 64 * 1024;
+
+/// Knobs for cluster bring-up (see `config::ClusterConfig` for the
+/// file/CLI-facing equivalents).
+#[derive(Debug, Clone, Copy)]
+pub struct TcpConfig {
+    /// Timeout for each outbound `connect` during rendezvous and meshing.
+    pub connect_timeout: Duration,
+    /// Overall deadline for the whole handshake (accepting peers, waiting
+    /// for `ASSIGN`, completing the mesh).
+    pub handshake_timeout: Duration,
+}
+
+impl Default for TcpConfig {
+    fn default() -> Self {
+        TcpConfig {
+            connect_timeout: Duration::from_secs(10),
+            handshake_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+fn proto_err(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Write one raw length-prefixed handshake frame.
+fn write_hs(stream: &mut TcpStream, payload: &[u8]) -> io::Result<()> {
+    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()
+}
+
+/// Read one raw length-prefixed handshake frame.
+fn read_hs(stream: &mut TcpStream) -> io::Result<Vec<u8>> {
+    let mut header = [0u8; 4];
+    stream.read_exact(&mut header)?;
+    let len = u32::from_le_bytes(header) as usize;
+    if len > MAX_HANDSHAKE_BYTES {
+        return Err(proto_err(format!("handshake frame of {len} bytes")));
+    }
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+fn push_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn pull_str(bytes: &[u8], pos: &mut usize) -> io::Result<String> {
+    if bytes.len() < *pos + 4 {
+        return Err(proto_err("truncated handshake string"));
+    }
+    let len = u32::from_le_bytes(bytes[*pos..*pos + 4].try_into().unwrap()) as usize;
+    *pos += 4;
+    if bytes.len() < *pos + len {
+        return Err(proto_err("truncated handshake string body"));
+    }
+    let s = std::str::from_utf8(&bytes[*pos..*pos + len])
+        .map_err(|_| proto_err("non-utf8 handshake string"))?
+        .to_string();
+    *pos += len;
+    Ok(s)
+}
+
+fn pull_u64(bytes: &[u8], pos: &mut usize) -> io::Result<u64> {
+    if bytes.len() < *pos + 8 {
+        return Err(proto_err("truncated handshake integer"));
+    }
+    let v = u64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
+fn connect_with_timeout(addr: &str, timeout: Duration) -> io::Result<TcpStream> {
+    let mut last = proto_err(format!("no addresses for {addr}"));
+    for sockaddr in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sockaddr, timeout) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
+}
+
+/// The rendezvous endpoint: binds immediately (so the bound address — e.g.
+/// with port 0 — can be printed or passed to joiners) and produces the rank-0
+/// [`TcpTransport`] once all peers have arrived.
+pub struct ClusterListener {
+    listener: TcpListener,
+    c: usize,
+    cfg: TcpConfig,
+}
+
+impl ClusterListener {
+    /// Bind the rendezvous socket for a cluster of `c` ranks (including
+    /// this process, which becomes rank 0).
+    pub fn bind(addr: &str, c: usize, cfg: TcpConfig) -> io::Result<ClusterListener> {
+        if c < 2 {
+            return Err(proto_err("a cluster needs at least 2 ranks"));
+        }
+        let listener = TcpListener::bind(addr)?;
+        Ok(ClusterListener { listener, c, cfg })
+    }
+
+    /// The actually-bound rendezvous address (resolves port 0).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept all `c - 1` joiners, assign ranks, distribute the peer list,
+    /// and return this process's (rank 0) transport.
+    pub fn accept_all(self) -> io::Result<TcpTransport> {
+        let deadline = Instant::now() + self.cfg.handshake_timeout;
+        self.listener.set_nonblocking(true)?;
+        let mut joiners: Vec<(TcpStream, String)> = Vec::with_capacity(self.c - 1);
+        while joiners.len() < self.c - 1 {
+            match self.listener.accept() {
+                Ok((mut stream, _)) => {
+                    // A connection that isn't a well-formed joiner (port
+                    // scanner, health check, stray client) must not abort
+                    // rendezvous for the legitimate peers: drop it and
+                    // keep accepting.
+                    let mesh_addr = (|| -> io::Result<String> {
+                        stream.set_nonblocking(false)?;
+                        stream.set_read_timeout(Some(self.cfg.connect_timeout))?;
+                        stream.set_nodelay(true)?;
+                        let hello = read_hs(&mut stream)?;
+                        if hello.len() < 1 + 4 || hello[0] != HS_HELLO || &hello[1..5] != MAGIC
+                        {
+                            return Err(proto_err("bad HELLO"));
+                        }
+                        let mut pos = 5;
+                        pull_str(&hello, &mut pos)
+                    })();
+                    match mesh_addr {
+                        Ok(mesh_addr) => joiners.push((stream, mesh_addr)),
+                        Err(_) => continue, // not a pbt joiner; stream drops
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            format!(
+                                "rendezvous timed out with {}/{} joiners",
+                                joiners.len(),
+                                self.c - 1
+                            ),
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+
+        // addrs[r] = mesh listener of rank r (addrs[0] is informational).
+        let mut addrs = vec![self.listener.local_addr()?.to_string()];
+        addrs.extend(joiners.iter().map(|(_, a)| a.clone()));
+
+        let mut peers: Vec<Option<TcpStream>> = (0..self.c).map(|_| None).collect();
+        for (i, (mut stream, _)) in joiners.into_iter().enumerate() {
+            let rank = i + 1;
+            let mut assign = vec![HS_ASSIGN];
+            assign.extend_from_slice(&(rank as u64).to_le_bytes());
+            assign.extend_from_slice(&(self.c as u64).to_le_bytes());
+            for a in &addrs {
+                push_str(&mut assign, a);
+            }
+            write_hs(&mut stream, &assign)?;
+            stream.set_read_timeout(None)?;
+            peers[rank] = Some(stream);
+        }
+        TcpTransport::from_mesh(0, self.c, peers)
+    }
+}
+
+/// Point-to-point TCP mesh endpoint implementing [`Transport`].
+///
+/// Build one with [`ClusterListener`] (rank 0) or [`TcpTransport::join`]
+/// (every other rank).  Dropping the transport shuts all sockets down,
+/// which peers observe as this rank leaving (§VII).
+pub struct TcpTransport {
+    rank: Rank,
+    c: usize,
+    /// Writer half per peer rank (`None` at `self.rank`).
+    peers: Vec<Option<Mutex<TcpStream>>>,
+    /// Shared inbox filled by one reader thread per peer.
+    rx: Receiver<Message>,
+    /// Kept so the inbox never reports disconnect while the transport lives.
+    _tx: Sender<Message>,
+    /// Total bytes actually written (frame headers + payloads).
+    bytes_on_wire: AtomicU64,
+    /// Frames written.
+    frames_sent: AtomicU64,
+}
+
+impl TcpTransport {
+    /// Join a cluster through its rendezvous address; blocks until the
+    /// whole mesh is up and returns this process's transport.
+    ///
+    /// Auto-detects the mesh address to advertise (see
+    /// [`join_advertised`](Self::join_advertised) for the caveat and the
+    /// override).
+    pub fn join(rendezvous_addr: &str, cfg: TcpConfig) -> io::Result<TcpTransport> {
+        Self::join_advertised(rendezvous_addr, None, cfg)
+    }
+
+    /// Like [`join`](Self::join), but advertising `advertise_host` (an IP
+    /// or hostname; bracketed for IPv6 literals) as the host part of this
+    /// joiner's mesh address — the ephemeral mesh port is appended
+    /// automatically.
+    ///
+    /// Auto-detection (`None`) advertises the local IP of the rendezvous
+    /// connection, which is right whenever all joiners see this machine
+    /// the way the rendezvous does — but a joiner co-located with the
+    /// rendezvous auto-advertises `127.0.0.1`, unreachable from remote
+    /// joiners.  In mixed local/remote clusters, pass the externally
+    /// visible host here (CLI: `--advertise`, config: `[cluster]
+    /// advertise`).
+    pub fn join_advertised(
+        rendezvous_addr: &str,
+        advertise_host: Option<&str>,
+        cfg: TcpConfig,
+    ) -> io::Result<TcpTransport> {
+        let deadline = Instant::now() + cfg.handshake_timeout;
+
+        let mut rendezvous = connect_with_timeout(rendezvous_addr, cfg.connect_timeout)?;
+        rendezvous.set_nodelay(true)?;
+        rendezvous.set_read_timeout(Some(cfg.handshake_timeout))?;
+
+        // Mesh listener before HELLO (so peers can always reach us once we
+        // are announced), bound in the rendezvous connection's address
+        // family — an IPv6 cluster must get an IPv6 mesh listener.
+        let mesh_listener = if rendezvous.local_addr()?.is_ipv6() {
+            TcpListener::bind("[::]:0")?
+        } else {
+            TcpListener::bind("0.0.0.0:0")?
+        };
+        let mesh_port = mesh_listener.local_addr()?.port();
+
+        let advertised = match advertise_host {
+            Some(host) => format!("{host}:{mesh_port}"),
+            None => SocketAddr::new(rendezvous.local_addr()?.ip(), mesh_port).to_string(),
+        };
+        let mut hello = vec![HS_HELLO];
+        hello.extend_from_slice(MAGIC);
+        push_str(&mut hello, &advertised);
+        write_hs(&mut rendezvous, &hello)?;
+
+        let assign = read_hs(&mut rendezvous)?;
+        if assign.first() != Some(&HS_ASSIGN) {
+            return Err(proto_err("expected ASSIGN from rendezvous"));
+        }
+        let mut pos = 1;
+        let rank = pull_u64(&assign, &mut pos)? as usize;
+        let c = pull_u64(&assign, &mut pos)? as usize;
+        if rank == 0 || rank >= c {
+            return Err(proto_err(format!("bad rank assignment {rank} of {c}")));
+        }
+        let mut addrs = Vec::with_capacity(c);
+        for _ in 0..c {
+            addrs.push(pull_str(&assign, &mut pos)?);
+        }
+        rendezvous.set_read_timeout(None)?;
+
+        let mut peers: Vec<Option<TcpStream>> = (0..c).map(|_| None).collect();
+        peers[0] = Some(rendezvous);
+
+        // Dial every lower-ranked joiner's mesh listener.
+        for (peer, addr) in addrs.iter().enumerate().take(rank).skip(1) {
+            let mut stream = connect_with_timeout(addr, cfg.connect_timeout)?;
+            stream.set_nodelay(true)?;
+            let mut dial = vec![HS_DIAL];
+            dial.extend_from_slice(&(rank as u64).to_le_bytes());
+            write_hs(&mut stream, &dial)?;
+            peers[peer] = Some(stream);
+        }
+
+        // Accept every higher-ranked joiner.
+        mesh_listener.set_nonblocking(true)?;
+        let mut expected = c - 1 - rank;
+        while expected > 0 {
+            match mesh_listener.accept() {
+                Ok((mut stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    stream.set_read_timeout(Some(cfg.connect_timeout))?;
+                    stream.set_nodelay(true)?;
+                    let dial = read_hs(&mut stream)?;
+                    if dial.first() != Some(&HS_DIAL) {
+                        return Err(proto_err("expected DIAL on mesh listener"));
+                    }
+                    let mut pos = 1;
+                    let peer = pull_u64(&dial, &mut pos)? as usize;
+                    if peer <= rank || peer >= c || peers[peer].is_some() {
+                        return Err(proto_err(format!("bad DIAL from rank {peer}")));
+                    }
+                    stream.set_read_timeout(None)?;
+                    peers[peer] = Some(stream);
+                    expected -= 1;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            format!("mesh build timed out waiting for {expected} peers"),
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Self::from_mesh(rank, c, peers)
+    }
+
+    /// Wrap a completed mesh: spawn the reader threads and the inbox.
+    fn from_mesh(
+        rank: Rank,
+        c: usize,
+        peers: Vec<Option<TcpStream>>,
+    ) -> io::Result<TcpTransport> {
+        let (tx, rx) = channel();
+        for (peer, stream) in peers.iter().enumerate() {
+            let Some(stream) = stream else { continue };
+            let mut reader = stream.try_clone()?;
+            let tx = tx.clone();
+            std::thread::Builder::new()
+                .name(format!("pbt-recv-r{rank}-p{peer}"))
+                .spawn(move || loop {
+                    match wire::read_frame(&mut reader) {
+                        // Messages are never relayed, so a frame whose
+                        // claimed origin isn't this connection's peer is
+                        // corruption or hostility — treat it like a broken
+                        // stream (also shields the worker's rank-indexed
+                        // status table from out-of-range ranks).
+                        Ok(Some(msg)) if msg.from_rank() == peer => {
+                            if tx.send(msg).is_err() {
+                                return; // transport dropped
+                            }
+                        }
+                        Ok(Some(_)) | Ok(None) | Err(_) => {
+                            // Socket closed, broke, or spoke garbage: the
+                            // peer left the computation (§VII).  Sever the
+                            // link fully — otherwise a still-healthy remote
+                            // would keep writing into a never-drained
+                            // socket and eventually block — and tell the
+                            // worker once.
+                            let _ = reader.shutdown(std::net::Shutdown::Both);
+                            let _ = tx.send(Message::StatusUpdate {
+                                from: peer,
+                                state: CoreState::Dead,
+                            });
+                            return;
+                        }
+                    }
+                })
+                .expect("spawning reader thread");
+        }
+        Ok(TcpTransport {
+            rank,
+            c,
+            peers: peers.into_iter().map(|s| s.map(Mutex::new)).collect(),
+            rx,
+            _tx: tx,
+            bytes_on_wire: AtomicU64::new(0),
+            frames_sent: AtomicU64::new(0),
+        })
+    }
+
+    /// Total ranks `c` in the cluster.
+    pub fn num_ranks(&self) -> usize {
+        self.c
+    }
+
+    /// Bytes actually written to sockets, including the 4-byte frame
+    /// headers (compare with the payload-only `CommStats::bytes_sent`).
+    pub fn bytes_on_wire(&self) -> u64 {
+        self.bytes_on_wire.load(Ordering::Relaxed)
+    }
+
+    /// Frames written to sockets.
+    pub fn frames_sent(&self) -> u64 {
+        self.frames_sent.load(Ordering::Relaxed)
+    }
+
+
+    fn send_to(&self, to: Rank, msg: &Message) {
+        debug_assert!(to < self.c);
+        let Some(peer) = self.peers.get(to).and_then(|p| p.as_ref()) else {
+            debug_assert_ne!(to, self.rank, "send to self");
+            return;
+        };
+        let mut stream = peer.lock().expect("peer stream lock");
+        // A broken pipe here means the peer already left; its reader thread
+        // has synthesized the Dead status, so dropping the message mirrors
+        // LocalTransport's post-termination behaviour.
+        if let Ok(n) = wire::write_frame(&mut *stream, msg) {
+            self.bytes_on_wire.fetch_add(n as u64, Ordering::Relaxed);
+            self.frames_sent.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    fn send(&self, to: Rank, msg: Message) {
+        self.send_to(to, &msg);
+    }
+
+    fn broadcast(&self, from: Rank, msg: Message) {
+        // Matching LocalTransport: every rank except `from` (self has no
+        // loopback stream, so it is skipped structurally).
+        for r in 0..self.c {
+            if r != from && r != self.rank {
+                self.send_to(r, &msg);
+            }
+        }
+    }
+
+    fn try_recv(&self) -> Option<Message> {
+        self.rx.try_recv().ok()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Option<Message> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // Unblock and retire the reader threads; peers see EOF (join/leave).
+        for peer in self.peers.iter().flatten() {
+            if let Ok(stream) = peer.lock() {
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Bring up a full localhost mesh of `c` transports (rank order).
+    fn mesh(c: usize) -> Vec<TcpTransport> {
+        let cfg = TcpConfig {
+            connect_timeout: Duration::from_secs(5),
+            handshake_timeout: Duration::from_secs(10),
+        };
+        let listener = ClusterListener::bind("127.0.0.1:0", c, cfg).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let joiners: Vec<_> = (1..c)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || TcpTransport::join(&addr, cfg).unwrap())
+            })
+            .collect();
+        let rank0 = listener.accept_all().unwrap();
+        let mut all: Vec<TcpTransport> =
+            joiners.into_iter().map(|j| j.join().unwrap()).collect();
+        all.push(rank0);
+        all.sort_by_key(|t| t.rank());
+        all
+    }
+
+    #[test]
+    fn rendezvous_assigns_distinct_ranks() {
+        let mesh = mesh(3);
+        let ranks: Vec<Rank> = mesh.iter().map(|t| t.rank()).collect();
+        assert_eq!(ranks, vec![0, 1, 2]);
+        assert!(mesh.iter().all(|t| t.num_ranks() == 3));
+    }
+
+    #[test]
+    fn point_to_point_and_broadcast_roundtrip() {
+        let mesh = mesh(3);
+        // p2p in both directions, including joiner↔joiner (mesh link).
+        mesh[0].send(2, Message::TaskRequest { from: 0 });
+        assert_eq!(
+            mesh[2].recv_timeout(Duration::from_secs(5)),
+            Some(Message::TaskRequest { from: 0 })
+        );
+        mesh[2].send(1, Message::Notification { from: 2, best: 41 });
+        assert_eq!(
+            mesh[1].recv_timeout(Duration::from_secs(5)),
+            Some(Message::Notification { from: 2, best: 41 })
+        );
+        // broadcast excludes the sender.
+        let msg = Message::StatusUpdate { from: 1, state: CoreState::Inactive };
+        mesh[1].broadcast(1, msg.clone());
+        assert_eq!(mesh[0].recv_timeout(Duration::from_secs(5)), Some(msg.clone()));
+        assert_eq!(mesh[2].recv_timeout(Duration::from_secs(5)), Some(msg));
+        assert_eq!(mesh[1].try_recv(), None);
+        // Byte accounting counts headers + payloads.
+        let sent = Message::TaskRequest { from: 0 }.wire_bytes() as u64
+            + wire::FRAME_HEADER_BYTES as u64;
+        assert_eq!(mesh[0].bytes_on_wire(), sent);
+        assert_eq!(mesh[0].frames_sent(), 1);
+        assert_eq!(mesh[1].frames_sent(), 2);
+    }
+
+    #[test]
+    fn deep_task_response_survives_the_wire() {
+        let mesh = mesh(2);
+        let tasks = vec![
+            crate::index::NodeIndex(vec![0; 100]),
+            crate::index::NodeIndex(vec![3, 1, 4, 1, 5]),
+        ];
+        mesh[0].send(1, Message::TaskResponse { from: 0, tasks: tasks.clone() });
+        assert_eq!(
+            mesh[1].recv_timeout(Duration::from_secs(5)),
+            Some(Message::TaskResponse { from: 0, tasks })
+        );
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let mesh = mesh(2);
+        let t = Instant::now();
+        assert_eq!(mesh[0].recv_timeout(Duration::from_millis(20)), None);
+        assert!(t.elapsed() >= Duration::from_millis(19));
+    }
+
+    #[test]
+    fn peer_disconnect_synthesizes_dead_status() {
+        let mut mesh = mesh(3);
+        let t2 = mesh.pop().unwrap();
+        drop(t2); // rank 2 leaves
+        for t in &mesh {
+            assert_eq!(
+                t.recv_timeout(Duration::from_secs(5)),
+                Some(Message::StatusUpdate { from: 2, state: CoreState::Dead }),
+                "rank {} must observe the departure",
+                t.rank()
+            );
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! Binary wire codec for [`Message`] (paper §IV-A/§IV-B).
+//!
+//! The byte-level contract lives in `docs/WIRE_PROTOCOL.md`; this module is
+//! its executable form.  Design constraints, in paper order:
+//!
+//! * **A task travels as its index** — `E(N) = idx(N)` (§IV-A).  A
+//!   [`TaskResponse`](Message::TaskResponse) payload is just the donated
+//!   indices' digit strings, O(d) bytes each, reusing
+//!   [`NodeIndex::encode`]/[`NodeIndex::decode`] unchanged.
+//! * **Every variant is a tag byte plus fixed fields** — so
+//!   [`encoded_len`] is exactly [`Message::wire_bytes`], and the
+//!   encoding-overhead ablation (`benches/ablate_encoding.rs`) measures
+//!   the real wire, not a model of it.
+//! * **Frames are length-prefixed** ([`write_frame`]/[`read_frame`]) so the
+//!   TCP transport can delimit messages on a byte stream; the 4-byte
+//!   header is [`FRAME_HEADER_BYTES`].
+//!
+//! All integers are little-endian.  Tags: `0x01` StatusUpdate, `0x02`
+//! TaskRequest, `0x03` TaskResponse, `0x04` Notification.  Core states:
+//! `0` Active, `1` Inactive, `2` Dead.
+
+use super::{CoreState, Message};
+use crate::index::NodeIndex;
+use crate::Rank;
+use std::io::{Read, Write};
+
+/// Length-prefix framing header size (u32 LE payload length).
+pub const FRAME_HEADER_BYTES: usize = 4;
+
+/// Maximum accepted frame payload (a donated batch of very deep indices is
+/// far below this; anything larger is a corrupt or hostile peer).
+pub const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
+
+/// Tag byte for [`Message::StatusUpdate`].
+pub const TAG_STATUS_UPDATE: u8 = 0x01;
+/// Tag byte for [`Message::TaskRequest`].
+pub const TAG_TASK_REQUEST: u8 = 0x02;
+/// Tag byte for [`Message::TaskResponse`].
+pub const TAG_TASK_RESPONSE: u8 = 0x03;
+/// Tag byte for [`Message::Notification`].
+pub const TAG_NOTIFICATION: u8 = 0x04;
+
+/// Decode failure: the payload does not describe a valid [`Message`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Payload ended before the fields it promised.
+    Truncated,
+    /// Unknown message tag byte.
+    BadTag(u8),
+    /// Unknown core-state byte in a StatusUpdate.
+    BadState(u8),
+    /// A task index failed [`NodeIndex::decode`].
+    BadIndex,
+    /// Bytes remained after the last field (frames carry exactly one
+    /// message).
+    TrailingBytes(usize),
+    /// Frame header declared a payload larger than [`MAX_FRAME_BYTES`].
+    OversizedFrame(usize),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "payload truncated"),
+            WireError::BadTag(t) => write!(f, "unknown message tag {t:#04x}"),
+            WireError::BadState(s) => write!(f, "unknown core-state byte {s}"),
+            WireError::BadIndex => write!(f, "corrupt task index"),
+            WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes after message"),
+            WireError::OversizedFrame(n) => {
+                write!(f, "frame of {n} bytes exceeds limit {MAX_FRAME_BYTES}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn state_byte(s: CoreState) -> u8 {
+    match s {
+        CoreState::Active => 0,
+        CoreState::Inactive => 1,
+        CoreState::Dead => 2,
+    }
+}
+
+fn byte_state(b: u8) -> Result<CoreState, WireError> {
+    match b {
+        0 => Ok(CoreState::Active),
+        1 => Ok(CoreState::Inactive),
+        2 => Ok(CoreState::Dead),
+        other => Err(WireError::BadState(other)),
+    }
+}
+
+/// Exact encoded payload size of `msg`, without the frame header.
+/// [`Message::wire_bytes`] delegates here so protocol statistics and the
+/// actual wire can never drift apart.
+pub fn encoded_len(msg: &Message) -> usize {
+    match msg {
+        Message::StatusUpdate { .. } => 1 + 8 + 1,
+        Message::TaskRequest { .. } => 1 + 8,
+        Message::TaskResponse { tasks, .. } => {
+            1 + 8 + 4 + tasks.iter().map(|t| 4 + 4 * t.depth()).sum::<usize>()
+        }
+        Message::Notification { .. } => 1 + 8 + 8,
+    }
+}
+
+/// Encode `msg` into its wire payload (no frame header).
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let mut out = Vec::with_capacity(encoded_len(msg));
+    encode_into(&mut out, msg);
+    out
+}
+
+/// Append the wire payload of `msg` to `out` (the allocation-free core of
+/// [`encode`], also used by [`write_frame`] to build header + payload in
+/// one buffer).
+pub fn encode_into(out: &mut Vec<u8>, msg: &Message) {
+    let start = out.len();
+    match msg {
+        Message::StatusUpdate { from, state } => {
+            out.push(TAG_STATUS_UPDATE);
+            out.extend_from_slice(&(*from as u64).to_le_bytes());
+            out.push(state_byte(*state));
+        }
+        Message::TaskRequest { from } => {
+            out.push(TAG_TASK_REQUEST);
+            out.extend_from_slice(&(*from as u64).to_le_bytes());
+        }
+        Message::TaskResponse { from, tasks } => {
+            out.push(TAG_TASK_RESPONSE);
+            out.extend_from_slice(&(*from as u64).to_le_bytes());
+            out.extend_from_slice(&(tasks.len() as u32).to_le_bytes());
+            for task in tasks {
+                out.extend_from_slice(&task.encode());
+            }
+        }
+        Message::Notification { from, best } => {
+            out.push(TAG_NOTIFICATION);
+            out.extend_from_slice(&(*from as u64).to_le_bytes());
+            out.extend_from_slice(&best.to_le_bytes());
+        }
+    }
+    debug_assert_eq!(out.len() - start, encoded_len(msg));
+}
+
+fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], WireError> {
+    if bytes.len() < *pos + n {
+        return Err(WireError::Truncated);
+    }
+    let s = &bytes[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+fn take_u32(bytes: &[u8], pos: &mut usize) -> Result<u32, WireError> {
+    Ok(u32::from_le_bytes(take(bytes, pos, 4)?.try_into().unwrap()))
+}
+
+fn take_u64(bytes: &[u8], pos: &mut usize) -> Result<u64, WireError> {
+    Ok(u64::from_le_bytes(take(bytes, pos, 8)?.try_into().unwrap()))
+}
+
+/// Decode one message from a full payload.  The payload must contain
+/// exactly one message (frames are one-message-per-frame).
+pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
+    let mut pos = 0usize;
+    let tag = take(bytes, &mut pos, 1)?[0];
+    let from = take_u64(bytes, &mut pos)? as Rank;
+    let msg = match tag {
+        TAG_STATUS_UPDATE => {
+            let state = byte_state(take(bytes, &mut pos, 1)?[0])?;
+            Message::StatusUpdate { from, state }
+        }
+        TAG_TASK_REQUEST => Message::TaskRequest { from },
+        TAG_TASK_RESPONSE => {
+            let count = take_u32(bytes, &mut pos)? as usize;
+            let mut tasks = Vec::with_capacity(count.min(1024));
+            for _ in 0..count {
+                let depth = take_u32(bytes, &mut pos)? as usize;
+                // Rewind: NodeIndex::decode wants its own length prefix.
+                pos -= 4;
+                let idx_bytes = take(bytes, &mut pos, 4 + 4 * depth)?;
+                let idx = NodeIndex::decode(idx_bytes).ok_or(WireError::BadIndex)?;
+                tasks.push(idx);
+            }
+            Message::TaskResponse { from, tasks }
+        }
+        TAG_NOTIFICATION => {
+            let best = take_u64(bytes, &mut pos)?;
+            Message::Notification { from, best }
+        }
+        other => return Err(WireError::BadTag(other)),
+    };
+    if pos != bytes.len() {
+        return Err(WireError::TrailingBytes(bytes.len() - pos));
+    }
+    Ok(msg)
+}
+
+/// Write one message as a length-prefixed frame.  Returns the total bytes
+/// put on the wire (header + payload) for [`CommStats`] accounting.
+///
+/// [`CommStats`]: super::CommStats
+pub fn write_frame<W: Write>(w: &mut W, msg: &Message) -> std::io::Result<usize> {
+    // One buffer, one write_all: protocol messages are 9-17 bytes and
+    // travel over TCP_NODELAY sockets, so split writes would pay two
+    // syscalls (and possibly two segments) per message on the hot path.
+    let payload_len = encoded_len(msg);
+    let mut frame = Vec::with_capacity(FRAME_HEADER_BYTES + payload_len);
+    frame.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    encode_into(&mut frame, msg);
+    w.write_all(&frame)?;
+    w.flush()?;
+    Ok(frame.len())
+}
+
+/// Read one length-prefixed frame.  Returns `Ok(None)` on clean EOF at a
+/// frame boundary (the peer closed its socket — join/leave, §VII); any
+/// mid-frame EOF or decode failure is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<Message>> {
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    // Distinguish clean EOF (no bytes of a next frame) from truncation.
+    let mut filled = 0usize;
+    while filled < header.len() {
+        match r.read(&mut header[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(None);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "EOF inside frame header",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(header) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            WireError::OversizedFrame(len).to_string(),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    decode(&payload)
+        .map(Some)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<Message> {
+        vec![
+            Message::StatusUpdate { from: 0, state: CoreState::Active },
+            Message::StatusUpdate { from: 3, state: CoreState::Inactive },
+            Message::StatusUpdate { from: usize::MAX >> 1, state: CoreState::Dead },
+            Message::TaskRequest { from: 7 },
+            Message::TaskResponse { from: 1, tasks: vec![] },
+            Message::TaskResponse { from: 2, tasks: vec![NodeIndex(vec![0, 3, 1])] },
+            Message::TaskResponse {
+                from: 9,
+                tasks: vec![
+                    NodeIndex::root(),
+                    NodeIndex(vec![5]),
+                    NodeIndex(vec![0; 64]),
+                ],
+            },
+            Message::Notification { from: 4, best: 0 },
+            Message::Notification { from: 4, best: u64::MAX },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_every_variant() {
+        for msg in samples() {
+            let bytes = encode(&msg);
+            assert_eq!(decode(&bytes), Ok(msg.clone()), "roundtrip of {msg:?}");
+        }
+    }
+
+    #[test]
+    fn encoded_len_matches_wire_bytes() {
+        for msg in samples() {
+            assert_eq!(encode(&msg).len(), msg.wire_bytes(), "{msg:?}");
+            assert_eq!(encoded_len(&msg), msg.wire_bytes(), "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        assert_eq!(decode(&[]), Err(WireError::Truncated));
+        assert_eq!(decode(&[0xFF, 0, 0, 0, 0, 0, 0, 0, 0]), Err(WireError::BadTag(0xFF)));
+        // StatusUpdate with an invalid state byte.
+        let mut b = encode(&Message::StatusUpdate { from: 1, state: CoreState::Active });
+        *b.last_mut().unwrap() = 9;
+        assert_eq!(decode(&b), Err(WireError::BadState(9)));
+        // Trailing garbage after a valid message.
+        let mut b = encode(&Message::TaskRequest { from: 1 });
+        b.push(0);
+        assert_eq!(decode(&b), Err(WireError::TrailingBytes(1)));
+        // Truncated index inside a response.
+        let b = encode(&Message::TaskResponse { from: 1, tasks: vec![NodeIndex(vec![2, 2])] });
+        assert_eq!(decode(&b[..b.len() - 1]), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn frames_roundtrip_over_a_byte_stream() {
+        let mut buf = Vec::new();
+        let mut total = 0usize;
+        for msg in samples() {
+            total += write_frame(&mut buf, &msg).unwrap();
+        }
+        assert_eq!(
+            total,
+            samples().iter().map(|m| FRAME_HEADER_BYTES + m.wire_bytes()).sum::<usize>()
+        );
+        let mut cursor = std::io::Cursor::new(buf);
+        for msg in samples() {
+            assert_eq!(read_frame(&mut cursor).unwrap(), Some(msg));
+        }
+        // Clean EOF at a frame boundary.
+        assert_eq!(read_frame(&mut cursor).unwrap(), None);
+    }
+
+    #[test]
+    fn mid_frame_eof_is_an_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Message::TaskRequest { from: 0 }).unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

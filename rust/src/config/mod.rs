@@ -120,6 +120,55 @@ fn parse_value(s: &str) -> Result<Value> {
     bail!("cannot parse value: {s:?}")
 }
 
+/// Multi-process cluster knobs (`[cluster]` section; see the
+/// `pbt cluster` subcommand and `comm::tcp`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Rendezvous bind address for `cluster listen` (port 0 = ephemeral,
+    /// printed at startup).
+    pub bind: String,
+    /// Rendezvous address for `cluster join`.
+    pub connect: String,
+    /// Host (IP or name) this joiner advertises for its mesh listener;
+    /// empty = auto-detect from the rendezvous connection.  Needed in
+    /// mixed local/remote clusters, where a joiner co-located with the
+    /// rendezvous would auto-advertise an unreachable `127.0.0.1`.
+    pub advertise: String,
+    /// Total ranks `c` in the cluster, including the listener.
+    pub peers: usize,
+    /// Per-connection connect timeout in milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Whole-handshake deadline in milliseconds.
+    pub handshake_timeout_ms: u64,
+    /// Tasks donated per request over the wire (§IV-C batching; higher
+    /// values amortize network latency better than the in-process default).
+    pub donate_batch: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            bind: "127.0.0.1:0".into(),
+            connect: "127.0.0.1:7171".into(),
+            advertise: String::new(),
+            peers: 2,
+            connect_timeout_ms: 10_000,
+            handshake_timeout_ms: 60_000,
+            donate_batch: 2,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// The transport-level view of these knobs.
+    pub fn tcp_config(&self) -> crate::comm::tcp::TcpConfig {
+        crate::comm::tcp::TcpConfig {
+            connect_timeout: std::time::Duration::from_millis(self.connect_timeout_ms),
+            handshake_timeout: std::time::Duration::from_millis(self.handshake_timeout_ms),
+        }
+    }
+}
+
 /// Typed launcher configuration with defaults.
 #[derive(Debug, Clone)]
 pub struct PbtConfig {
@@ -129,6 +178,7 @@ pub struct PbtConfig {
     pub poll_interval: u32,
     /// Passes before going inactive (paper: 2).
     pub max_passes: usize,
+    /// Broadcast improved incumbents (paper §V).
     pub broadcast_solutions: bool,
     /// Simulator: per-message latency in node-visit ticks.
     pub sim_latency: u64,
@@ -138,6 +188,8 @@ pub struct PbtConfig {
     pub scale: usize,
     /// VC bound: "none" | "edges" | "matching".
     pub bound: String,
+    /// Multi-process cluster settings (`[cluster]`).
+    pub cluster: ClusterConfig,
 }
 
 impl Default for PbtConfig {
@@ -151,6 +203,7 @@ impl Default for PbtConfig {
             sim_batch: 16,
             scale: 1,
             bound: "edges".into(),
+            cluster: ClusterConfig::default(),
         }
     }
 }
@@ -190,6 +243,27 @@ impl PbtConfig {
         }
         if let Some(v) = doc.get("run", "bound").and_then(Value::as_str) {
             cfg.bound = v.to_string();
+        }
+        if let Some(v) = doc.get("cluster", "bind").and_then(Value::as_str) {
+            cfg.cluster.bind = v.to_string();
+        }
+        if let Some(v) = doc.get("cluster", "connect").and_then(Value::as_str) {
+            cfg.cluster.connect = v.to_string();
+        }
+        if let Some(v) = doc.get("cluster", "advertise").and_then(Value::as_str) {
+            cfg.cluster.advertise = v.to_string();
+        }
+        if let Some(v) = geti("cluster", "peers") {
+            cfg.cluster.peers = v as usize;
+        }
+        if let Some(v) = geti("cluster", "connect_timeout_ms") {
+            cfg.cluster.connect_timeout_ms = v as u64;
+        }
+        if let Some(v) = geti("cluster", "handshake_timeout_ms") {
+            cfg.cluster.handshake_timeout_ms = v as u64;
+        }
+        if let Some(v) = geti("cluster", "donate_batch") {
+            cfg.cluster.donate_batch = v as usize;
         }
         Ok(cfg)
     }
@@ -256,5 +330,25 @@ mod tests {
     fn empty_text_is_defaults() {
         let cfg = PbtConfig::from_text("").unwrap();
         assert_eq!(cfg.workers, PbtConfig::default().workers);
+        assert_eq!(cfg.cluster, ClusterConfig::default());
+    }
+
+    #[test]
+    fn cluster_section_parses() {
+        let cfg = PbtConfig::from_text(
+            "[cluster]\nbind = \"0.0.0.0:7171\"\nconnect = \"10.0.0.5:7171\"\npeers = 8\n\
+             connect_timeout_ms = 2500\ndonate_batch = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.bind, "0.0.0.0:7171");
+        assert_eq!(cfg.cluster.connect, "10.0.0.5:7171");
+        assert_eq!(cfg.cluster.advertise, "", "auto-detect by default");
+        assert_eq!(cfg.cluster.peers, 8);
+        assert_eq!(cfg.cluster.connect_timeout_ms, 2500);
+        assert_eq!(cfg.cluster.donate_batch, 4);
+        // Untouched keys keep defaults.
+        assert_eq!(cfg.cluster.handshake_timeout_ms, 60_000);
+        let tcp = cfg.cluster.tcp_config();
+        assert_eq!(tcp.connect_timeout, std::time::Duration::from_millis(2500));
     }
 }

@@ -4,10 +4,13 @@
 //! as a driver-agnostic state machine: it consumes [`crate::comm::Message`]s
 //! and emits [`crate::comm::Envelope`]s, and its compute is advanced by
 //! explicit `step_batch` calls.  The thread runner ([`crate::runner`])
-//! drives it at native speed; the discrete-event simulator
-//! ([`crate::sim`]) drives the *same* code under virtual time — this is the
-//! design decision that makes the simulated 131,072-core scaling runs
-//! faithful to the real implementation.
+//! drives it at native speed; the TCP cluster runner
+//! ([`crate::runner::cluster`]) drives it across process and machine
+//! boundaries; the discrete-event simulator ([`crate::sim`]) drives the
+//! *same* code under virtual time — this is the design decision that makes
+//! the simulated 131,072-core scaling runs faithful to the real
+//! implementation, and the real cluster runs faithful to the simulated
+//! ones.
 
 pub mod worker;
 

@@ -291,7 +291,27 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
     pub fn handle(&mut self, msg: Message) {
         match msg {
             Message::StatusUpdate { from, state } => {
+                if from >= self.c {
+                    return; // corrupt/hostile rank: ignore (see comm::tcp)
+                }
+                // Dead-while-Active = a mid-run loss (crash / severed
+                // link): its unfinished subtree is gone.  A clean exit
+                // broadcasts Inactive first, so it is not counted.
+                if state == CoreState::Dead && self.statuses.get(from) == CoreState::Active {
+                    self.stats.comm.peers_lost += 1;
+                }
                 self.statuses.set(from, state);
+                // §VII join-leave: a Dead peer will never answer.  If our
+                // outstanding request is addressed to it, treat the death as
+                // the paper's null response so the iterator keeps probing
+                // instead of waiting forever.  (Dead only: Inactive peers
+                // are alive and still answer null themselves, and per-sender
+                // FIFO delivers any such answer before their status change.)
+                if state == CoreState::Dead && self.phase == Phase::Waiting && from == self.parent
+                {
+                    self.resolve_initial_probe();
+                    self.on_null_response();
+                }
             }
             Message::Notification { best, .. } => {
                 if best < self.best {
@@ -301,6 +321,9 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
                 }
             }
             Message::TaskRequest { from } => {
+                if from >= self.c || from == self.rank {
+                    return; // unanswerable: corrupt rank or self-request
+                }
                 // Inactive/dead/idle workers answer null so requesters
                 // never block forever.
                 let mut tasks = Vec::new();
@@ -317,19 +340,14 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
                 self.stats.comm.tasks_donated += tasks.len() as u64;
                 self.push_msg(Dest::One(from), Message::TaskResponse { from: self.rank, tasks });
             }
-            Message::TaskResponse { tasks, .. } => {
-                if self.phase != Phase::Waiting {
-                    return; // stale response
+            Message::TaskResponse { from, tasks } => {
+                if self.phase != Phase::Waiting || from != self.parent {
+                    // Stale: we are not waiting, or the responder is not
+                    // the peer our outstanding request went to (possible
+                    // after a Dead status already resolved that request).
+                    return;
                 }
-                let was_init = std::mem::take(&mut self.init);
-                if was_init {
-                    // Paper Fig. 7 line 14: after the initial response the
-                    // parent pointer moves to (r+1) mod c.
-                    self.parent = (self.rank + 1) % self.c;
-                    if self.parent == self.rank {
-                        self.parent = (self.parent + 1) % self.c;
-                    }
-                }
+                self.resolve_initial_probe();
                 if tasks.is_empty() {
                     self.on_null_response();
                 } else {
@@ -352,6 +370,18 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
                         }
                     }
                 }
+            }
+        }
+    }
+
+    /// Paper Fig. 7 line 14: once the initial (virtual-tree) probe is
+    /// resolved — by a response or by the parent's death — the parent
+    /// pointer moves to `(r + 1) mod c` for round-robin probing.
+    fn resolve_initial_probe(&mut self) {
+        if std::mem::take(&mut self.init) {
+            self.parent = (self.rank + 1) % self.c;
+            if self.parent == self.rank {
+                self.parent = (self.parent + 1) % self.c;
             }
         }
     }
@@ -708,6 +738,52 @@ mod tests {
         assert_eq!(visited + resumed.stats.nodes, serial.stats.nodes);
         let total_solutions = w.stats.search.solutions + resumed.stats.solutions;
         assert_eq!(total_solutions, serial.stats.solutions);
+    }
+
+    #[test]
+    fn dead_parent_unblocks_waiting_worker() {
+        // §VII over a real network: the peer we are waiting on dies and
+        // will never answer.  The Dead status must act as a null response
+        // (re-probe), not leave the worker waiting forever.
+        let p = ToyTree { height: 4 };
+        let mut w = Worker::new(&p, 1, 4, WorkerConfig::default());
+        let envs = w.drain_outbox();
+        let first_victim = match envs[0].to {
+            Dest::One(r) => r,
+            Dest::All => unreachable!("initial request is point-to-point"),
+        };
+        assert_eq!(w.phase(), Phase::Waiting);
+        w.handle(Message::StatusUpdate { from: first_victim, state: CoreState::Dead });
+        // Still in the protocol: a fresh request went to another peer.
+        assert_eq!(w.phase(), Phase::Waiting);
+        let envs = w.drain_outbox();
+        assert_eq!(envs.len(), 1);
+        assert!(matches!(envs[0].msg, Message::TaskRequest { .. }));
+        assert_ne!(envs[0].to, Dest::One(first_victim), "dead peers are not re-probed");
+        // A first-time Dead from a live peer we are NOT waiting on is only
+        // recorded (pick a rank that is neither us, nor the current
+        // victim, nor the peer already dead).
+        let waiting_on = match envs[0].to {
+            Dest::One(r) => r,
+            Dest::All => unreachable!(),
+        };
+        let bystander = (0..4)
+            .find(|&r| r != 1 && r != waiting_on && r != first_victim)
+            .unwrap();
+        w.handle(Message::StatusUpdate { from: bystander, state: CoreState::Dead });
+        assert!(w.drain_outbox().is_empty(), "no spurious re-probe");
+        assert_eq!(w.phase(), Phase::Waiting);
+        assert_eq!(w.stats.comm.peers_lost, 2, "both deaths were mid-run losses");
+    }
+
+    #[test]
+    fn corrupt_ranks_are_ignored() {
+        let p = ToyTree { height: 3 };
+        let mut w = Worker::new(&p, 0, 2, WorkerConfig::default());
+        w.handle(Message::StatusUpdate { from: 999, state: CoreState::Dead });
+        w.handle(Message::TaskRequest { from: 999 });
+        w.handle(Message::TaskRequest { from: 0 }); // self-request
+        assert!(w.drain_outbox().is_empty(), "corrupt ranks produce no traffic");
     }
 
     #[test]

@@ -25,10 +25,12 @@ pub mod binary;
 pub struct NodeIndex(pub Vec<u32>);
 
 impl NodeIndex {
+    /// The root of the search tree (the paper's index "1"; an empty path).
     pub fn root() -> Self {
         NodeIndex(Vec::new())
     }
 
+    /// Depth of the node below the root (= number of path digits).
     pub fn depth(&self) -> usize {
         self.0.len()
     }
@@ -38,6 +40,7 @@ impl NodeIndex {
         1.0 / (self.depth() as f64 + 1.0)
     }
 
+    /// Index of this node's `k`-th child (append digit `k` to the path).
     pub fn child(&self, k: u32) -> NodeIndex {
         let mut d = self.0.clone();
         d.push(k);

@@ -24,6 +24,28 @@
 //! time.  The XLA/PJRT-backed batched frontier evaluator lives in
 //! [`runtime`] (three-layer integration; see DESIGN.md).
 //!
+//! ## Paper-section → module map
+//!
+//! | Paper section | What it defines | Module |
+//! |---|---|---|
+//! | §II | serial recursive backtracking, determinism contract | [`engine`], [`engine::serial`] |
+//! | §III-A..F | cost model, task buffers critique, core states | [`comm`] ([`comm::CoreState`]), [`baselines`] |
+//! | §IV-A | indexed search trees, `E(N) = idx(N)` | [`index`] ([`index::NodeIndex`]) |
+//! | §IV-A Fig. 4 | `GETHEAVIESTTASKINDEX` / `FIXINDEX` (binary spec) | [`index::binary`] |
+//! | §IV-B Fig. 5/6 | virtual tree, `GETPARENT` / `GETNEXTPARENT` | [`topology`] |
+//! | §IV-B Fig. 7 | the worker protocol (solver + iterator) | [`coordinator`] |
+//! | §IV-B | message kinds and their wire form | [`comm`], [`comm::wire`] (spec: `docs/WIRE_PROTOCOL.md`) |
+//! | §IV-C | generalized two-row index, sibling-subset donation | [`index::CurrentIndex`] |
+//! | §V | VERTEX COVER / DOMINATING SET instantiations | [`problems`] |
+//! | §VI | experiments: Tables I/II, Figs. 9/10, `T_S`/`T_R` | [`experiments`], [`metrics`], `benches/` |
+//! | §VII | join-leave, checkpointing, **multi-machine runs** | [`coordinator`] (`Worker::leave`), [`comm::tcp`], [`runner::cluster`] |
+//!
+//! Execution strategies, all driving the identical worker state machine:
+//! [`runner::solve`] (one OS thread per core over [`comm::local`]),
+//! [`runner::cluster`] (one process per core over [`comm::tcp`] —
+//! `pbt cluster` on the command line), and [`sim::simulate`] (thousands of
+//! virtual cores under discrete-event time).
+//!
 //! ## Quickstart
 //!
 //! ```no_run

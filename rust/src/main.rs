@@ -40,6 +40,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         "solve" => cmd_solve(args),
+        "cluster" => cmd_cluster(args),
         "simulate" => cmd_simulate(args),
         "table1" => cmd_table(args, true),
         "table2" => cmd_table(args, false),
@@ -136,6 +137,167 @@ fn report_run<P: Problem>(
     );
     if let Some(sol) = &r.best_solution {
         println!("{}", describe(sol));
+    }
+}
+
+/// `pbt cluster <listen|join|run>` — multi-process PARALLEL-RB over the
+/// TCP transport (paper §VII; wire format in docs/WIRE_PROTOCOL.md).
+///
+/// Every process must name the *same* instance (generated instances are
+/// seeded, so a name like `phat1` denotes identical bytes everywhere).
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let mode = args.positionals.first().map(String::as_str).unwrap_or("run");
+    let base = match args.get("config") {
+        Some(path) => PbtConfig::from_file(path)?,
+        None => PbtConfig::default(),
+    };
+    let scale = args.get_usize("scale", base.scale)?;
+    let problem_kind = args.get_str("problem", "vc");
+    let inst = args.get_str("instance", "phat1");
+
+    let mut wcfg = base.worker_config();
+    wcfg.donate_batch = args.get_usize("donate-batch", base.cluster.donate_batch)?;
+    wcfg.poll_interval = args.get_u64("poll-interval", wcfg.poll_interval as u64)? as u32;
+    let tcp = base.cluster.tcp_config();
+    let timeout = match args.get_u64("timeout-secs", 0)? {
+        0 => None,
+        secs => Some(std::time::Duration::from_secs(secs)),
+    };
+
+    let g = load_instance(&inst, scale)?;
+    match problem_kind.as_str() {
+        "vc" => {
+            let bound = match args.get_str("bound", &base.bound).as_str() {
+                "none" => BoundKind::None,
+                "matching" => BoundKind::Matching,
+                _ => BoundKind::EdgesOverMaxDeg,
+            };
+            let p = VertexCover::with_bound(&g, bound);
+            run_cluster_mode(mode, args, &base, &p, tcp, wcfg, timeout)
+        }
+        "ds" => {
+            let p = DominatingSet::new(&g);
+            run_cluster_mode(mode, args, &base, &p, tcp, wcfg, timeout)
+        }
+        other => bail!("unknown problem {other:?} (cluster supports vc|ds)"),
+    }
+}
+
+fn run_cluster_mode<P: Problem>(
+    mode: &str,
+    args: &Args,
+    base: &PbtConfig,
+    problem: &P,
+    tcp: pbt::comm::tcp::TcpConfig,
+    wcfg: pbt::coordinator::WorkerConfig,
+    timeout: Option<std::time::Duration>,
+) -> Result<()> {
+    use pbt::runner::cluster;
+    match mode {
+        "listen" => {
+            let bind = args.get_str("bind", &base.cluster.bind);
+            let peers = args.get_usize("peers", base.cluster.peers)?;
+            let report =
+                cluster::listen(problem, &bind, peers, tcp, wcfg, timeout, announce_listening)?;
+            print_cluster_report(&report);
+            Ok(())
+        }
+        "join" => {
+            let connect = args.get_str("connect", &base.cluster.connect);
+            let advertise = args.get_str("advertise", &base.cluster.advertise);
+            let advertise = (!advertise.is_empty()).then_some(advertise);
+            let report =
+                cluster::join(problem, &connect, advertise.as_deref(), tcp, wcfg, timeout)?;
+            print_cluster_report(&report);
+            Ok(())
+        }
+        "run" => {
+            let peers = args.get_usize("peers", base.cluster.peers)?;
+            let listener =
+                pbt::comm::tcp::ClusterListener::bind("127.0.0.1:0", peers, tcp)?;
+            let addr = listener.local_addr()?.to_string();
+            announce_listening(&addr);
+
+            // Spawn peers-1 local join processes of this same binary,
+            // forwarding the problem selection so every rank replays the
+            // identical deterministic search tree.
+            let exe = std::env::current_exe().context("locating own executable")?;
+            let mut children = Vec::new();
+            for _ in 1..peers {
+                let mut cmd = std::process::Command::new(&exe);
+                cmd.arg("cluster").arg("join").arg("--connect").arg(&addr);
+                for key in ["problem", "instance", "scale", "bound", "config",
+                            "poll-interval", "donate-batch", "timeout-secs"] {
+                    if let Some(v) = args.get(key) {
+                        cmd.arg(format!("--{key}")).arg(v);
+                    }
+                }
+                children.push(cmd.spawn().context("spawning cluster join process")?);
+            }
+
+            let transport = match listener.accept_all() {
+                Ok(t) => t,
+                Err(e) => {
+                    // Don't leak joiners: they'd linger until their own
+                    // handshake timeout.
+                    for child in &mut children {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                    }
+                    return Err(e).context("waiting for cluster joiners");
+                }
+            };
+            let report = cluster::run(problem, &transport, wcfg, timeout);
+            print_cluster_report(&report);
+            // Reap every child before judging any of them.
+            let mut failures = Vec::new();
+            for child in &mut children {
+                match child.wait() {
+                    Ok(status) if status.success() => {}
+                    Ok(status) => failures.push(status.to_string()),
+                    Err(e) => failures.push(e.to_string()),
+                }
+            }
+            if !failures.is_empty() {
+                bail!("cluster join process(es) failed: {}", failures.join("; "));
+            }
+            Ok(())
+        }
+        other => bail!("unknown cluster mode {other:?} (listen|join|run)"),
+    }
+}
+
+/// Printed (and flushed) before blocking on joiners, so scripts and tests
+/// can parse the ephemeral rendezvous address.
+fn announce_listening(addr: &str) {
+    use std::io::Write;
+    println!("LISTENING {addr}");
+    let _ = std::io::stdout().flush();
+}
+
+fn print_cluster_report<S>(r: &pbt::runner::cluster::ClusterReport<S>) {
+    println!(
+        "rank {}/{}: best cost: {:?}   time: {}   nodes: {}   T_S: {}   T_R: {}   \
+         wire: {} B{}{}",
+        r.rank,
+        r.c,
+        r.best_cost,
+        human_duration(r.wall_secs),
+        r.stats.search.nodes,
+        r.stats.comm.tasks_received,
+        r.stats.comm.tasks_requested,
+        r.bytes_on_wire,
+        if r.best_solution.is_some() { "   (holds a solution payload)" } else { "" },
+        if r.timed_out { "   TIMED OUT" } else { "" },
+    );
+    if r.peers_lost() > 0 {
+        eprintln!(
+            "warning: rank {}: {} peer connection(s) died mid-run — result is \
+             DEGRADED (lost peers' unfinished subtrees were not explored; \
+             best cost is an upper bound, not a proven optimum)",
+            r.rank,
+            r.peers_lost(),
+        );
     }
 }
 

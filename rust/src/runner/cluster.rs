@@ -1,0 +1,125 @@
+//! Distributed runner: one [`Worker`] per *process*, connected by
+//! [`TcpTransport`] — the paper's protocol crossing real process and
+//! machine boundaries.
+//!
+//! The worker state machine is byte-for-byte the one the thread runner and
+//! the simulator drive; this module only supplies bring-up
+//! ([`listen`]/[`join`]) and the per-process report.  See
+//! `docs/WIRE_PROTOCOL.md` for what actually crosses the network and
+//! `README.md` for the two-process localhost walkthrough.
+
+use super::drive_worker;
+use crate::comm::tcp::{ClusterListener, TcpConfig, TcpTransport};
+use crate::comm::Transport;
+use crate::coordinator::{Worker, WorkerConfig, WorkerStats};
+use crate::engine::{Problem, SearchState};
+use crate::util::Stopwatch;
+use crate::{Cost, COST_INF};
+use std::time::Duration;
+
+/// What one cluster process reports after termination.
+///
+/// Unlike [`RunReport`](super::RunReport) this is per-rank: each process
+/// only holds its own statistics.  `best_cost` converges to the global
+/// optimum on every rank (incumbent costs are broadcast), while the
+/// payload stays with its finder (the paper's §IV-B: peers need the cost
+/// for pruning, not the payload) — the rank that found the final incumbent
+/// reports a `best_solution` of that cost; other ranks may report an
+/// earlier, superseded payload or none.
+#[derive(Debug, Clone)]
+pub struct ClusterReport<S> {
+    /// This process's rank.
+    pub rank: usize,
+    /// Total ranks in the cluster.
+    pub c: usize,
+    /// The optimum cost this rank knows at termination (globally agreed
+    /// when `broadcast_solutions` is on, which is the default).
+    pub best_cost: Option<Cost>,
+    /// The optimal solution payload, if this rank was its finder.
+    pub best_solution: Option<S>,
+    /// Wall-clock seconds from mesh-up to termination.
+    pub wall_secs: f64,
+    /// This rank's search + communication statistics.
+    pub stats: WorkerStats,
+    /// Bytes this rank actually put on sockets (frame headers included).
+    pub bytes_on_wire: u64,
+    /// Whether the deadline fired before protocol termination.
+    pub timed_out: bool,
+}
+
+impl<S> ClusterReport<S> {
+    /// Peers that went Dead while still Active (crash or severed link,
+    /// `CommStats::peers_lost`).  Non-zero means the run is DEGRADED:
+    /// subtrees held by (or donated to) a lost peer were explored by
+    /// nobody, so `best_cost` is an upper bound rather than a proven
+    /// optimum.  Only a graceful [`Worker::leave`] preserves work (paper
+    /// §VII, via checkpoint export); clean exits broadcast Inactive before
+    /// their socket closes and are not counted.
+    pub fn peers_lost(&self) -> u64 {
+        self.stats.comm.peers_lost
+    }
+}
+
+/// Run this process as the rendezvous listener (rank 0, seeded with the
+/// root task) of a `c`-rank cluster.  Blocks until all `c - 1` peers join,
+/// then until the protocol terminates.
+///
+/// `on_bound` is called with the actually-bound rendezvous address before
+/// waiting (so callers can print it / hand it to joiners when binding
+/// port 0).
+pub fn listen<P: Problem>(
+    problem: &P,
+    bind: &str,
+    c: usize,
+    tcp: TcpConfig,
+    worker: WorkerConfig,
+    timeout: Option<Duration>,
+    on_bound: impl FnOnce(&str),
+) -> std::io::Result<ClusterReport<<P::State as SearchState>::Sol>> {
+    let listener = ClusterListener::bind(bind, c, tcp)?;
+    on_bound(&listener.local_addr()?.to_string());
+    let transport = listener.accept_all()?;
+    Ok(run(problem, &transport, worker, timeout))
+}
+
+/// Join the cluster at `rendezvous_addr` and run this process's worker to
+/// termination.  `advertise_host` overrides the auto-detected mesh host
+/// (see [`TcpTransport::join_advertised`]).
+pub fn join<P: Problem>(
+    problem: &P,
+    rendezvous_addr: &str,
+    advertise_host: Option<&str>,
+    tcp: TcpConfig,
+    worker: WorkerConfig,
+    timeout: Option<Duration>,
+) -> std::io::Result<ClusterReport<<P::State as SearchState>::Sol>> {
+    let transport = TcpTransport::join_advertised(rendezvous_addr, advertise_host, tcp)?;
+    Ok(run(problem, &transport, worker, timeout))
+}
+
+/// Drive one worker over an already-built mesh.  Public so integration
+/// tests (and embedders with their own bring-up) can run the protocol over
+/// any [`TcpTransport`].
+pub fn run<P: Problem>(
+    problem: &P,
+    transport: &TcpTransport,
+    wcfg: WorkerConfig,
+    timeout: Option<Duration>,
+) -> ClusterReport<<P::State as SearchState>::Sol> {
+    let rank = transport.rank();
+    let c = transport.num_ranks();
+    let sw = Stopwatch::new();
+    let deadline = timeout.map(|t| std::time::Instant::now() + t);
+    let mut worker = Worker::new(problem, rank, c, wcfg);
+    let timed_out = drive_worker(&mut worker, transport, deadline);
+    ClusterReport {
+        rank,
+        c,
+        best_cost: (worker.best != COST_INF).then_some(worker.best),
+        best_solution: worker.best_solution.take(),
+        wall_secs: sw.elapsed_secs(),
+        stats: worker.stats,
+        bytes_on_wire: transport.bytes_on_wire(),
+        timed_out,
+    }
+}

@@ -1,7 +1,20 @@
-//! Thread runner: drives one [`Worker`](crate::coordinator::Worker) per OS
-//! thread over the [`LocalTransport`](crate::comm::local::LocalTransport)
-//! mesh — the real-parallelism path (MPI stand-in).  Larger core counts run
-//! under the virtual-time simulator ([`crate::sim`]) instead.
+//! Runners: the drivers that pump a [`Worker`](crate::coordinator::Worker)
+//! state machine over a [`Transport`].
+//!
+//! * [`solve`] — one worker per OS thread over the
+//!   [`LocalTransport`](crate::comm::local::LocalTransport) mesh (MPI
+//!   stand-in); the single-machine real-parallelism path.
+//! * [`cluster`] — one worker per *process* over
+//!   [`TcpTransport`](crate::comm::tcp::TcpTransport); the multi-machine
+//!   path (`pbt cluster ...`).
+//! * Larger core counts run under the virtual-time simulator
+//!   ([`crate::sim`]) instead.
+//!
+//! All of them drive the identical worker state machine through the shared
+//! [`drive_worker`] loop — the paper's transport-obliviousness claim is a
+//! function signature here, not prose.
+
+pub mod cluster;
 
 use crate::comm::local::LocalTransport;
 use crate::comm::{CommStats, Dest, Transport};
@@ -108,48 +121,7 @@ pub fn solve<P: Problem>(
                     scope.spawn(move || {
                         let rank = transport.rank();
                         let mut worker = Worker::new(problem, rank, c, wcfg);
-                        let mut timed_out = false;
-                        flush(&mut worker, &transport);
-                        loop {
-                            // Non-blocking drain (solver-side communication).
-                            while let Some(msg) = transport.try_recv() {
-                                worker.handle(msg);
-                            }
-                            flush(&mut worker, &transport);
-                            match worker.phase() {
-                                Phase::Working => {
-                                    let batch = worker.poll_interval();
-                                    worker.step_batch(batch);
-                                    flush(&mut worker, &transport);
-                                }
-                                Phase::Waiting => {
-                                    // Iterator-side blocking receive.
-                                    if let Some(msg) =
-                                        transport.recv_timeout(Duration::from_millis(5))
-                                    {
-                                        worker.handle(msg);
-                                        flush(&mut worker, &transport);
-                                    }
-                                }
-                                Phase::Inactive | Phase::Dead => {
-                                    if worker.sees_global_termination() {
-                                        break;
-                                    }
-                                    if let Some(msg) =
-                                        transport.recv_timeout(Duration::from_millis(5))
-                                    {
-                                        worker.handle(msg);
-                                        flush(&mut worker, &transport);
-                                    }
-                                }
-                            }
-                            if let Some(d) = deadline {
-                                if std::time::Instant::now() > d {
-                                    timed_out = true;
-                                    break;
-                                }
-                            }
-                        }
+                        let timed_out = drive_worker(&mut worker, &transport, deadline);
                         (worker.stats, worker.best, worker.best_solution.take(), timed_out)
                     })
                 })
@@ -181,8 +153,58 @@ pub fn solve<P: Problem>(
     }
 }
 
+/// Drive one worker to termination over any [`Transport`]: the
+/// PARALLEL-RB-SOLVER/-ITERATOR outer loop (paper Fig. 7), shared verbatim
+/// by the thread runner and the TCP cluster runner.  Returns whether the
+/// deadline fired before termination.
+pub fn drive_worker<P: Problem, T: Transport>(
+    worker: &mut Worker<'_, P>,
+    transport: &T,
+    deadline: Option<std::time::Instant>,
+) -> bool {
+    let mut timed_out = false;
+    flush(worker, transport);
+    loop {
+        // Non-blocking drain (solver-side communication).
+        while let Some(msg) = transport.try_recv() {
+            worker.handle(msg);
+        }
+        flush(worker, transport);
+        match worker.phase() {
+            Phase::Working => {
+                let batch = worker.poll_interval();
+                worker.step_batch(batch);
+                flush(worker, transport);
+            }
+            Phase::Waiting => {
+                // Iterator-side blocking receive.
+                if let Some(msg) = transport.recv_timeout(Duration::from_millis(5)) {
+                    worker.handle(msg);
+                    flush(worker, transport);
+                }
+            }
+            Phase::Inactive | Phase::Dead => {
+                if worker.sees_global_termination() {
+                    break;
+                }
+                if let Some(msg) = transport.recv_timeout(Duration::from_millis(5)) {
+                    worker.handle(msg);
+                    flush(worker, transport);
+                }
+            }
+        }
+        if let Some(d) = deadline {
+            if std::time::Instant::now() > d {
+                timed_out = true;
+                break;
+            }
+        }
+    }
+    timed_out
+}
+
 /// Deliver a worker's queued envelopes over the transport.
-fn flush<P: Problem>(worker: &mut Worker<'_, P>, transport: &LocalTransport) {
+fn flush<P: Problem, T: Transport>(worker: &mut Worker<'_, P>, transport: &T) {
     for env in worker.drain_outbox() {
         match env.to {
             Dest::One(r) => transport.send(r, env.msg),

@@ -327,6 +327,57 @@ fn prop_parallel_vc_agrees_with_serial_and_bruteforce() {
 }
 
 #[test]
+fn prop_wire_codec_roundtrips_and_matches_wire_bytes() {
+    use pbt::comm::{wire, CoreState, Message};
+    Runner::new(400, 99).run(|g| {
+        let from = g.usize_in(0, 1 << 20);
+        let msg = match g.usize_in(0, 4) {
+            0 => Message::StatusUpdate {
+                from,
+                state: match g.usize_in(0, 3) {
+                    0 => CoreState::Active,
+                    1 => CoreState::Inactive,
+                    _ => CoreState::Dead,
+                },
+            },
+            1 => Message::TaskRequest { from },
+            2 => {
+                let n = g.usize_in(0, 6);
+                let tasks = (0..n).map(|_| NodeIndex(g.vec_u32(48, 9))).collect();
+                Message::TaskResponse { from, tasks }
+            }
+            _ => Message::Notification { from, best: g.seed() },
+        };
+        // The codec IS the statistics model: encoded length == wire_bytes.
+        let bytes = wire::encode(&msg);
+        prop_assert!(
+            bytes.len() == msg.wire_bytes(),
+            "encoded {} bytes but wire_bytes says {} for {msg:?}",
+            bytes.len(),
+            msg.wire_bytes()
+        );
+        prop_assert!(
+            wire::encoded_len(&msg) == msg.wire_bytes(),
+            "encoded_len disagrees for {msg:?}"
+        );
+        // Exact round-trip through the byte payload.
+        let back = wire::decode(&bytes);
+        prop_assert!(back.as_ref() == Ok(&msg), "decode(encode(m)) = {back:?} != {msg:?}");
+        // And through a framed byte stream.
+        let mut framed = Vec::new();
+        wire::write_frame(&mut framed, &msg).expect("writing to a Vec");
+        prop_assert!(
+            framed.len() == wire::FRAME_HEADER_BYTES + msg.wire_bytes(),
+            "frame adds exactly the header"
+        );
+        let mut cursor = std::io::Cursor::new(framed);
+        let unframed = wire::read_frame(&mut cursor).expect("reading back");
+        prop_assert!(unframed.as_ref() == Some(&msg), "framed roundtrip");
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_hybrid_rollback_exact() {
     Runner::new(60, 77).run(|g| {
         let n = g.usize_in(8, 40);

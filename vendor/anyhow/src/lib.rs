@@ -1,0 +1,247 @@
+//! A small, offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment for this repository has no network access and no
+//! registry mirror, so the real `anyhow` cannot be fetched; this vendored
+//! shim implements the subset the `pbt` crate actually uses:
+//!
+//! * [`Error`] — an opaque error that carries a chain of context strings
+//!   around a root cause.
+//! * [`Result<T>`] — alias for `std::result::Result<T, Error>`.
+//! * [`Context`] — `.context(msg)` / `.with_context(|| msg)` on both
+//!   `Result` (any `std::error::Error` cause, or an existing [`Error`]) and
+//!   `Option`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Semantics follow the real crate where it matters here: `{}` displays the
+//! outermost message, `{:#}` displays the whole chain separated by `": "`,
+//! and `?` converts any `std::error::Error + Send + Sync + 'static` into an
+//! [`Error`].  (As in real `anyhow`, [`Error`] itself deliberately does not
+//! implement `std::error::Error` so that the blanket `From` impl stays
+//! coherent.)
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Convenient alias used pervasively by the main crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a stack of human-readable context frames (most recent
+/// first) over an optional root cause.
+pub struct Error {
+    /// Context messages, outermost (most recently attached) first.
+    chain: Vec<String>,
+    /// The typed root cause, when the error originated from a real
+    /// `std::error::Error` rather than a bare message.
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()], source: None }
+    }
+
+    /// Create an error from a typed root cause.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error { chain: Vec::new(), source: Some(Box::new(error)) }
+    }
+
+    /// Attach an outer context frame (most significant first in display).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The typed root cause, if this error wraps one.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+
+    /// Iterate the full chain of messages, outermost first (the shim's
+    /// equivalent of `anyhow::Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = String> + '_ {
+        self.chain
+            .iter()
+            .cloned()
+            .chain(self.source.iter().map(|e| e.to_string()))
+    }
+
+    /// Is the root cause of this error of type `E`?
+    pub fn is<E: StdError + 'static>(&self) -> bool {
+        self.source.as_deref().map_or(false, |e| e.is::<E>())
+    }
+
+    /// Downcast a reference to the root cause.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.source.as_deref().and_then(|e| {
+            (e as &(dyn StdError + 'static)).downcast_ref::<E>()
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, "outer: inner: root".
+            let mut first = true;
+            for msg in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            match self.chain.first() {
+                Some(outer) => write!(f, "{outer}"),
+                None => match &self.source {
+                    Some(root) => write!(f, "{root}"),
+                    None => write!(f, "unknown error"),
+                },
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirror anyhow's debug rendering: message plus "Caused by" frames.
+        let mut msgs = self.chain();
+        match msgs.next() {
+            Some(outer) => write!(f, "{outer}")?,
+            None => write!(f, "unknown error")?,
+        }
+        let rest: Vec<String> = msgs.collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, msg) in rest.iter().enumerate() {
+                write!(f, "\n    {i}: {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Extension trait providing `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a static context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error (or `None`) with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let v = Err::<u32, std::io::Error>(io_err())?;
+            Ok(v)
+        }
+        let e = inner().unwrap_err();
+        assert!(e.is::<std::io::Error>());
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn context_chains_display() {
+        let e: Result<(), std::io::Error> = Err(io_err());
+        let e = e.context("reading config").unwrap_err().context("startup");
+        assert_eq!(format!("{e}"), "startup");
+        assert_eq!(format!("{e:#}"), "startup: reading config: missing");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+        assert!(Some(3u32).context("unused").is_ok());
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky 7");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+        let e = anyhow!("plain {}", 1);
+        assert_eq!(e.to_string(), "plain 1");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("root")
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root");
+    }
+}
