@@ -1,14 +1,11 @@
-//! Ablation A4 (paper §V): incumbent-notification broadcast on/off — the
-//! broadcast is what turns distributed search into distributed
-//! branch-and-bound (nodes visited drop sharply with it on).
-//! `cargo bench --bench ablate_broadcast [-- <scale> <threads>]`
-
-use pbt::experiments;
+//! Thin wrapper over the shared driver in `pbt::bench::standalone` —
+//! see that module for what this target measures and its arguments.
+//! `cargo bench --bench ablate_broadcast [-- <args>]`
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let scale: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1);
-    let threads: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
-    println!("== A4: solution broadcast (pruning) on vs off");
-    println!("{}", experiments::ablate_broadcast(scale, threads).render());
+    if let Err(e) = pbt::bench::standalone::run("ablate_broadcast", &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
 }

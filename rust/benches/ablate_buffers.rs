@@ -1,14 +1,11 @@
-//! Ablation A2 (paper §III-B): bufferless PARALLEL-RB vs the master–worker
-//! buffered work pool [15] across buffer capacities.
-//! `cargo bench --bench ablate_buffers [-- <scale> <threads>]`
-
-use pbt::experiments;
+//! Thin wrapper over the shared driver in `pbt::bench::standalone` —
+//! see that module for what this target measures and its arguments.
+//! `cargo bench --bench ablate_buffers [-- <args>]`
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let scale: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1);
-    let threads: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
-    println!("== A2: bufferless indexed framework vs buffered work-pool [15]");
-    println!("   paper claim: buffers add a tuning parameter and light-task churn;\n");
-    println!("{}", experiments::ablate_buffers(scale, threads).render());
+    if let Err(e) = pbt::bench::standalone::run("ablate_buffers", &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
 }

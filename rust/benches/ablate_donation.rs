@@ -1,14 +1,11 @@
-//! Ablation A5 (paper §IV-C): tasks donated per response — 1 (the binary
-//! behaviour) vs a suffix subset of siblings.
-//! `cargo bench --bench ablate_donation [-- <scale> <cores>]`
-
-use pbt::experiments;
+//! Thin wrapper over the shared driver in `pbt::bench::standalone` —
+//! see that module for what this target measures and its arguments.
+//! `cargo bench --bench ablate_donation [-- <args>]`
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let scale: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1);
-    let cores: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
-    println!("== A5: donation batch size (§IV-C subset-of-siblings)");
-    println!("   larger batches cut request round-trips but hand out lighter tasks.\n");
-    println!("{}", experiments::ablate_donation(scale, cores).render());
+    if let Err(e) = pbt::bench::standalone::run("ablate_donation", &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
 }

@@ -1,14 +1,11 @@
-//! Ablation A1 (paper §III-B vs §IV-A): index task encoding vs
-//! Finkel–Manber full-state copy — bytes per task and decode time.
-//! `cargo bench --bench ablate_encoding [-- <scale>]`
-
-use pbt::experiments;
+//! Thin wrapper over the shared driver in `pbt::bench::standalone` —
+//! see that module for what this target measures and its arguments.
+//! `cargo bench --bench ablate_encoding [-- <args>]`
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let scale: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1);
-    println!("== A1: task encoding — index (O(d)) vs full state (O(n+m))");
-    println!("   paper claim: the indexed scheme eliminates buffer memory and");
-    println!("   shrinks messages; decode pays CONVERTINDEX replay instead.\n");
-    println!("{}", experiments::ablate_encoding(scale).render());
+    if let Err(e) = pbt::bench::standalone::run("ablate_encoding", &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
 }

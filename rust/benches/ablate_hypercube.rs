@@ -1,14 +1,11 @@
-//! Ablation A6 (paper §VII future work): fully-connected round-robin
-//! probing vs a bounded-degree hypercube topology — does bounding the
-//! degree make the T_S/T_R gap "weakly dependent on |C|" as hoped?
-//! `cargo bench --bench ablate_hypercube [-- <scale> <max_cores>]`
-
-use pbt::experiments;
+//! Thin wrapper over the shared driver in `pbt::bench::standalone` —
+//! see that module for what this target measures and its arguments.
+//! `cargo bench --bench ablate_hypercube [-- <args>]`
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let scale: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1);
-    let max_cores: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(512);
-    println!("== A6: fully-connected vs hypercube virtual topology (§VII)");
-    println!("{}", experiments::ablate_hypercube(scale, max_cores).render());
+    if let Err(e) = pbt::bench::standalone::run("ablate_hypercube", &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
 }

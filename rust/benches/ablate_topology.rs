@@ -1,15 +1,11 @@
-//! Ablation A3 (paper §IV-B): GETPARENT virtual-tree initial distribution
-//! vs random stealing vs naive all-ask-rank-0 vs static split.
-//! `cargo bench --bench ablate_topology [-- <scale> <threads>]`
-
-use pbt::experiments;
+//! Thin wrapper over the shared driver in `pbt::bench::standalone` —
+//! see that module for what this target measures and its arguments.
+//! `cargo bench --bench ablate_topology [-- <args>]`
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let scale: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1);
-    let threads: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
-    println!("== A3: victim-selection / initial-distribution strategies");
-    println!("   paper claim: the virtual tree balances the initial phase and");
-    println!("   round-robin keeps the gap |T_S - T_R| controlled.\n");
-    println!("{}", experiments::ablate_topology(scale, threads).render());
+    if let Err(e) = pbt::bench::standalone::run("ablate_topology", &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
 }

@@ -1,35 +1,11 @@
-//! Bench: regenerate **Figure 10** — log2(average message transmissions)
-//! vs cores, `T_S` (tasks received) and `T_R` (tasks requested) per
-//! instance.  The paper's claim: the `T_S`/`T_R` gap widens with |C|.
-//! `cargo bench --bench fig10 [-- <scale> <max_cores>]`
-
-use pbt::experiments;
-use pbt::metrics::{ascii_chart, fig10_series};
+//! Thin wrapper over the shared driver in `pbt::bench::standalone` —
+//! see that module for what this target measures and its arguments.
+//! `cargo bench --bench fig10 [-- <args>]`
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    // Default scale 0 / 512 cores keeps `cargo bench` wall time modest; the
-    // figures at any scale: `cargo bench --bench fig9 -- 2 4096`.
-    let scale: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(0);
-    let max_cores: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(512);
-
-    let mut rows = experiments::table1(scale, max_cores);
-    rows.extend(experiments::table2(scale, max_cores));
-    let series = fig10_series(&rows);
-
-    let mut chart = Vec::new();
-    for (name, pts) in &series {
-        chart.push((format!("{name} T_S"), pts.iter().map(|&(c, s, _)| (c, s)).collect()));
-        chart.push((format!("{name} T_R"), pts.iter().map(|&(c, _, r)| (c, r)).collect()));
-    }
-    println!(
-        "{}",
-        ascii_chart("Figure 10: log2 avg messages vs log2 cores (T_R pulls away from T_S)", &chart, 18)
-    );
-    println!("instance,cores,T_S,T_R,gap");
-    for (name, pts) in &series {
-        for (c, ts, tr) in pts {
-            println!("{name},{c},{:.0},{:.0},{:.0}", 2f64.powf(*ts), 2f64.powf(*tr), 2f64.powf(*tr) - 2f64.powf(*ts));
-        }
+    if let Err(e) = pbt::bench::standalone::run("fig10", &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
     }
 }

@@ -1,29 +1,11 @@
-//! Bench: regenerate **Figure 9** — log2(running time) vs number of cores
-//! for every instance of Tables I and II.
-//! `cargo bench --bench fig9 [-- <scale> <max_cores>]`
-
-use pbt::experiments;
-use pbt::metrics::{ascii_chart, fig9_series};
+//! Thin wrapper over the shared driver in `pbt::bench::standalone` —
+//! see that module for what this target measures and its arguments.
+//! `cargo bench --bench fig9 [-- <args>]`
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    // Default scale 0 / 512 cores keeps `cargo bench` wall time modest; the
-    // figures at any scale: `cargo bench --bench fig9 -- 2 4096`.
-    let scale: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(0);
-    let max_cores: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(512);
-
-    let mut rows = experiments::table1(scale, max_cores);
-    rows.extend(experiments::table2(scale, max_cores));
-    let series = fig9_series(&rows);
-    println!(
-        "{}",
-        ascii_chart("Figure 9: log2 running time (s) vs log2 cores — descending ≈ linear speedup", &series, 18)
-    );
-    // The numbers behind the chart (CSV for external plotting).
-    println!("instance,cores,log2_time_s");
-    for (name, pts) in &series {
-        for (c, y) in pts {
-            println!("{name},{c},{y:.3}");
-        }
+    if let Err(e) = pbt::bench::standalone::run("fig9", &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
     }
 }

@@ -1,127 +1,15 @@
-//! §Perf bench: the L3 hot paths in isolation —
-//!   * node-visit throughput of the steppable engine on VC / DS / Queens;
-//!   * donation cost (GETHEAVIESTTASKINDEX);
-//!   * CONVERTINDEX replay cost vs depth;
-//!   * poll-interval sweep on a real 8-thread run (message-handling tax).
+//! Thin wrapper over the shared driver in `pbt::bench::standalone` —
+//! the §Perf hot paths in isolation (node-visit throughput, CONVERTINDEX
+//! replay cost, donation cost, poll-interval sweep).
 //! `cargo bench --bench hotpath`
-
-use pbt::coordinator::WorkerConfig;
-use pbt::engine::serial::solve_serial;
-use pbt::engine::{Stepper, StepResult};
-use pbt::instances::generators;
-use pbt::problems::{BoundKind, DominatingSet, NQueens, VertexCover};
-use pbt::runner::{self, RunConfig};
-use pbt::util::timer::bench;
-use pbt::COST_INF;
-use std::time::Duration;
+//!
+//! For the machine-readable, CI-gated version of these measurements use
+//! `pbt bench` (writes `BENCH_<label>.json`; see docs/BENCHMARKS.md).
 
 fn main() {
-    println!("== hotpath: engine node-visit throughput (serial, release)");
-    println!("| problem | nodes | Mnodes/s |");
-    println!("|---|---|---|");
-
-    let g = generators::gnm(100, 1000, 31);
-    for (name, nodes_fn) in [
-        ("VC gnm(100,1000) ceil(m/Δ)", {
-            let g = g.clone();
-            Box::new(move || {
-                let p = VertexCover::new(&g);
-                solve_serial(&p, u64::MAX).stats.nodes
-            }) as Box<dyn Fn() -> u64>
-        }),
-        ("VC gnm(100,1000) matching", {
-            let g = g.clone();
-            Box::new(move || {
-                let p = VertexCover::with_bound(&g, BoundKind::Matching);
-                solve_serial(&p, u64::MAX).stats.nodes
-            })
-        }),
-        ("VC cell60-like(84)", {
-            Box::new(move || {
-                let g = generators::cell60_like(84);
-                let p = VertexCover::new(&g);
-                solve_serial(&p, u64::MAX).stats.nodes
-            })
-        }),
-        ("DS 70x280.ds", {
-            Box::new(move || {
-                let g = generators::random_ds(70, 280, 41);
-                let p = DominatingSet::new(&g);
-                solve_serial(&p, u64::MAX).stats.nodes
-            })
-        }),
-        ("N-Queens 10", {
-            Box::new(move || {
-                let p = NQueens::new(10);
-                solve_serial(&p, u64::MAX).stats.nodes
-            })
-        }),
-    ] {
-        let mut nodes = 0u64;
-        let r = bench(Duration::from_millis(800), 3, || {
-            nodes = nodes_fn();
-        });
-        println!("| {name} | {nodes} | {:.2} |", nodes as f64 / r.mean_secs() / 1e6);
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    if let Err(e) = pbt::bench::standalone::run("hotpath", &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
     }
-
-    println!("\n== CONVERTINDEX replay cost vs depth (VC gnm(100,1000))");
-    println!("| depth | µs/replay |");
-    println!("|---|---|");
-    let p = VertexCover::new(&g);
-    let mut donor = Stepper::at_root(&p);
-    let mut indices = Vec::new();
-    for _ in 0..4000 {
-        if let StepResult::Exhausted = donor.step(COST_INF) {
-            break;
-        }
-        if let Some(idx) = donor.donate() {
-            indices.push(idx);
-        }
-    }
-    for target in [2usize, 8, 16, 32] {
-        if let Some(idx) = indices.iter().filter(|i| i.depth() >= target).min_by_key(|i| i.depth())
-        {
-            let r = bench(Duration::from_millis(200), 10, || {
-                let _ = Stepper::from_index(&p, idx).unwrap();
-            });
-            println!("| {} | {:.1} |", idx.depth(), r.mean_secs() * 1e6);
-        }
-    }
-
-    println!("\n== donation cost (GETHEAVIESTTASKINDEX over live bookkeeping)");
-    let mut s = Stepper::at_root(&p);
-    for _ in 0..200 {
-        s.step(COST_INF);
-    }
-    let r = bench(Duration::from_millis(200), 100, || {
-        if let Some(_idx) = s.donate() {
-        } else {
-            // refill donatable supply
-            for _ in 0..50 {
-                s.step(COST_INF);
-            }
-        }
-    });
-    println!("donate+refill amortized: {:.2} µs", r.mean_secs() * 1e6);
-
-    println!("\n== poll-interval sweep (8 threads, VC cell60-like(84))");
-    println!("| poll_interval | wall s | T_S total |");
-    println!("|---|---|---|");
-    let hard = generators::cell60_like(84);
-    let hp = VertexCover::new(&hard);
-    for poll in [1u32, 4, 16, 64, 256] {
-        let mut best = f64::MAX;
-        let mut ts = 0;
-        for _ in 0..3 {
-            let mut cfg = RunConfig { workers: 8, ..Default::default() };
-            cfg.worker.poll_interval = poll;
-            let rep = runner::solve(&hp, &cfg);
-            if rep.wall_secs < best {
-                best = rep.wall_secs;
-                ts = rep.total_comm().tasks_received;
-            }
-        }
-        println!("| {poll} | {best:.3} | {ts} |");
-    }
-    let _ = WorkerConfig::default();
 }

@@ -1,22 +1,11 @@
-//! Bench: regenerate **Table II** (PARALLEL-DOMINATING-SET statistics).
-//! `cargo bench --bench table2 [-- <scale> <max_cores>]`
-
-use pbt::experiments;
-use pbt::metrics::{paper_table, speedups};
+//! Thin wrapper over the shared driver in `pbt::bench::standalone` —
+//! see that module for what this target measures and its arguments.
+//! `cargo bench --bench table2 [-- <args>]`
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let scale: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1);
-    let max_cores: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1024);
-
-    println!("== Table II: PARALLEL-DOMINATING-SET (scale {scale}, cores <= {max_cores})");
-    println!("   paper: 201x1500.ds / 251x6000.ds on BGQ; here: seeded scaled analogues\n");
-    let t = std::time::Instant::now();
-    let rows = experiments::table2(scale, max_cores);
-    println!("{}", paper_table(&rows).render());
-    println!("normalized speedups (1.0 = linear):");
-    for (inst, c, s) in speedups(&rows) {
-        println!("  {inst:<24} |C|={c:<7} {s:.2}");
+    if let Err(e) = pbt::bench::standalone::run("table2", &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
     }
-    println!("\nbench wall time: {:.1}s", t.elapsed().as_secs_f64());
 }

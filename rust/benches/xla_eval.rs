@@ -1,70 +1,13 @@
-//! Bench X1: XLA batched frontier evaluation (L1 Pallas + L2 jax, AOT via
-//! PJRT) vs the rust-native per-node loop — throughput in node-evals/s and
-//! the batch-size crossover.  Skips gracefully when artifacts are missing.
+//! Thin wrapper over the shared driver in `pbt::bench::standalone` —
+//! bench X1: XLA batched frontier evaluation (L1 Pallas + L2 jax, AOT via
+//! PJRT) vs the rust-native per-node loop.  Skips gracefully when
+//! artifacts are missing.
 //! `cargo bench --bench xla_eval`
 
-use pbt::instances::generators;
-use pbt::runtime::evaluator::{native_frontier_eval, XlaEvaluator};
-use pbt::runtime::discover_variants;
-use pbt::util::timer::bench;
-use pbt::util::BitSet;
-use std::time::Duration;
-
 fn main() {
-    let dir = ["artifacts", "../artifacts"]
-        .into_iter()
-        .find(|d| discover_variants(d).map(|v| !v.is_empty()).unwrap_or(false));
-    let Some(dir) = dir else {
-        println!("SKIP: no artifacts/ found — run `make artifacts` first");
-        return;
-    };
-    let client = xla::PjRtClient::cpu().expect("PJRT CPU client");
-
-    println!("== X1: batched frontier evaluation — XLA (AOT) vs rust-native");
-    println!("| n(padded) | batch | XLA µs/batch | XLA µs/node | native µs/node | native wins? |");
-    println!("|---|---|---|---|---|---|");
-    for (n_req, seed) in [(100usize, 42u64), (250, 43)] {
-        let g = generators::gnm(n_req, n_req * 8, seed);
-        let eval = match XlaEvaluator::from_artifacts_dir(&client, dir, g.num_vertices()) {
-            Ok(e) => e,
-            Err(_) => continue,
-        };
-        let n = eval.padded_n();
-        let b = eval.batch_size();
-        let adj = eval.padded_adjacency(&g).unwrap();
-        let mut rng = pbt::util::Rng::new(7);
-        let masks: Vec<BitSet> = (0..b)
-            .map(|_| {
-                let mut m = BitSet::new(n);
-                for v in 0..g.num_vertices() {
-                    if rng.gen_bool(0.8) {
-                        m.insert(v);
-                    }
-                }
-                m
-            })
-            .collect();
-        let refs: Vec<&BitSet> = masks.iter().collect();
-        let packed = eval.padded_masks(&refs).unwrap();
-
-        let xla = bench(Duration::from_millis(300), 5, || {
-            let _ = eval.eval(&adj, &packed).unwrap();
-        });
-        let native = bench(Duration::from_millis(300), 5, || {
-            for m in &masks {
-                let _ = native_frontier_eval(&adj, n, m);
-            }
-        });
-        let xla_us = xla.mean_secs() * 1e6;
-        let nat_us = native.mean_secs() * 1e6 / b as f64;
-        println!(
-            "| {n} | {b} | {xla_us:.1} | {:.2} | {nat_us:.2} | {} |",
-            xla_us / b as f64,
-            if nat_us < xla_us / b as f64 { "yes" } else { "no" },
-        );
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    if let Err(e) = pbt::bench::standalone::run("xla_eval", &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
     }
-    println!();
-    println!("note: per-node XLA dispatch would drown in host latency (the paper's");
-    println!("§III-D butterfly effect) — this is why the default hot path is native");
-    println!("and XLA is applied per frontier *batch*; see DESIGN.md.");
 }

@@ -1,0 +1,721 @@
+//! The unified benchmark subsystem behind `pbt bench` (and the thin
+//! `benches/*.rs` wrappers — see [`standalone`]).
+//!
+//! Three layers:
+//!
+//! * [`run_suite`] — the deterministic measurement suite: hot-path
+//!   microbenchmarks (VC / DS / N-Queens node-visit throughput on seeded
+//!   instances), a real-thread runner sweep, and a virtual-time simulator
+//!   sweep.  Every instance comes from the seeded generators, so two runs
+//!   on the same machine measure the same search trees.
+//! * [`BenchReport`] — the machine-readable result
+//!   (`BENCH_<label>.json`): suite version, git revision, a calibration
+//!   throughput, and per-case nodes/sec, makespan and donation counts.
+//!   Schema documented in `docs/BENCHMARKS.md`.
+//! * [`check_against`] — the regression gate: compares a fresh report
+//!   against a committed baseline and fails on >`tolerance` throughput
+//!   regression (CI runs `pbt bench --smoke --check
+//!   benchmarks/baseline.json` on every push).
+//!
+//! Machine-speed normalization: raw nodes/sec is not comparable across
+//! hosts, so wall-clock cases are gated on their ratio to
+//! `calibration_nps` — the throughput of a fixed integer-mixing kernel
+//! measured in the same run.  The kernel is deliberately **engine-
+//! independent** (it never touches the Stepper): if it shared the hot
+//! path, an engine-wide slowdown would move numerator and denominator
+//! together and the gate would normalize the regression away.  Simulator
+//! cases are gated on **virtual** makespan, which is deterministic and
+//! machine-independent.
+
+pub mod json;
+pub mod standalone;
+
+use crate::coordinator::WorkerConfig;
+use crate::engine::serial::solve_serial;
+use crate::experiments::TICKS_PER_SEC;
+use crate::instances::generators;
+use crate::metrics::nodes_per_sec;
+use crate::problems::{BoundKind, DominatingSet, NQueens, VertexCover};
+use crate::runner::{self, RunConfig};
+use crate::sim::{simulate, SimConfig};
+use crate::util::table::Table;
+use anyhow::{bail, Context, Result};
+use json::Json;
+
+/// Bumped when the case list or the JSON schema changes incompatibly;
+/// [`check_against`] refuses to gate across different suite versions.
+pub const SUITE_VERSION: u32 = 1;
+
+/// Default regression tolerance: fail when a case loses more than this
+/// fraction of its (calibrated) throughput, or gains it in makespan.
+pub const DEFAULT_TOLERANCE: f64 = 0.20;
+
+/// Suite options.
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Smoke mode: smaller instances, shorter measurement windows, shorter
+    /// sweeps — CI-sized (tens of seconds), same schema.
+    pub smoke: bool,
+    /// Label stamped into the report and the default output file name.
+    pub label: String,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions { smoke: false, label: "local".into() }
+    }
+}
+
+/// One measured case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    /// Stable case id, e.g. `hotpath/vc-gnm` or `sim/c256`.
+    pub name: String,
+    /// Case family: `hotpath` | `threads` | `sim`.
+    pub kind: String,
+    /// Search-nodes visited per run of the case.
+    pub nodes: u64,
+    /// Wall seconds per run (0 for simulator cases).
+    pub wall_secs: f64,
+    /// Node-visit throughput (0 for simulator cases; gate uses makespan).
+    pub nodes_per_sec: f64,
+    /// Virtual makespan in seconds (simulator cases only).
+    pub makespan_secs: Option<f64>,
+    /// Donation traffic of the run (0 for serial hot-path cases).
+    pub tasks_donated: u64,
+    pub tasks_received: u64,
+    pub tasks_requested: u64,
+    /// Optimum found (correctness cross-check between runs).
+    pub best_cost: Option<u64>,
+}
+
+/// A full suite run, ready to serialize as `BENCH_<label>.json`.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub suite_version: u32,
+    pub git_rev: String,
+    pub label: String,
+    pub smoke: bool,
+    /// Reference throughput of the engine-independent calibration kernel,
+    /// used to normalize wall-clock cases across machines.
+    pub calibration_nps: f64,
+    /// True only for the hand-committed bootstrap baseline (no data yet);
+    /// the gate passes vacuously against it.
+    pub bootstrap: bool,
+    pub cases: Vec<CaseResult>,
+}
+
+/// Best-effort current git revision (the bench must work in a bare export
+/// too, so failure degrades to `"unknown"`).
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// A named serial hot-path workload: the closure runs it under a node
+/// budget and returns (nodes visited, best cost).
+pub(crate) type HotpathRun = Box<dyn Fn(u64) -> (u64, Option<u64>)>;
+
+/// The serial hot-path workload list, shared by [`run_suite`] and the
+/// human-readable `cargo bench --bench hotpath` table
+/// ([`standalone`]) so the two drivers can never measure different
+/// instances under the same name.  Smoke shrinks the instances.
+pub(crate) fn hotpath_workloads(smoke: bool) -> Vec<(String, HotpathRun)> {
+    let g_vc =
+        if smoke { generators::gnm(60, 240, 31) } else { generators::gnm(100, 1000, 31) };
+    let g_vc2 = g_vc.clone();
+    let g_ds =
+        if smoke { generators::random_ds(30, 120, 41) } else { generators::random_ds(70, 280, 41) };
+    let queens_n: u32 = if smoke { 8 } else { 10 };
+    vec![
+        (
+            "hotpath/vc-gnm".to_string(),
+            Box::new(move |budget| {
+                let r = solve_serial(&VertexCover::new(&g_vc), budget);
+                (r.stats.nodes, r.best_cost)
+            }) as HotpathRun,
+        ),
+        (
+            "hotpath/vc-matching".to_string(),
+            Box::new(move |budget| {
+                let r = solve_serial(&VertexCover::with_bound(&g_vc2, BoundKind::Matching), budget);
+                (r.stats.nodes, r.best_cost)
+            }),
+        ),
+        (
+            "hotpath/ds".to_string(),
+            Box::new(move |budget| {
+                let r = solve_serial(&DominatingSet::new(&g_ds), budget);
+                (r.stats.nodes, r.best_cost)
+            }),
+        ),
+        (
+            format!("hotpath/queens{queens_n}"),
+            Box::new(move |budget| {
+                let r = solve_serial(&NQueens::new(queens_n), budget);
+                (r.stats.nodes, r.best_cost)
+            }),
+        ),
+    ]
+}
+
+/// Measure one serial hot-path workload: run it to exhaustion (or the node
+/// budget) repeatedly for `min_millis`, report best-iteration throughput
+/// (min time = least scheduler noise).
+fn hotpath_case(
+    name: &str,
+    run: &HotpathRun,
+    node_budget: u64,
+    min_millis: u64,
+    min_iters: usize,
+) -> CaseResult {
+    let mut nodes = 0u64;
+    let mut best_cost = None;
+    let r = crate::util::timer::bench(
+        std::time::Duration::from_millis(min_millis),
+        min_iters,
+        || {
+            let (n, b) = run(node_budget);
+            nodes = n;
+            best_cost = b;
+        },
+    );
+    let secs = r.min.as_secs_f64();
+    CaseResult {
+        name: name.to_string(),
+        kind: "hotpath".into(),
+        nodes,
+        wall_secs: secs,
+        nodes_per_sec: nodes_per_sec(nodes, secs),
+        makespan_secs: None,
+        tasks_donated: 0,
+        tasks_received: 0,
+        tasks_requested: 0,
+        best_cost,
+    }
+}
+
+/// Operations per calibration round (fixed forever: changing it changes
+/// the meaning of every stored ratio; bump [`SUITE_VERSION`] instead).
+const CALIBRATION_OPS: u64 = 1 << 22;
+
+/// One round of the calibration kernel: splitmix64-style integer mixing.
+/// Deliberately engine-independent — it must NOT share the Stepper hot
+/// path, or an engine-wide slowdown would move every case and the
+/// calibration together and the gate would normalize the regression away.
+fn calibration_round() -> u64 {
+    let mut x = 0x9E37_79B9_7F4A_7C15u64;
+    let mut acc = 0u64;
+    for i in 0..CALIBRATION_OPS {
+        x ^= i;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        acc = acc.wrapping_add(x);
+    }
+    std::hint::black_box(acc)
+}
+
+/// Measure the calibration kernel (ops/sec) as a pseudo-case.
+fn calibration_case(min_millis: u64, min_iters: usize) -> CaseResult {
+    let r = crate::util::timer::bench(
+        std::time::Duration::from_millis(min_millis),
+        min_iters,
+        || {
+            calibration_round();
+        },
+    );
+    let secs = r.min.as_secs_f64();
+    CaseResult {
+        name: "calibration/mix64".into(),
+        kind: "calibration".into(),
+        nodes: CALIBRATION_OPS,
+        wall_secs: secs,
+        nodes_per_sec: nodes_per_sec(CALIBRATION_OPS, secs),
+        makespan_secs: None,
+        tasks_donated: 0,
+        tasks_received: 0,
+        tasks_requested: 0,
+        best_cost: None,
+    }
+}
+
+/// Run the full deterministic suite.
+pub fn run_suite(opts: &BenchOptions) -> BenchReport {
+    let smoke = opts.smoke;
+    // Measurement window per hot-path case.
+    let (millis, iters) = if smoke { (150, 2) } else { (600, 3) };
+    // Node budget keeps the worst case bounded even on a slow machine.
+    let budget = if smoke { 200_000 } else { u64::MAX };
+
+    let calib = calibration_case(millis, iters);
+    let calibration_nps = calib.nodes_per_sec;
+
+    // The calibration case rides along in `cases` for trajectory plots; in
+    // the gate it trivially compares 1.0 against 1.0.
+    let mut cases = vec![calib];
+
+    // Hot-path microbenchmarks (the Stepper inner loop in isolation).
+    for (name, run) in hotpath_workloads(smoke) {
+        cases.push(hotpath_case(&name, &run, budget, millis, iters));
+    }
+
+    // Thread-runner sweep: the full protocol (donation, notification,
+    // termination) on real cores.
+    let g_thr = if smoke {
+        generators::gnm(60, 240, 42)
+    } else {
+        generators::cell60_like(84)
+    };
+    let p_thr = VertexCover::new(&g_thr);
+    let workers: &[usize] = if smoke { &[2] } else { &[2, 4, 8] };
+    for &w in workers {
+        let cfg = RunConfig {
+            workers: w,
+            worker: WorkerConfig::default(),
+            timeout: Some(std::time::Duration::from_secs(if smoke { 60 } else { 600 })),
+        };
+        let rep = runner::solve(&p_thr, &cfg);
+        let secs = rep.wall_secs;
+        let comm = rep.total_comm();
+        cases.push(CaseResult {
+            name: format!("threads/w{w}"),
+            kind: "threads".into(),
+            nodes: rep.total_nodes(),
+            wall_secs: secs,
+            nodes_per_sec: nodes_per_sec(rep.total_nodes(), secs),
+            makespan_secs: None,
+            tasks_donated: comm.tasks_donated,
+            tasks_received: comm.tasks_received,
+            tasks_requested: comm.tasks_requested,
+            best_cost: rep.best_cost,
+        });
+    }
+
+    // Simulator sweep: virtual makespan is deterministic, so these cases
+    // gate protocol-level regressions exactly (no tolerance noise needed —
+    // but the shared tolerance keeps the check uniform).
+    let g_sim = generators::gnm(60, 240, 42);
+    let p_sim = VertexCover::new(&g_sim);
+    let cores: &[usize] = if smoke { &[64] } else { &[64, 256, 1024] };
+    for &c in cores {
+        let r = simulate(
+            &p_sim,
+            &SimConfig { cores: c, worker: WorkerConfig::default(), ..Default::default() },
+        );
+        let comm = r.per_worker.iter().fold(crate::comm::CommStats::default(), |mut acc, w| {
+            acc.merge(&w.comm);
+            acc
+        });
+        cases.push(CaseResult {
+            name: format!("sim/c{c}"),
+            kind: "sim".into(),
+            nodes: r.total_nodes(),
+            wall_secs: 0.0,
+            nodes_per_sec: 0.0,
+            makespan_secs: Some(r.makespan_secs(TICKS_PER_SEC)),
+            tasks_donated: comm.tasks_donated,
+            tasks_received: comm.tasks_received,
+            tasks_requested: comm.tasks_requested,
+            best_cost: r.best_cost,
+        });
+    }
+
+    BenchReport {
+        suite_version: SUITE_VERSION,
+        git_rev: git_rev(),
+        label: opts.label.clone(),
+        smoke,
+        calibration_nps,
+        bootstrap: false,
+        cases,
+    }
+}
+
+impl BenchReport {
+    /// Serialize to the `BENCH_*.json` schema (see `docs/BENCHMARKS.md`).
+    pub fn to_json(&self) -> Json {
+        let cases = self
+            .cases
+            .iter()
+            .map(|c| {
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(c.name.clone())),
+                    ("kind".into(), Json::Str(c.kind.clone())),
+                    ("nodes".into(), Json::Num(c.nodes as f64)),
+                    ("wall_secs".into(), Json::Num(c.wall_secs)),
+                    ("nodes_per_sec".into(), Json::Num(c.nodes_per_sec)),
+                    (
+                        "makespan_secs".into(),
+                        c.makespan_secs.map_or(Json::Null, Json::Num),
+                    ),
+                    ("tasks_donated".into(), Json::Num(c.tasks_donated as f64)),
+                    ("tasks_received".into(), Json::Num(c.tasks_received as f64)),
+                    ("tasks_requested".into(), Json::Num(c.tasks_requested as f64)),
+                    (
+                        "best_cost".into(),
+                        c.best_cost.map_or(Json::Null, |b| Json::Num(b as f64)),
+                    ),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("suite_version".into(), Json::Num(self.suite_version as f64)),
+            ("git_rev".into(), Json::Str(self.git_rev.clone())),
+            ("label".into(), Json::Str(self.label.clone())),
+            ("smoke".into(), Json::Bool(self.smoke)),
+            ("bootstrap".into(), Json::Bool(self.bootstrap)),
+            ("calibration_nps".into(), Json::Num(self.calibration_nps)),
+            ("cases".into(), Json::Arr(cases)),
+        ])
+    }
+
+    /// Parse a report (current or baseline) back from its JSON form,
+    /// validating the schema: every required key must be present and typed.
+    pub fn from_json(doc: &Json) -> Result<BenchReport> {
+        let field = |key: &str| doc.get(key).with_context(|| format!("missing key {key:?}"));
+        let suite_version =
+            field("suite_version")?.as_u64().context("suite_version must be an integer")? as u32;
+        let git_rev = field("git_rev")?.as_str().context("git_rev must be a string")?.to_string();
+        let label = field("label")?.as_str().context("label must be a string")?.to_string();
+        let smoke = field("smoke")?.as_bool().context("smoke must be a boolean")?;
+        let bootstrap = doc.get("bootstrap").and_then(Json::as_bool).unwrap_or(false);
+        let calibration_nps =
+            field("calibration_nps")?.as_f64().context("calibration_nps must be a number")?;
+        let mut cases = Vec::new();
+        for (i, c) in field("cases")?.as_arr().context("cases must be an array")?.iter().enumerate()
+        {
+            let cf = |key: &str| {
+                c.get(key).with_context(|| format!("case {i}: missing key {key:?}"))
+            };
+            cases.push(CaseResult {
+                name: cf("name")?.as_str().context("case name must be a string")?.to_string(),
+                kind: cf("kind")?.as_str().context("case kind must be a string")?.to_string(),
+                nodes: cf("nodes")?.as_u64().context("case nodes must be an integer")?,
+                wall_secs: cf("wall_secs")?.as_f64().context("wall_secs must be a number")?,
+                nodes_per_sec: cf("nodes_per_sec")?
+                    .as_f64()
+                    .context("nodes_per_sec must be a number")?,
+                makespan_secs: match cf("makespan_secs")? {
+                    Json::Null => None,
+                    v => Some(v.as_f64().context("makespan_secs must be a number or null")?),
+                },
+                tasks_donated: cf("tasks_donated")?.as_u64().unwrap_or(0),
+                tasks_received: cf("tasks_received")?.as_u64().unwrap_or(0),
+                tasks_requested: cf("tasks_requested")?.as_u64().unwrap_or(0),
+                best_cost: c.get("best_cost").and_then(Json::as_u64),
+            });
+        }
+        Ok(BenchReport {
+            suite_version,
+            git_rev,
+            label,
+            smoke,
+            calibration_nps,
+            bootstrap,
+            cases,
+        })
+    }
+
+    /// Write the report to `path` (pretty JSON).
+    pub fn write_file(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().render()).with_context(|| format!("writing {path}"))
+    }
+
+    /// Human summary table for the terminal.
+    pub fn render_table(&self) -> String {
+        let mut t = Table::new(["case", "nodes", "Mnodes/s", "makespan", "T_D", "T_S", "T_R"]);
+        for c in &self.cases {
+            t.row([
+                c.name.clone(),
+                format!("{}", c.nodes),
+                if c.nodes_per_sec > 0.0 {
+                    format!("{:.2}", c.nodes_per_sec / 1e6)
+                } else {
+                    "-".into()
+                },
+                c.makespan_secs.map_or("-".into(), |m| format!("{m:.4}s")),
+                format!("{}", c.tasks_donated),
+                format!("{}", c.tasks_received),
+                format!("{}", c.tasks_requested),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// One gate violation, human-readable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regression {
+    pub case: String,
+    pub detail: String,
+}
+
+/// Compare `current` against `baseline`.  Returns the list of regressions
+/// (empty = gate passes).  Policy (documented in `docs/BENCHMARKS.md`):
+///
+/// * bootstrap baselines (or baselines with no overlapping cases) pass
+///   vacuously — the gate arms itself once a real baseline is committed;
+/// * wall-clock cases compare **calibrated** throughput
+///   (`nodes_per_sec / calibration_nps`) and fail below
+///   `(1 - tolerance) × baseline`;
+/// * simulator cases compare **virtual makespan** (deterministic) and fail
+///   above `(1 + tolerance) × baseline`;
+/// * a suite-version mismatch is an error, not a silent pass.
+pub fn check_against(
+    current: &BenchReport,
+    baseline: &BenchReport,
+    tolerance: f64,
+) -> Result<Vec<Regression>> {
+    if baseline.bootstrap {
+        return Ok(Vec::new());
+    }
+    if baseline.suite_version != current.suite_version {
+        bail!(
+            "baseline suite_version {} != current {} — refresh the baseline \
+             (see docs/BENCHMARKS.md)",
+            baseline.suite_version,
+            current.suite_version
+        );
+    }
+    if baseline.smoke != current.smoke {
+        // Same case names, different workloads (smoke shrinks instances):
+        // comparing them would produce confident nonsense.
+        bail!(
+            "baseline is a {} run but this is a {} run — gate only compares \
+             like against like (rerun with{} --smoke, or refresh the baseline)",
+            if baseline.smoke { "smoke" } else { "full-suite" },
+            if current.smoke { "smoke" } else { "full-suite" },
+            if baseline.smoke { "" } else { "out" },
+        );
+    }
+    let mut regressions = Vec::new();
+    for base in &baseline.cases {
+        let Some(cur) = current.cases.iter().find(|c| c.name == base.name) else {
+            regressions.push(Regression {
+                case: base.name.clone(),
+                detail: "case present in baseline but missing from this run".into(),
+            });
+            continue;
+        };
+        match (base.makespan_secs, cur.makespan_secs) {
+            (Some(base_ms), Some(cur_ms)) => {
+                if cur_ms > (1.0 + tolerance) * base_ms {
+                    regressions.push(Regression {
+                        case: base.name.clone(),
+                        detail: format!(
+                            "virtual makespan {cur_ms:.4}s > {:.4}s allowed \
+                             (baseline {base_ms:.4}s, tolerance {:.0}%)",
+                            (1.0 + tolerance) * base_ms,
+                            tolerance * 100.0
+                        ),
+                    });
+                }
+            }
+            (Some(_), None) => {
+                // The baseline measured a makespan for this case but this
+                // run did not — losing the measurement is itself a failure,
+                // never a silent skip.
+                regressions.push(Regression {
+                    case: base.name.clone(),
+                    detail: "baseline has a virtual makespan but this run measured none".into(),
+                });
+            }
+            _ => {
+                // Wall-clock case: calibrate both sides before comparing.
+                if base.calibrated(baseline.calibration_nps).is_none() {
+                    continue; // baseline lacks usable data for this case
+                }
+                let base_ratio = base.calibrated(baseline.calibration_nps).unwrap();
+                let Some(cur_ratio) = cur.calibrated(current.calibration_nps) else {
+                    regressions.push(Regression {
+                        case: base.name.clone(),
+                        detail: "no throughput measured in this run".into(),
+                    });
+                    continue;
+                };
+                if cur_ratio < (1.0 - tolerance) * base_ratio {
+                    regressions.push(Regression {
+                        case: base.name.clone(),
+                        detail: format!(
+                            "calibrated throughput {cur_ratio:.3} < {:.3} allowed \
+                             (baseline {base_ratio:.3}, tolerance {:.0}%)",
+                            (1.0 - tolerance) * base_ratio,
+                            tolerance * 100.0
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    Ok(regressions)
+}
+
+impl CaseResult {
+    /// Machine-normalized throughput: this case's nodes/sec divided by the
+    /// run's calibration nodes/sec.  None when either side is unusable.
+    fn calibrated(&self, calibration_nps: f64) -> Option<f64> {
+        (self.nodes_per_sec > 0.0 && calibration_nps > 0.0)
+            .then(|| self.nodes_per_sec / calibration_nps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(cases: Vec<CaseResult>, calib: f64) -> BenchReport {
+        BenchReport {
+            suite_version: SUITE_VERSION,
+            git_rev: "test".into(),
+            label: "t".into(),
+            smoke: true,
+            calibration_nps: calib,
+            bootstrap: false,
+            cases,
+        }
+    }
+
+    fn wall_case(name: &str, nps: f64) -> CaseResult {
+        CaseResult {
+            name: name.into(),
+            kind: "hotpath".into(),
+            nodes: 1000,
+            wall_secs: 0.1,
+            nodes_per_sec: nps,
+            makespan_secs: None,
+            tasks_donated: 0,
+            tasks_received: 0,
+            tasks_requested: 0,
+            best_cost: Some(3),
+        }
+    }
+
+    fn sim_case(name: &str, makespan: f64) -> CaseResult {
+        CaseResult {
+            name: name.into(),
+            kind: "sim".into(),
+            nodes: 1000,
+            wall_secs: 0.0,
+            nodes_per_sec: 0.0,
+            makespan_secs: Some(makespan),
+            tasks_donated: 4,
+            tasks_received: 4,
+            tasks_requested: 9,
+            best_cost: Some(3),
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let r = report(vec![wall_case("hotpath/a", 2e6), sim_case("sim/c64", 0.125)], 1e6);
+        let back = BenchReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.suite_version, r.suite_version);
+        assert_eq!(back.cases.len(), 2);
+        assert_eq!(back.cases[0].name, "hotpath/a");
+        assert_eq!(back.cases[0].nodes_per_sec, 2e6);
+        assert_eq!(back.cases[1].makespan_secs, Some(0.125));
+        assert_eq!(back.cases[1].tasks_requested, 9);
+        assert!(!back.bootstrap);
+    }
+
+    #[test]
+    fn schema_validation_rejects_missing_keys() {
+        let mut j = report(vec![], 1e6).to_json();
+        if let Json::Obj(fields) = &mut j {
+            fields.retain(|(k, _)| k != "calibration_nps");
+        }
+        assert!(BenchReport::from_json(&j).is_err());
+        assert!(BenchReport::from_json(&Json::Obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn bootstrap_baseline_passes_vacuously() {
+        let mut base = report(vec![], 0.0);
+        base.bootstrap = true;
+        let cur = report(vec![wall_case("hotpath/a", 1.0)], 1e6);
+        assert!(check_against(&cur, &base, DEFAULT_TOLERANCE).unwrap().is_empty());
+    }
+
+    #[test]
+    fn calibrated_throughput_gate() {
+        // Baseline machine: calibration 1e6, case 2e6 -> ratio 2.0.
+        let base = report(vec![wall_case("hotpath/a", 2e6)], 1e6);
+        // Faster machine, same ratio: passes.
+        let same = report(vec![wall_case("hotpath/a", 4e6)], 2e6);
+        assert!(check_against(&same, &base, 0.2).unwrap().is_empty());
+        // Ratio dropped 10% with 20% tolerance: passes.
+        let small_drop = report(vec![wall_case("hotpath/a", 1.8e6)], 1e6);
+        assert!(check_against(&small_drop, &base, 0.2).unwrap().is_empty());
+        // Ratio dropped 40%: fails.
+        let big_drop = report(vec![wall_case("hotpath/a", 1.2e6)], 1e6);
+        let regs = check_against(&big_drop, &base, 0.2).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].case, "hotpath/a");
+    }
+
+    #[test]
+    fn makespan_gate_and_missing_case() {
+        let base = report(vec![sim_case("sim/c64", 1.0), wall_case("hotpath/a", 1e6)], 1e6);
+        let cur = report(vec![sim_case("sim/c64", 1.5)], 1e6);
+        let regs = check_against(&cur, &base, 0.2).unwrap();
+        // makespan regressed AND a baseline case is missing.
+        assert_eq!(regs.len(), 2);
+    }
+
+    #[test]
+    fn suite_version_mismatch_is_an_error() {
+        let mut base = report(vec![], 1e6);
+        base.suite_version = SUITE_VERSION + 1;
+        let cur = report(vec![], 1e6);
+        assert!(check_against(&cur, &base, 0.2).is_err());
+    }
+
+    #[test]
+    fn smoke_full_mismatch_is_an_error() {
+        // Same case names measure different workloads across smoke/full —
+        // the gate must refuse, not produce confident nonsense.
+        let mut base = report(vec![], 1e6);
+        base.smoke = false;
+        let cur = report(vec![], 1e6); // smoke: true
+        assert!(check_against(&cur, &base, 0.2).is_err());
+    }
+
+    #[test]
+    fn lost_makespan_measurement_fails() {
+        let base = report(vec![sim_case("sim/c64", 1.0)], 1e6);
+        // Current run has the case but no makespan (and no throughput):
+        // must be flagged, never silently skipped.
+        let mut broken = sim_case("sim/c64", 0.0);
+        broken.makespan_secs = None;
+        let cur = report(vec![broken], 1e6);
+        let regs = check_against(&cur, &base, 0.2).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].case, "sim/c64");
+    }
+
+    #[test]
+    fn smoke_suite_runs_and_roundtrips() {
+        // The real thing, smoke-sized: must produce every case family and
+        // survive a JSON roundtrip (this is the CI job in miniature).
+        let r = run_suite(&BenchOptions { smoke: true, label: "unit".into() });
+        assert_eq!(r.suite_version, SUITE_VERSION);
+        assert!(r.calibration_nps > 0.0);
+        for family in ["hotpath/", "threads/", "sim/"] {
+            assert!(
+                r.cases.iter().any(|c| c.name.starts_with(family)),
+                "missing family {family}"
+            );
+        }
+        let back = BenchReport::from_json(&json::parse(&r.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back.cases.len(), r.cases.len());
+        // Self-check: a run can never regress against itself.
+        assert!(check_against(&back, &r, DEFAULT_TOLERANCE).unwrap().is_empty());
+    }
+}

@@ -63,6 +63,13 @@ impl Args {
         }
     }
 
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
     pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
         match self.get(key) {
             None => Ok(default),
@@ -97,6 +104,10 @@ COMMANDS:
                  one-command localhost demo)
     simulate    virtual-time run on simulated cores
                   --problem vc|ds  --instance <name>  --cores N  --latency T  --batch B
+    bench       deterministic perf suite -> BENCH_<label>.json (docs/BENCHMARKS.md)
+                  [--smoke]  [--label L]  [--out FILE]
+                  [--check baseline.json [--tolerance 0.2]]  (exit 1 on regression)
+                  [--write-baseline FILE]
     table1      regenerate Table I  (PARALLEL-VERTEX-COVER sweep)   [--scale 0|1|2] [--max-cores N]
     table2      regenerate Table II (PARALLEL-DOMINATING-SET sweep) [--scale 0|1|2] [--max-cores N]
     fig9        regenerate Figure 9  (log2 time vs cores)           [--scale 0|1|2]
@@ -162,6 +173,15 @@ mod tests {
         assert!(a.get_usize("workers", 4).is_err());
         let b = parse("solve --flag maybe");
         assert!(b.get_bool("flag", false).is_err());
+        let c = parse("bench --tolerance lots");
+        assert!(c.get_f64("tolerance", 0.2).is_err());
+    }
+
+    #[test]
+    fn float_flags() {
+        let a = parse("bench --tolerance 0.35");
+        assert!((a.get_f64("tolerance", 0.2).unwrap() - 0.35).abs() < 1e-12);
+        assert!((a.get_f64("missing", 0.2).unwrap() - 0.2).abs() < 1e-12);
     }
 
     #[test]

@@ -151,8 +151,8 @@ mod tests {
         let shallow = Message::TaskResponse { from: 0, tasks: vec![NodeIndex(vec![1])] };
         let deep = Message::TaskResponse { from: 0, tasks: vec![NodeIndex(vec![0; 40])] };
         assert!(deep.wire_bytes() > shallow.wire_bytes());
-        // O(d): 4 bytes per digit
-        assert_eq!(deep.wire_bytes() - shallow.wire_bytes(), 39 * 4);
+        // O(d): one varint byte per small digit (wire protocol v2)
+        assert_eq!(deep.wire_bytes() - shallow.wire_bytes(), 39);
     }
 
     #[test]

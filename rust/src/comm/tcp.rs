@@ -51,8 +51,10 @@ const HS_HELLO: u8 = 0x10;
 const HS_ASSIGN: u8 = 0x11;
 const HS_DIAL: u8 = 0x12;
 
-/// Protocol magic sent in every `HELLO` ("PBT1": pbt wire protocol v1).
-pub const MAGIC: &[u8; 4] = b"PBT1";
+/// Protocol magic sent in every `HELLO` ("PBT2": pbt wire protocol v2 —
+/// task indices travel as LEB128 varints; a v1 peer's fixed-width indices
+/// would be misparsed, so the version bump is load-bearing, not cosmetic).
+pub const MAGIC: &[u8; 4] = b"PBT2";
 
 /// Handshake frames are tiny; anything bigger is not a pbt peer.
 const MAX_HANDSHAKE_BYTES: usize = 64 * 1024;

@@ -5,8 +5,10 @@
 //!
 //! * **A task travels as its index** — `E(N) = idx(N)` (§IV-A).  A
 //!   [`TaskResponse`](Message::TaskResponse) payload is just the donated
-//!   indices' digit strings, O(d) bytes each, reusing
-//!   [`NodeIndex::encode`]/[`NodeIndex::decode`] unchanged.
+//!   indices' digit strings — LEB128 varints since wire protocol v2, so a
+//!   depth-`d` task with ordinary branching factors costs ~`d + 1` bytes —
+//!   reusing [`NodeIndex::encode_into`]/[`NodeIndex::decode_from`]
+//!   unchanged (indices are self-delimiting).
 //! * **Every variant is a tag byte plus fixed fields** — so
 //!   [`encoded_len`] is exactly [`Message::wire_bytes`], and the
 //!   encoding-overhead ablation (`benches/ablate_encoding.rs`) measures
@@ -100,7 +102,7 @@ pub fn encoded_len(msg: &Message) -> usize {
         Message::StatusUpdate { .. } => 1 + 8 + 1,
         Message::TaskRequest { .. } => 1 + 8,
         Message::TaskResponse { tasks, .. } => {
-            1 + 8 + 4 + tasks.iter().map(|t| 4 + 4 * t.depth()).sum::<usize>()
+            1 + 8 + 4 + tasks.iter().map(NodeIndex::encoded_len).sum::<usize>()
         }
         Message::Notification { .. } => 1 + 8 + 8,
     }
@@ -133,7 +135,7 @@ pub fn encode_into(out: &mut Vec<u8>, msg: &Message) {
             out.extend_from_slice(&(*from as u64).to_le_bytes());
             out.extend_from_slice(&(tasks.len() as u32).to_le_bytes());
             for task in tasks {
-                out.extend_from_slice(&task.encode());
+                task.encode_into(out);
             }
         }
         Message::Notification { from, best } => {
@@ -178,11 +180,10 @@ pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
             let count = take_u32(bytes, &mut pos)? as usize;
             let mut tasks = Vec::with_capacity(count.min(1024));
             for _ in 0..count {
-                let depth = take_u32(bytes, &mut pos)? as usize;
-                // Rewind: NodeIndex::decode wants its own length prefix.
-                pos -= 4;
-                let idx_bytes = take(bytes, &mut pos, 4 + 4 * depth)?;
-                let idx = NodeIndex::decode(idx_bytes).ok_or(WireError::BadIndex)?;
+                // Varint indices are self-delimiting: truncation, overflow
+                // and non-canonical digits all surface as BadIndex.
+                let idx =
+                    NodeIndex::decode_from(bytes, &mut pos).ok_or(WireError::BadIndex)?;
                 tasks.push(idx);
             }
             Message::TaskResponse { from, tasks }
@@ -306,9 +307,15 @@ mod tests {
         let mut b = encode(&Message::TaskRequest { from: 1 });
         b.push(0);
         assert_eq!(decode(&b), Err(WireError::TrailingBytes(1)));
-        // Truncated index inside a response.
+        // Truncated index inside a response (varint indices: BadIndex).
         let b = encode(&Message::TaskResponse { from: 1, tasks: vec![NodeIndex(vec![2, 2])] });
-        assert_eq!(decode(&b[..b.len() - 1]), Err(WireError::Truncated));
+        assert_eq!(decode(&b[..b.len() - 1]), Err(WireError::BadIndex));
+        // Non-canonical varint digit inside a response.
+        let mut b = encode(&Message::TaskResponse { from: 1, tasks: vec![NodeIndex(vec![5])] });
+        let last = b.len() - 1;
+        b[last] = 0x85; // digit 5 with a continuation bit...
+        b.push(0x00); // ...padded with a zero byte
+        assert_eq!(decode(&b), Err(WireError::BadIndex));
     }
 
     #[test]

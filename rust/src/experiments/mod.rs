@@ -50,6 +50,7 @@ pub fn sweep_sim<P: Problem>(
             t_s: r.avg_tasks_received(),
             t_r: r.avg_tasks_requested(),
             nodes: r.total_nodes(),
+            tasks_donated: r.per_worker.iter().map(|w| w.comm.tasks_donated).sum(),
             best_cost: r.best_cost,
         });
     }
@@ -73,6 +74,7 @@ pub fn sweep_threads<P: Problem>(
             t_s: r.avg_tasks_received(),
             t_r: r.avg_tasks_requested(),
             nodes: r.total_nodes(),
+            tasks_donated: r.total_comm().tasks_donated,
             best_cost: r.best_cost,
         });
     }

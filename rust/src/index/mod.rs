@@ -4,19 +4,73 @@
 //! path; a task *is* its index (`E(N) = idx(N)`, O(d) bytes).  This module
 //! provides:
 //!
-//! * [`NodeIndex`] — the index itself (digit string; root = empty).
+//! * [`NodeIndex`] — the index itself (digit string; root = empty).  On the
+//!   wire each digit is a LEB128 varint (wire protocol v2): almost every
+//!   branching factor fits in one byte, so a depth-`d` task costs ~`d + 1`
+//!   bytes instead of the old fixed `4d + 4`.
 //! * [`binary`] — a line-for-line port of the paper's Figure 4
 //!   `GETHEAVIESTTASKINDEX` / `FIXINDEX` over the `current_idx` array for
 //!   binary trees, kept as the executable specification.
 //! * [`CurrentIndex`] — the generalized two-row (`idx1`/`idx2`, Fig. 8)
-//!   bookkeeping for arbitrary branching factors used by the engine: row 0
-//!   holds the digit taken at each depth, row 1 the count of *unexplored*
-//!   right-siblings at that depth.  Donating the heaviest task = find the
-//!   shallowest depth with a positive sibling count, hand out the **last**
-//!   sibling there (§IV-C requires donated sets to be suffixes of the
-//!   sibling order), and decrement.
+//!   bookkeeping for arbitrary branching factors used by the engine: one
+//!   flat digit path plus the count of *unexplored* right-siblings at each
+//!   depth.  Donating the heaviest task = find the shallowest depth with a
+//!   positive sibling count, hand out the **last** sibling there (§IV-C
+//!   requires donated sets to be suffixes of the sibling order), and
+//!   decrement.  The shallowest open depth is cached (`min_open`), so
+//!   donation and weight queries are O(1) instead of a rescan from the
+//!   root — this is the engine's hottest non-problem code.
 
 pub mod binary;
+
+/// Append `v` as a LEB128 varint (7 payload bits per byte, low first; the
+/// high bit marks continuation).
+fn push_varint(out: &mut Vec<u8>, mut v: u32) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Exact encoded size of `v` as a LEB128 varint (1–5 bytes).
+fn varint_len(v: u32) -> usize {
+    match v {
+        0..=0x7F => 1,
+        0x80..=0x3FFF => 2,
+        0x4000..=0x1F_FFFF => 3,
+        0x20_0000..=0x0FFF_FFFF => 4,
+        _ => 5,
+    }
+}
+
+/// Read one canonical LEB128 varint.  Rejects truncation, encodings longer
+/// than 5 bytes, values that overflow `u32`, and non-canonical (zero-padded)
+/// forms — a digit has exactly one valid byte representation, so the codec
+/// cannot be used to smuggle duplicate frames past accounting.
+fn read_varint(bytes: &[u8], pos: &mut usize) -> Option<u32> {
+    let mut v: u32 = 0;
+    for shift in (0..=28).step_by(7) {
+        let b = *bytes.get(*pos)?;
+        *pos += 1;
+        let payload = (b & 0x7F) as u32;
+        if shift == 28 && payload > 0x0F {
+            return None; // value exceeds u32::MAX
+        }
+        v |= payload << shift;
+        if b & 0x80 == 0 {
+            if shift > 0 && payload == 0 {
+                return None; // non-canonical: padded with a zero final byte
+            }
+            return Some(v);
+        }
+    }
+    None // continuation bit set on the fifth byte: oversized
+}
 
 /// A search-node index: child digits along the root-to-node path.
 /// The paper writes the root as index "1"; we store only the path digits
@@ -42,7 +96,8 @@ impl NodeIndex {
 
     /// Index of this node's `k`-th child (append digit `k` to the path).
     pub fn child(&self, k: u32) -> NodeIndex {
-        let mut d = self.0.clone();
+        let mut d = Vec::with_capacity(self.0.len() + 1);
+        d.extend_from_slice(&self.0);
         d.push(k);
         NodeIndex(d)
     }
@@ -52,28 +107,53 @@ impl NodeIndex {
         other.0.len() >= self.0.len() && other.0[..self.0.len()] == self.0[..]
     }
 
-    /// Wire encoding: one u32 digit per depth (O(d) bytes, §IV-A).
+    /// Exact wire size of [`encode`](Self::encode): varint(depth) plus one
+    /// varint per digit — `depth + 1` bytes for the common small-digit case.
+    pub fn encoded_len(&self) -> usize {
+        varint_len(self.0.len() as u32) + self.0.iter().map(|&d| varint_len(d)).sum::<usize>()
+    }
+
+    /// Wire encoding (protocol v2): LEB128 depth, then one LEB128 digit per
+    /// level (O(d) bytes, §IV-A).
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(4 + 4 * self.0.len());
-        out.extend_from_slice(&(self.0.len() as u32).to_le_bytes());
-        for &d in &self.0 {
-            out.extend_from_slice(&d.to_le_bytes());
-        }
+        let mut out = Vec::with_capacity(self.encoded_len());
+        self.encode_into(&mut out);
         out
     }
 
-    /// Inverse of [`encode`](Self::encode).
+    /// Append the wire encoding to `out` (allocation-free core of
+    /// [`encode`](Self::encode), used by the message codec).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        push_varint(out, self.0.len() as u32);
+        for &d in &self.0 {
+            push_varint(out, d);
+        }
+    }
+
+    /// Inverse of [`encode`](Self::encode).  The payload must contain
+    /// exactly one index: truncated, oversized (varint > u32 / > 5 bytes),
+    /// non-canonical, or trailing input is rejected.
     pub fn decode(bytes: &[u8]) -> Option<NodeIndex> {
-        if bytes.len() < 4 {
+        let mut pos = 0usize;
+        let idx = Self::decode_from(bytes, &mut pos)?;
+        (pos == bytes.len()).then_some(idx)
+    }
+
+    /// Decode one index from a byte stream starting at `*pos`, advancing
+    /// `*pos` past it (indices are self-delimiting, so `TaskResponse`
+    /// payloads concatenate them with no per-index length prefix).
+    pub fn decode_from(bytes: &[u8], pos: &mut usize) -> Option<NodeIndex> {
+        let len = read_varint(bytes, pos)? as usize;
+        // Each digit costs at least one byte: a declared depth larger than
+        // the remaining payload is corrupt (and must not drive a huge
+        // pre-allocation).
+        if len > bytes.len().saturating_sub(*pos) {
             return None;
         }
-        let len = u32::from_le_bytes(bytes[0..4].try_into().ok()?) as usize;
-        if bytes.len() != 4 + 4 * len {
-            return None;
+        let mut digits = Vec::with_capacity(len);
+        for _ in 0..len {
+            digits.push(read_varint(bytes, pos)?);
         }
-        let digits = (0..len)
-            .map(|i| u32::from_le_bytes(bytes[4 + 4 * i..8 + 4 * i].try_into().unwrap()))
-            .collect();
         Some(NodeIndex(digits))
     }
 }
@@ -88,32 +168,70 @@ impl std::fmt::Display for NodeIndex {
     }
 }
 
+/// Sentinel for "no depth has an unexplored sibling".
+const NO_OPEN: usize = usize::MAX;
+
 /// Generalized `current_idx` (Fig. 8): per-depth (digit, unexplored-sibling
-/// count) pairs for the worker's *own* subtree, rooted at a donated index.
-#[derive(Debug, Clone, Default)]
+/// count) bookkeeping for the worker's *own* subtree, rooted at a donated
+/// index.
+///
+/// Representation notes (the engine hot path lives here):
+/// * the subtree-root digits and the digits taken below it are ONE flat
+///   `path` vector, so [`current_node`](Self::current_node) is a single
+///   memcpy and descent/undo never re-derive a root prefix;
+/// * `min_open` caches the shallowest depth with `remaining > 0`, making
+///   [`donate_heaviest`](Self::donate_heaviest) and
+///   [`heaviest_weight`](Self::heaviest_weight) O(1) (amortized) instead of
+///   a scan from the root on every donation/weight query;
+/// * `open_total` keeps the donatable supply as a running counter.
+#[derive(Debug, Clone)]
 pub struct CurrentIndex {
-    /// Path digits of the subtree root (owned entirely by this worker).
-    root: Vec<u32>,
-    /// Row 0: digit taken at each depth below the root.
-    digits: Vec<u32>,
-    /// Row 1: unexplored right-siblings remaining at that depth.
+    /// Full global path: subtree-root digits, then the digit taken at each
+    /// depth below the root.
+    path: Vec<u32>,
+    /// How many leading digits of `path` belong to the subtree root.
+    root_len: usize,
+    /// Unexplored right-siblings remaining at local depth `i`
+    /// (`remaining[i]` pairs with `path[root_len + i]`).
     remaining: Vec<u32>,
+    /// Shallowest local depth with `remaining > 0`, or [`NO_OPEN`].
+    min_open: usize,
+    /// Sum of `remaining` (donatable supply), kept incrementally.
+    open_total: u64,
+}
+
+impl Default for CurrentIndex {
+    fn default() -> Self {
+        CurrentIndex::new(NodeIndex::root())
+    }
 }
 
 impl CurrentIndex {
     /// Start a fresh bookkeeping for the subtree rooted at `root`.
     pub fn new(root: NodeIndex) -> Self {
-        CurrentIndex { root: root.0, digits: Vec::new(), remaining: Vec::new() }
+        let root_len = root.0.len();
+        CurrentIndex {
+            path: root.0,
+            root_len,
+            remaining: Vec::new(),
+            min_open: NO_OPEN,
+            open_total: 0,
+        }
     }
 
     /// Depth of the subtree root in the global tree.
     pub fn root_depth(&self) -> usize {
-        self.root.len()
+        self.root_len
     }
 
     /// Current DFS depth below the subtree root.
     pub fn local_depth(&self) -> usize {
-        self.digits.len()
+        self.remaining.len()
+    }
+
+    /// Depth of the current node in the global tree (root + local).
+    pub fn global_depth(&self) -> usize {
+        self.path.len()
     }
 
     /// Record a descent: at the current node we take child `digit` out of
@@ -121,68 +239,96 @@ impl CurrentIndex {
     /// sibling count for row 1).
     pub fn push(&mut self, digit: u32, num_children: u32) {
         debug_assert!(digit < num_children);
-        self.digits.push(digit);
-        self.remaining.push(num_children - digit - 1);
+        let rem = num_children - digit - 1;
+        let i = self.remaining.len();
+        self.path.push(digit);
+        self.remaining.push(rem);
+        if rem > 0 {
+            self.open_total += rem as u64;
+            if i < self.min_open {
+                self.min_open = i;
+            }
+        }
     }
 
     /// Backtrack to the parent. Returns the next unexplored sibling digit at
     /// that level, if any (and consumes it): the DFS advance rule.
     pub fn pop_and_advance(&mut self) -> Option<u32> {
-        let digit = self.digits.pop()?;
         let rem = self.remaining.pop()?;
+        let digit = self.path.pop().expect("path at least as deep as remaining");
+        let i = self.remaining.len(); // index of the entry just popped
         if rem > 0 {
             // advance to the next sibling in order
-            self.digits.push(digit + 1);
+            self.path.push(digit + 1);
             self.remaining.push(rem - 1);
+            self.open_total -= 1;
+            if rem == 1 && self.min_open == i {
+                // Drained the cached level; every deeper level is already
+                // popped, and no shallower level was open (min_open == i).
+                self.min_open = NO_OPEN;
+            }
             Some(digit + 1)
         } else {
+            // A closed level was popped; the cache (if any) is shallower.
+            debug_assert!(self.min_open == NO_OPEN || self.min_open < i);
             None
         }
     }
 
-    /// The paper's `GETHEAVIESTTASKINDEX` generalized (§IV-C): find the
-    /// shallowest depth with unexplored siblings, donate the **last** one
-    /// (position `digit + remaining`), mark it delegated by decrementing.
+    /// The paper's `GETHEAVIESTTASKINDEX` generalized (§IV-C): the cached
+    /// shallowest depth with unexplored siblings donates its **last** one
+    /// (position `digit + remaining`), marked delegated by decrementing.
     /// Returns the donated node's *global* index.
     pub fn donate_heaviest(&mut self) -> Option<NodeIndex> {
-        for i in 0..self.digits.len() {
-            if self.remaining[i] > 0 {
-                let donated_digit = self.digits[i] + self.remaining[i];
-                self.remaining[i] -= 1;
-                let mut path = Vec::with_capacity(self.root.len() + i + 1);
-                path.extend_from_slice(&self.root);
-                path.extend_from_slice(&self.digits[..i]);
-                path.push(donated_digit);
-                return Some(NodeIndex(path));
-            }
+        let i = self.min_open;
+        if i == NO_OPEN {
+            return None;
         }
-        None
+        let rem = self.remaining[i];
+        debug_assert!(rem > 0, "min_open cache points at a closed level");
+        let donated_digit = self.path[self.root_len + i] + rem;
+        self.remaining[i] = rem - 1;
+        self.open_total -= 1;
+        if rem == 1 {
+            // Level drained: advance the cache to the next open level (the
+            // only place a scan remains, amortized over the donations that
+            // drained the level).
+            self.min_open = self.remaining[i + 1..]
+                .iter()
+                .position(|&r| r > 0)
+                .map_or(NO_OPEN, |off| i + 1 + off);
+        }
+        let cut = self.root_len + i;
+        let mut path = Vec::with_capacity(cut + 1);
+        path.extend_from_slice(&self.path[..cut]);
+        path.push(donated_digit);
+        Some(NodeIndex(path))
     }
 
-    /// Weight of the heaviest donatable task, if any.
+    /// Weight of the heaviest donatable task, if any (O(1) via the cache).
     pub fn heaviest_weight(&self) -> Option<f64> {
-        for i in 0..self.digits.len() {
-            if self.remaining[i] > 0 {
-                return Some(1.0 / ((self.root.len() + i + 1) as f64 + 1.0));
-            }
+        if self.min_open == NO_OPEN {
+            None
+        } else {
+            Some(1.0 / ((self.root_len + self.min_open + 1) as f64 + 1.0))
         }
-        None
     }
 
     /// Global index of the node currently being explored.
     pub fn current_node(&self) -> NodeIndex {
-        let mut path = self.root.clone();
-        path.extend_from_slice(&self.digits);
-        NodeIndex(path)
+        NodeIndex(self.path.clone())
     }
 
     /// Total unexplored siblings across all depths (donatable supply).
     pub fn donatable(&self) -> u64 {
-        self.remaining.iter().map(|&r| r as u64).sum()
+        self.open_total
     }
 
     /// Checkpoint support (§VII): serialize the full bookkeeping so a core
-    /// can leave the computation and a replacement can resume.
+    /// can leave the computation and a replacement can resume.  The byte
+    /// format (three u32 vectors: root, digits, remaining) is unchanged
+    /// from v1 — checkpoints written before the flat-path refactor restore
+    /// cleanly.
     pub fn to_checkpoint(&self) -> Vec<u8> {
         let mut out = Vec::new();
         let dump = |out: &mut Vec<u8>, xs: &[u32]| {
@@ -191,13 +337,15 @@ impl CurrentIndex {
                 out.extend_from_slice(&x.to_le_bytes());
             }
         };
-        dump(&mut out, &self.root);
-        dump(&mut out, &self.digits);
+        dump(&mut out, &self.path[..self.root_len]);
+        dump(&mut out, &self.path[self.root_len..]);
         dump(&mut out, &self.remaining);
         out
     }
 
-    /// Inverse of [`to_checkpoint`](Self::to_checkpoint).
+    /// Inverse of [`to_checkpoint`](Self::to_checkpoint).  Derived fields
+    /// (`min_open`, `open_total`) are recomputed, so a checkpoint cannot
+    /// carry an inconsistent cache.
     pub fn from_checkpoint(bytes: &[u8]) -> Option<Self> {
         let mut pos = 0usize;
         let mut load = || -> Option<Vec<u32>> {
@@ -215,13 +363,18 @@ impl CurrentIndex {
             pos += 4 * len;
             Some(v)
         };
-        let root = load()?;
-        let digits = load()?;
-        let remaining = load()?;
+        let root: Vec<u32> = load()?;
+        let digits: Vec<u32> = load()?;
+        let remaining: Vec<u32> = load()?;
         if digits.len() != remaining.len() {
             return None;
         }
-        Some(CurrentIndex { root, digits, remaining })
+        let root_len = root.len();
+        let mut path = root;
+        path.extend_from_slice(&digits);
+        let min_open = remaining.iter().position(|&r| r > 0).unwrap_or(NO_OPEN);
+        let open_total = remaining.iter().map(|&r| r as u64).sum();
+        Some(CurrentIndex { path, root_len, remaining, min_open, open_total })
     }
 }
 
@@ -244,12 +397,59 @@ mod tests {
 
     #[test]
     fn encode_decode_roundtrip() {
-        for idx in [NodeIndex::root(), NodeIndex(vec![0, 1, 1, 0]), NodeIndex(vec![5, 0, 2])] {
+        for idx in [
+            NodeIndex::root(),
+            NodeIndex(vec![0, 1, 1, 0]),
+            NodeIndex(vec![5, 0, 2]),
+            NodeIndex(vec![127, 128, 16383, 16384, u32::MAX]),
+            NodeIndex(vec![0; 200]),
+        ] {
             let bytes = idx.encode();
+            assert_eq!(bytes.len(), idx.encoded_len(), "{idx:?}");
             assert_eq!(NodeIndex::decode(&bytes), Some(idx.clone()));
         }
+    }
+
+    #[test]
+    fn varint_sizes_are_minimal() {
+        // Small digits (the overwhelmingly common case) cost one byte each.
+        let small = NodeIndex(vec![0, 1, 2, 3]);
+        assert_eq!(small.encoded_len(), 1 + 4);
+        // Digit width grows with magnitude, not with a fixed 4-byte slot.
+        assert_eq!(NodeIndex(vec![127]).encoded_len(), 2);
+        assert_eq!(NodeIndex(vec![128]).encoded_len(), 3);
+        assert_eq!(NodeIndex(vec![u32::MAX]).encoded_len(), 6);
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_input() {
+        // Truncated: depth promises more digits than the payload holds.
+        assert_eq!(NodeIndex::decode(&[2, 0]), None);
+        // Truncated inside a multi-byte digit varint.
+        assert_eq!(NodeIndex::decode(&[1, 0x80]), None);
+        // Trailing bytes after a complete index.
         assert_eq!(NodeIndex::decode(&[1, 2, 3]), None);
-        assert_eq!(NodeIndex::decode(&[2, 0, 0, 0, 1]), None);
+        // Non-canonical (zero-padded) varint.
+        assert_eq!(NodeIndex::decode(&[1, 0x85, 0x00]), None);
+        // Oversized: fifth byte carries more than u32's top 4 bits.
+        assert_eq!(NodeIndex::decode(&[1, 0xFF, 0xFF, 0xFF, 0xFF, 0x7F]), None);
+        // Oversized: continuation bit set on the fifth byte.
+        assert_eq!(NodeIndex::decode(&[1, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0x01]), None);
+        // Hostile depth must not drive a huge allocation: rejected early.
+        assert_eq!(NodeIndex::decode(&[0xFF, 0xFF, 0xFF, 0xFF, 0x0F]), None);
+    }
+
+    #[test]
+    fn decode_from_is_self_delimiting() {
+        let a = NodeIndex(vec![3, 1]);
+        let b = NodeIndex(vec![200, 0]);
+        let mut bytes = a.encode();
+        b.encode_into(&mut bytes);
+        let mut pos = 0usize;
+        assert_eq!(NodeIndex::decode_from(&bytes, &mut pos), Some(a));
+        assert_eq!(NodeIndex::decode_from(&bytes, &mut pos), Some(b));
+        assert_eq!(pos, bytes.len());
+        assert_eq!(NodeIndex::decode_from(&bytes, &mut pos), None);
     }
 
     #[test]
@@ -321,6 +521,7 @@ mod tests {
         let mut ci = CurrentIndex::new(root.clone());
         assert_eq!(ci.root_depth(), 3);
         ci.push(0, 2);
+        assert_eq!(ci.global_depth(), 4);
         let d = ci.donate_heaviest().unwrap();
         assert_eq!(d, NodeIndex(vec![1, 0, 1, 1]));
         assert!(root.is_prefix_of(&d));
@@ -337,6 +538,35 @@ mod tests {
     }
 
     #[test]
+    fn min_open_cache_survives_drain_and_refill() {
+        // Drain the cached shallow level by donation, verify the cache
+        // advances to the deeper open level, then refill a shallower one.
+        let mut ci = CurrentIndex::new(NodeIndex::root());
+        ci.push(0, 2); // level 0: 1 open
+        ci.push(0, 3); // level 1: 2 open
+        assert_eq!(ci.donate_heaviest().unwrap(), NodeIndex(vec![1])); // drains level 0
+        assert_eq!(ci.heaviest_weight(), Some(1.0 / 3.0)); // cache now level 1
+        assert_eq!(ci.donate_heaviest().unwrap(), NodeIndex(vec![0, 2]));
+        assert_eq!(ci.donate_heaviest().unwrap(), NodeIndex(vec![0, 1]));
+        assert_eq!(ci.heaviest_weight(), None);
+        // DFS continues below; a deeper push re-opens the supply.
+        ci.push(0, 4);
+        assert_eq!(ci.donatable(), 3);
+        assert_eq!(ci.heaviest_weight(), Some(1.0 / 4.0));
+        assert_eq!(ci.donate_heaviest().unwrap(), NodeIndex(vec![0, 0, 3]));
+    }
+
+    #[test]
+    fn pop_advance_drains_cached_level() {
+        let mut ci = CurrentIndex::new(NodeIndex::root());
+        ci.push(0, 2); // level 0: rem 1, cached
+        assert_eq!(ci.pop_and_advance(), Some(1)); // consumes the sibling
+        assert_eq!(ci.donatable(), 0);
+        assert_eq!(ci.donate_heaviest(), None);
+        assert_eq!(ci.heaviest_weight(), None);
+    }
+
+    #[test]
     fn checkpoint_roundtrip() {
         let mut ci = CurrentIndex::new(NodeIndex(vec![1, 0]));
         ci.push(0, 3);
@@ -346,7 +576,28 @@ mod tests {
         let back = CurrentIndex::from_checkpoint(&bytes).unwrap();
         assert_eq!(back.current_node(), ci.current_node());
         assert_eq!(back.donatable(), ci.donatable());
+        assert_eq!(back.heaviest_weight(), ci.heaviest_weight());
         assert!(CurrentIndex::from_checkpoint(&[0, 0]).is_none());
+    }
+
+    #[test]
+    fn checkpoint_restores_donation_order() {
+        // The restored bookkeeping must donate exactly what the original
+        // would have donated (derived cache fields are recomputed).
+        let mut ci = CurrentIndex::new(NodeIndex::root());
+        ci.push(0, 2);
+        ci.push(0, 4);
+        ci.push(1, 3);
+        ci.donate_heaviest(); // drains level 0
+        let mut restored = CurrentIndex::from_checkpoint(&ci.to_checkpoint()).unwrap();
+        loop {
+            let a = ci.donate_heaviest();
+            let b = restored.donate_heaviest();
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
     }
 
     #[test]

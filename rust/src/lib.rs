@@ -38,6 +38,7 @@
 //! | §IV-C | generalized two-row index, sibling-subset donation | [`index::CurrentIndex`] |
 //! | §V | VERTEX COVER / DOMINATING SET instantiations | [`problems`] |
 //! | §VI | experiments: Tables I/II, Figs. 9/10, `T_S`/`T_R` | [`experiments`], [`metrics`], `benches/` |
+//! | §VI (measurement) | perf-gated benchmark suite, `BENCH_*.json` | [`bench`] (`pbt bench`, spec: `docs/BENCHMARKS.md`) |
 //! | §VII | join-leave, checkpointing, **multi-machine runs** | [`coordinator`] (`Worker::leave`), [`comm::tcp`], [`runner::cluster`] |
 //!
 //! Execution strategies, all driving the identical worker state machine:
@@ -77,6 +78,7 @@ pub mod config;
 pub mod cli;
 pub mod encoding;
 pub mod experiments;
+pub mod bench;
 pub mod testing;
 
 /// Solution cost. Minimisation problems use smaller-is-better; `COST_INF`

@@ -42,6 +42,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "solve" => cmd_solve(args),
         "cluster" => cmd_cluster(args),
         "simulate" => cmd_simulate(args),
+        "bench" => cmd_bench(args),
         "table1" => cmd_table(args, true),
         "table2" => cmd_table(args, false),
         "fig9" => cmd_fig9(args),
@@ -299,6 +300,74 @@ fn print_cluster_report<S>(r: &pbt::runner::cluster::ClusterReport<S>) {
             r.peers_lost(),
         );
     }
+}
+
+/// `pbt bench` — run the deterministic perf suite, write
+/// `BENCH_<label>.json`, and optionally gate against a committed baseline
+/// (the CI regression gate; policy in docs/BENCHMARKS.md).
+fn cmd_bench(args: &Args) -> Result<()> {
+    use pbt::bench::{self, BenchOptions, BenchReport, DEFAULT_TOLERANCE};
+
+    let smoke = args.get_bool("smoke", false)?;
+    let label = args.get_str("label", if smoke { "smoke" } else { "local" });
+    let out = args.get_str("out", &format!("BENCH_{label}.json"));
+    let tolerance = args.get_f64("tolerance", DEFAULT_TOLERANCE)?;
+    if !(0.0..1.0).contains(&tolerance) {
+        bail!("--tolerance must be in [0, 1), got {tolerance}");
+    }
+
+    println!(
+        "== pbt bench: suite v{} {} (label {label}, rev {})",
+        pbt::bench::SUITE_VERSION,
+        if smoke { "smoke" } else { "full" },
+        bench::git_rev(),
+    );
+    let report = bench::run_suite(&BenchOptions { smoke, label: label.clone() });
+    println!("{}", report.render_table());
+    println!(
+        "calibration (mix64 kernel): {:.2} Mops/s",
+        report.calibration_nps / 1e6
+    );
+    report.write_file(&out)?;
+    println!("wrote {out}");
+
+    if let Some(path) = args.get("write-baseline") {
+        report.write_file(path)?;
+        println!("wrote baseline {path}");
+    }
+
+    if let Some(baseline_path) = args.get("check") {
+        let text = std::fs::read_to_string(baseline_path)
+            .with_context(|| format!("reading baseline {baseline_path}"))?;
+        let baseline = BenchReport::from_json(&pbt::bench::json::parse(&text)?)
+            .with_context(|| format!("parsing baseline {baseline_path}"))?;
+        if baseline.bootstrap {
+            println!(
+                "check: {baseline_path} is a bootstrap baseline (no measurements yet) — \
+                 gate passes vacuously; promote a real run with \
+                 `pbt bench --write-baseline {baseline_path}`"
+            );
+            return Ok(());
+        }
+        let regressions = bench::check_against(&report, &baseline, tolerance)?;
+        if regressions.is_empty() {
+            println!(
+                "check: OK — no case regressed beyond {:.0}% vs {baseline_path} (rev {})",
+                tolerance * 100.0,
+                baseline.git_rev,
+            );
+        } else {
+            for r in &regressions {
+                eprintln!("REGRESSION {}: {}", r.case, r.detail);
+            }
+            bail!(
+                "{} case(s) regressed beyond {:.0}% vs {baseline_path}",
+                regressions.len(),
+                tolerance * 100.0
+            );
+        }
+    }
+    Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {

@@ -16,7 +16,20 @@ pub struct SweepRow {
     pub t_r: f64,
     /// Total node visits (work conservation check).
     pub nodes: u64,
+    /// Total tasks donated across all cores (load-balancing traffic; the
+    /// bench suite records it per sweep point).
+    pub tasks_donated: u64,
     pub best_cost: Option<u64>,
+}
+
+/// Node-visit throughput; 0 when no time elapsed (degenerate runs must not
+/// divide by zero or report infinities into `BENCH_*.json`).
+pub fn nodes_per_sec(nodes: u64, secs: f64) -> f64 {
+    if secs > 0.0 {
+        nodes as f64 / secs
+    } else {
+        0.0
+    }
 }
 
 /// Render rows in the paper's Table I/II format.
@@ -152,10 +165,16 @@ mod tests {
 
     fn rows() -> Vec<SweepRow> {
         vec![
-            SweepRow { instance: "a".into(), cores: 2, time_secs: 8.0, t_s: 10.0, t_r: 12.0, nodes: 100, best_cost: Some(5) },
-            SweepRow { instance: "a".into(), cores: 4, time_secs: 4.0, t_s: 11.0, t_r: 20.0, nodes: 100, best_cost: Some(5) },
-            SweepRow { instance: "b".into(), cores: 2, time_secs: 3.0, t_s: 5.0, t_r: 6.0, nodes: 50, best_cost: Some(3) },
+            SweepRow { instance: "a".into(), cores: 2, time_secs: 8.0, t_s: 10.0, t_r: 12.0, nodes: 100, tasks_donated: 20, best_cost: Some(5) },
+            SweepRow { instance: "a".into(), cores: 4, time_secs: 4.0, t_s: 11.0, t_r: 20.0, nodes: 100, tasks_donated: 44, best_cost: Some(5) },
+            SweepRow { instance: "b".into(), cores: 2, time_secs: 3.0, t_s: 5.0, t_r: 6.0, nodes: 50, tasks_donated: 10, best_cost: Some(3) },
         ]
+    }
+
+    #[test]
+    fn nodes_per_sec_is_safe() {
+        assert_eq!(nodes_per_sec(100, 0.0), 0.0);
+        assert!((nodes_per_sec(100, 2.0) - 50.0).abs() < 1e-12);
     }
 
     #[test]

@@ -378,6 +378,168 @@ fn prop_wire_codec_roundtrips_and_matches_wire_bytes() {
 }
 
 #[test]
+fn prop_varint_node_index_roundtrip() {
+    // Wire protocol v2: indices are LEB128 varints.  Every encode must
+    // roundtrip exactly, report its own length, and reject every strict
+    // prefix (truncation) and any trailing byte (framing corruption).
+    Runner::new(300, 101).run(|g| {
+        let len = g.usize_in(0, 40);
+        let digits: Vec<u32> = (0..len)
+            .map(|_| match g.usize_in(0, 5) {
+                0 => g.u32_in(0, 128),
+                1 => g.u32_in(128, 16384),
+                2 => g.u32_in(16384, 1 << 21),
+                3 => g.u32_in(1 << 21, 1 << 28),
+                _ => (g.seed() as u32) | (1 << 28), // force the 5-byte band
+            })
+            .collect();
+        let idx = NodeIndex(digits);
+        let bytes = idx.encode();
+        prop_assert!(
+            bytes.len() == idx.encoded_len(),
+            "encode produced {} bytes but encoded_len says {} for {idx:?}",
+            bytes.len(),
+            idx.encoded_len()
+        );
+        prop_assert!(
+            NodeIndex::decode(&bytes) == Some(idx.clone()),
+            "decode(encode(idx)) != idx for {idx:?}"
+        );
+        // Truncated input: every strict prefix must be rejected.
+        for cut in 0..bytes.len() {
+            prop_assert!(
+                NodeIndex::decode(&bytes[..cut]).is_none(),
+                "prefix of {} bytes accepted for {idx:?}",
+                cut
+            );
+        }
+        // Oversized input: trailing garbage must be rejected.
+        let mut extended = bytes.clone();
+        extended.push(g.seed() as u8);
+        prop_assert!(
+            NodeIndex::decode(&extended).is_none(),
+            "trailing byte accepted for {idx:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_donation_is_heaviest_open_suffix() {
+    // The paper's donation invariant, pinned against a naive reference
+    // model that rescans (digit, remaining) rows from the root on every
+    // query — exactly the behaviour the CurrentIndex min-open cache
+    // replaces.  Under random push/pop/donate interleavings the cached
+    // implementation must agree on every donation, weight, supply and
+    // current-node query, and every donated index must be the LAST
+    // unexplored sibling (heaviest open suffix) of the shallowest open
+    // depth.
+    struct Model {
+        root: Vec<u32>,
+        digits: Vec<u32>,
+        remaining: Vec<u32>,
+    }
+    impl Model {
+        fn pop_and_advance(&mut self) -> Option<u32> {
+            let digit = self.digits.pop()?;
+            let rem = self.remaining.pop()?;
+            if rem > 0 {
+                self.digits.push(digit + 1);
+                self.remaining.push(rem - 1);
+                Some(digit + 1)
+            } else {
+                None
+            }
+        }
+        fn donate(&mut self) -> Option<NodeIndex> {
+            let i = self.remaining.iter().position(|&r| r > 0)?;
+            let donated = self.digits[i] + self.remaining[i];
+            self.remaining[i] -= 1;
+            let mut path = self.root.clone();
+            path.extend_from_slice(&self.digits[..i]);
+            path.push(donated);
+            Some(NodeIndex(path))
+        }
+        fn weight(&self) -> Option<f64> {
+            let i = self.remaining.iter().position(|&r| r > 0)?;
+            Some(1.0 / ((self.root.len() + i + 1) as f64 + 1.0))
+        }
+        fn current(&self) -> NodeIndex {
+            let mut path = self.root.clone();
+            path.extend_from_slice(&self.digits);
+            NodeIndex(path)
+        }
+    }
+
+    Runner::new(200, 202).run(|g| {
+        let root = NodeIndex(g.vec_u32(4, 5));
+        let mut ci = CurrentIndex::new(root.clone());
+        let mut model = Model { root: root.0.clone(), digits: Vec::new(), remaining: Vec::new() };
+        for step in 0..g.usize_in(1, 120) {
+            match g.usize_in(0, 3) {
+                0 => {
+                    let num = g.u32_in(1, 6);
+                    let digit = g.u32_in(0, num);
+                    ci.push(digit, num);
+                    model.digits.push(digit);
+                    model.remaining.push(num - digit - 1);
+                }
+                1 => {
+                    let got = ci.pop_and_advance();
+                    let want = model.pop_and_advance();
+                    prop_assert!(got == want, "step {step}: pop {got:?} != {want:?}");
+                }
+                _ => {
+                    let got = ci.donate_heaviest();
+                    let want = model.donate();
+                    prop_assert!(got == want, "step {step}: donate {got:?} != {want:?}");
+                    if let Some(idx) = &got {
+                        // Invariant: the donation is strictly the heaviest
+                        // remaining task — no shallower depth is open.
+                        let depth_in_subtree = idx.depth() - root.depth();
+                        prop_assert!(
+                            model.remaining[..depth_in_subtree - 1].iter().all(|&r| r == 0),
+                            "step {step}: donated at local depth {depth_in_subtree} \
+                             with a shallower depth still open"
+                        );
+                    }
+                }
+            }
+            let supply: u64 = model.remaining.iter().map(|&r| r as u64).sum();
+            prop_assert!(
+                ci.donatable() == supply,
+                "step {step}: donatable {} != {supply}",
+                ci.donatable()
+            );
+            prop_assert!(
+                ci.heaviest_weight() == model.weight(),
+                "step {step}: weight {:?} != {:?}",
+                ci.heaviest_weight(),
+                model.weight()
+            );
+            prop_assert!(
+                ci.current_node() == model.current(),
+                "step {step}: node {} != {}",
+                ci.current_node(),
+                model.current()
+            );
+        }
+        // The restored checkpoint must behave identically from here on.
+        let mut restored = CurrentIndex::from_checkpoint(&ci.to_checkpoint())
+            .expect("checkpoint of a live bookkeeping");
+        loop {
+            let a = ci.donate_heaviest();
+            let b = restored.donate_heaviest();
+            prop_assert!(a == b, "restored checkpoint donates {b:?}, original {a:?}");
+            if a.is_none() {
+                break;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_hybrid_rollback_exact() {
     Runner::new(60, 77).run(|g| {
         let n = g.usize_in(8, 40);
