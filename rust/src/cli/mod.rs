@@ -102,6 +102,23 @@ COMMANDS:
                 (listen = rendezvous + rank 0; join = one extra rank;
                  run = spawn C-1 local join processes and listen — the
                  one-command localhost demo)
+    serve       durable multi-job solve daemon (see docs/SERVER.md)
+                  [--bind HOST:PORT]  [--journal DIR]  [--max-active N]
+                  [--workers N]  [--slice NODES]  [--checkpoint-ms T]
+                (prints `SERVING <addr>`; kill -9 + restart with the same
+                 --journal resumes every in-flight job from its checkpoint)
+    submit      queue a job on a running daemon; prints `JOB <id>`
+                  --problem vc|ds  --instance <spec>  [--scale 0|1|2]
+                  [--bound none|edges|matching]  [--workers N]  [--priority P]
+                  [--slice NODES]  [--pace-ms T]  [--server HOST:PORT]
+                (<spec> = suite name, DIMACS path, or gnm:<n>:<m>:<seed>)
+    status      one job's live state      status <id>  [--server HOST:PORT]
+    result      one job's outcome         result <id>  [--wait] [--timeout-ms T]
+    cancel      cancel a queued/running job   cancel <id>
+    server-stats  daemon version, uptime, queue + lifecycle counters
+    shutdown-server  graceful stop: jobs checkpoint + journal, then resume
+                     on the next `pbt serve` with the same --journal
+    version     print crate version + git revision (also: --version)
     simulate    virtual-time run on simulated cores
                   --problem vc|ds  --instance <name>  --cores N  --latency T  --batch B
     bench       deterministic perf suite -> BENCH_<label>.json (docs/BENCHMARKS.md)
@@ -121,6 +138,8 @@ COMMANDS:
 INSTANCES (generated, seeded):
     phat1 phat2 frb cell60   (vertex cover, Table I families)
     ds1 ds2                  (dominating set, Table II families)
+    gnm:<n>:<m>:<seed>       (random G(n,m), identical bytes everywhere)
+    randds:<n>:<m>:<seed>    (random dominating-set family)
     or any DIMACS .clq/.mis/.col file path
 ";
 

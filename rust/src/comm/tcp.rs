@@ -37,7 +37,7 @@
 use super::wire;
 use super::{CoreState, Message, Transport};
 use crate::Rank;
-use std::io::{self, Read, Write};
+use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -85,22 +85,12 @@ fn proto_err(msg: impl Into<String>) -> io::Error {
 
 /// Write one raw length-prefixed handshake frame.
 fn write_hs(stream: &mut TcpStream, payload: &[u8]) -> io::Result<()> {
-    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
-    stream.write_all(payload)?;
-    stream.flush()
+    wire::write_blob_frame(stream, payload)
 }
 
 /// Read one raw length-prefixed handshake frame.
 fn read_hs(stream: &mut TcpStream) -> io::Result<Vec<u8>> {
-    let mut header = [0u8; 4];
-    stream.read_exact(&mut header)?;
-    let len = u32::from_le_bytes(header) as usize;
-    if len > MAX_HANDSHAKE_BYTES {
-        return Err(proto_err(format!("handshake frame of {len} bytes")));
-    }
-    let mut payload = vec![0u8; len];
-    stream.read_exact(&mut payload)?;
-    Ok(payload)
+    wire::read_blob_frame(stream, MAX_HANDSHAKE_BYTES)
 }
 
 fn push_str(out: &mut Vec<u8>, s: &str) {

@@ -147,21 +147,56 @@ pub fn encode_into(out: &mut Vec<u8>, msg: &Message) {
     debug_assert_eq!(out.len() - start, encoded_len(msg));
 }
 
-fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], WireError> {
-    if bytes.len() < *pos + n {
-        return Err(WireError::Truncated);
+/// Shared little-endian scalar primitives (`None` = truncated), used by
+/// this codec, the serve protocol (`server::proto`) and the job journal
+/// (`server::journal`) so the bounds-check discipline lives in ONE place.
+/// The u64 arithmetic makes a hostile length unable to overflow the check.
+pub(crate) fn take_bytes<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Option<&'a [u8]> {
+    if (bytes.len() as u64) < *pos as u64 + n as u64 {
+        return None;
     }
     let s = &bytes[*pos..*pos + n];
     *pos += n;
-    Ok(s)
+    Some(s)
+}
+
+pub(crate) fn take_u32_le(bytes: &[u8], pos: &mut usize) -> Option<u32> {
+    take_bytes(bytes, pos, 4).map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+}
+
+pub(crate) fn take_u64_le(bytes: &[u8], pos: &mut usize) -> Option<u64> {
+    take_bytes(bytes, pos, 8).map(|s| u64::from_le_bytes(s.try_into().unwrap()))
+}
+
+/// Length-prefixed `u32` vector (u32 LE count, then `count` u32 LE
+/// values).  The overflow-safe bounds check rejects a hostile count
+/// before any allocation.
+pub(crate) fn take_u32_vec(bytes: &[u8], pos: &mut usize) -> Option<Vec<u32>> {
+    let count = take_u32_le(bytes, pos)? as usize;
+    if (bytes.len() as u64) < *pos as u64 + 4 * count as u64 {
+        return None;
+    }
+    Some((0..count).map(|_| take_u32_le(bytes, pos).unwrap()).collect())
+}
+
+pub(crate) fn push_u32_le(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn push_u64_le(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], WireError> {
+    take_bytes(bytes, pos, n).ok_or(WireError::Truncated)
 }
 
 fn take_u32(bytes: &[u8], pos: &mut usize) -> Result<u32, WireError> {
-    Ok(u32::from_le_bytes(take(bytes, pos, 4)?.try_into().unwrap()))
+    take_u32_le(bytes, pos).ok_or(WireError::Truncated)
 }
 
 fn take_u64(bytes: &[u8], pos: &mut usize) -> Result<u64, WireError> {
-    Ok(u64::from_le_bytes(take(bytes, pos, 8)?.try_into().unwrap()))
+    take_u64_le(bytes, pos).ok_or(WireError::Truncated)
 }
 
 /// Decode one message from a full payload.  The payload must contain
@@ -198,6 +233,35 @@ pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
         return Err(WireError::TrailingBytes(bytes.len() - pos));
     }
     Ok(msg)
+}
+
+/// Write one raw length-prefixed blob frame (u32 LE length + payload).
+/// Shared framing primitive: the cluster handshake (`comm::tcp`) and the
+/// solve-service protocol (`server::proto`) both delimit their own payloads
+/// with it, so every stream in the system frames bytes the same way.
+pub fn write_blob_frame<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
+    let mut frame = Vec::with_capacity(FRAME_HEADER_BYTES + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(payload);
+    w.write_all(&frame)?;
+    w.flush()
+}
+
+/// Read one raw length-prefixed blob frame, rejecting payloads larger than
+/// `max_bytes` (each protocol supplies its own ceiling).
+pub fn read_blob_frame<R: Read>(r: &mut R, max_bytes: usize) -> std::io::Result<Vec<u8>> {
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    r.read_exact(&mut header)?;
+    let len = u32::from_le_bytes(header) as usize;
+    if len > max_bytes {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            WireError::OversizedFrame(len).to_string(),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
 }
 
 /// Write one message as a length-prefixed frame.  Returns the total bytes
@@ -344,6 +408,23 @@ mod tests {
         buf.truncate(buf.len() - 2);
         let mut cursor = std::io::Cursor::new(buf);
         assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn blob_frames_roundtrip_and_enforce_their_ceiling() {
+        let mut buf = Vec::new();
+        write_blob_frame(&mut buf, b"hello").unwrap();
+        write_blob_frame(&mut buf, b"").unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_blob_frame(&mut cursor, 64).unwrap(), b"hello");
+        assert_eq!(read_blob_frame(&mut cursor, 64).unwrap(), b"");
+        // EOF surfaces as an io error (callers decide whether it is clean).
+        assert!(read_blob_frame(&mut cursor, 64).is_err());
+        // A frame larger than the caller's ceiling is refused unread.
+        let mut buf = Vec::new();
+        write_blob_frame(&mut buf, &[0u8; 100]).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_blob_frame(&mut cursor, 64).is_err());
     }
 
     #[test]

@@ -169,6 +169,43 @@ impl ClusterConfig {
     }
 }
 
+/// Durable solve-service knobs (`[server]` section; see the `pbt serve`
+/// daemon and client subcommands, spec in `docs/SERVER.md`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// Daemon bind address (`pbt serve`); port 0 = ephemeral, printed as
+    /// `SERVING <addr>` at startup.
+    pub bind: String,
+    /// Daemon address the client subcommands (`submit`/`status`/...) dial.
+    pub connect: String,
+    /// Job-journal directory (created if missing).  A restarted daemon
+    /// pointed at the same directory resumes every unfinished job from its
+    /// last checkpoint.
+    pub journal_dir: String,
+    /// Jobs allowed to run concurrently; the rest wait in the queue.
+    pub max_active: usize,
+    /// Default per-job worker budget when a submit does not name one.
+    pub workers: usize,
+    /// Default node visits per executor slice (checkpoint granularity).
+    pub slice_nodes: u32,
+    /// Milliseconds between journal checkpoint drains per running job.
+    pub checkpoint_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            bind: "127.0.0.1:7878".into(),
+            connect: "127.0.0.1:7878".into(),
+            journal_dir: "pbt-journal".into(),
+            max_active: 2,
+            workers: 2,
+            slice_nodes: 10_000,
+            checkpoint_ms: 500,
+        }
+    }
+}
+
 /// Typed launcher configuration with defaults.
 #[derive(Debug, Clone)]
 pub struct PbtConfig {
@@ -190,6 +227,8 @@ pub struct PbtConfig {
     pub bound: String,
     /// Multi-process cluster settings (`[cluster]`).
     pub cluster: ClusterConfig,
+    /// Durable solve-service settings (`[server]`).
+    pub server: ServerConfig,
 }
 
 impl Default for PbtConfig {
@@ -204,6 +243,7 @@ impl Default for PbtConfig {
             scale: 1,
             bound: "edges".into(),
             cluster: ClusterConfig::default(),
+            server: ServerConfig::default(),
         }
     }
 }
@@ -264,6 +304,27 @@ impl PbtConfig {
         }
         if let Some(v) = geti("cluster", "donate_batch") {
             cfg.cluster.donate_batch = v as usize;
+        }
+        if let Some(v) = doc.get("server", "bind").and_then(Value::as_str) {
+            cfg.server.bind = v.to_string();
+        }
+        if let Some(v) = doc.get("server", "connect").and_then(Value::as_str) {
+            cfg.server.connect = v.to_string();
+        }
+        if let Some(v) = doc.get("server", "journal_dir").and_then(Value::as_str) {
+            cfg.server.journal_dir = v.to_string();
+        }
+        if let Some(v) = geti("server", "max_active") {
+            cfg.server.max_active = v as usize;
+        }
+        if let Some(v) = geti("server", "workers") {
+            cfg.server.workers = v as usize;
+        }
+        if let Some(v) = geti("server", "slice_nodes") {
+            cfg.server.slice_nodes = v as u32;
+        }
+        if let Some(v) = geti("server", "checkpoint_ms") {
+            cfg.server.checkpoint_ms = v as u64;
         }
         Ok(cfg)
     }
@@ -331,6 +392,24 @@ mod tests {
         let cfg = PbtConfig::from_text("").unwrap();
         assert_eq!(cfg.workers, PbtConfig::default().workers);
         assert_eq!(cfg.cluster, ClusterConfig::default());
+    }
+
+    #[test]
+    fn server_section_parses() {
+        let cfg = PbtConfig::from_text(
+            "[server]\nbind = \"0.0.0.0:9000\"\njournal_dir = \"/var/lib/pbt\"\n\
+             max_active = 4\nworkers = 8\nslice_nodes = 2000\ncheckpoint_ms = 100\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.bind, "0.0.0.0:9000");
+        assert_eq!(cfg.server.journal_dir, "/var/lib/pbt");
+        assert_eq!(cfg.server.max_active, 4);
+        assert_eq!(cfg.server.workers, 8);
+        assert_eq!(cfg.server.slice_nodes, 2000);
+        assert_eq!(cfg.server.checkpoint_ms, 100);
+        // Untouched keys keep defaults.
+        assert_eq!(cfg.server.connect, ServerConfig::default().connect);
+        assert_eq!(PbtConfig::from_text("").unwrap().server, ServerConfig::default());
     }
 
     #[test]

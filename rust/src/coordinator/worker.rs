@@ -477,9 +477,38 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
         );
     }
 
+    /// Checkpoint-drain hook (§VII durability): non-destructively export
+    /// every unfinished subtree this worker holds as checkpoint blobs —
+    /// the active stepper's bookkeeping ([`Stepper::checkpoint_bytes`])
+    /// plus any still-pending multi-task response indices (each as a
+    /// fresh subtree checkpoint).  Unlike [`leave`](Self::leave), the
+    /// worker keeps running; the exported blobs describe a *superset* of
+    /// the work remaining the instant the drain happened — the
+    /// at-least-once contract a resume journal wants.  This is the drain
+    /// primitive for Worker-protocol runners (cluster, sim); the `pbt
+    /// serve` executor runs plain [`Stepper`]s and snapshots them
+    /// directly (`server::exec`), same contract, no Worker in the loop.
+    ///
+    /// [`Stepper`]: crate::engine::Stepper
+    pub fn export_unfinished(&self) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        if let Some(s) = &self.stepper {
+            if !s.is_exhausted() {
+                out.push(s.checkpoint_bytes());
+            }
+        }
+        for idx in &self.pending {
+            out.push(crate::index::CurrentIndex::new(idx.clone()).to_checkpoint());
+        }
+        out
+    }
+
     /// Join-leave (§VII): leave the computation now. Returns a checkpoint
     /// of the unfinished subtree (if any) that a replacement core restores
-    /// with [`Stepper::from_checkpoint`].
+    /// with [`Stepper::from_checkpoint`].  Note this drops any pending
+    /// multi-task response indices — use
+    /// [`export_unfinished`](Self::export_unfinished) first when those
+    /// must survive too.
     pub fn leave(&mut self) -> Option<Vec<u8>> {
         let cp = match self.stepper.take() {
             Some(s) => {
@@ -738,6 +767,42 @@ mod tests {
         assert_eq!(visited + resumed.stats.nodes, serial.stats.nodes);
         let total_solutions = w.stats.search.solutions + resumed.stats.solutions;
         assert_eq!(total_solutions, serial.stats.solutions);
+    }
+
+    #[test]
+    fn export_unfinished_covers_stepper_and_pending() {
+        use crate::engine::{Stepper, StepResult};
+        use crate::index::NodeIndex;
+        let p = ToyTree { height: 8 };
+        // A workless worker (rank 1 waits for its first task) exports nothing.
+        let idle = Worker::new(&p, 1, 2, WorkerConfig::default());
+        assert!(idle.export_unfinished().is_empty(), "no stepper, no pending: empty drain");
+        // Rank 0 owns the root from creation.
+        let mut w = Worker::new(&p, 0, 2, WorkerConfig::default());
+        assert_eq!(w.export_unfinished().len(), 1, "the untouched root subtree");
+        w.step_batch(11);
+        // Park a multi-task response remainder in `pending` by hand: the
+        // drain must cover it, not just the active stepper.
+        w.pending.push_back(NodeIndex(vec![1, 1]));
+        let blobs = w.export_unfinished();
+        assert_eq!(blobs.len(), 2, "active subtree + one pending index");
+        // Non-destructive: the worker still holds its work.
+        assert!(w.has_work());
+        // Every exported blob restores to a runnable stepper.
+        let mut resumed_nodes = 0u64;
+        for blob in &blobs {
+            let mut s = Stepper::from_checkpoint(&p, blob).unwrap();
+            loop {
+                if let StepResult::Exhausted = s.step(COST_INF) {
+                    break;
+                }
+            }
+            resumed_nodes += s.stats.nodes;
+        }
+        // The exports cover at least everything the worker had left
+        // (at-least-once: the worker itself keeps running too).
+        let serial = crate::engine::serial::solve_serial(&p, u64::MAX);
+        assert!(resumed_nodes >= serial.stats.nodes - 11);
     }
 
     #[test]

@@ -346,6 +346,11 @@ impl CurrentIndex {
     /// Inverse of [`to_checkpoint`](Self::to_checkpoint).  Derived fields
     /// (`min_open`, `open_total`) are recomputed, so a checkpoint cannot
     /// carry an inconsistent cache.
+    ///
+    /// This is the durability boundary of `pbt serve` (journaled
+    /// checkpoints cross process restarts), so it is strict: truncation,
+    /// hostile lengths and trailing bytes are all rejected with `None`,
+    /// never a panic or an attacker-sized allocation.
     pub fn from_checkpoint(bytes: &[u8]) -> Option<Self> {
         let mut pos = 0usize;
         let mut load = || -> Option<Vec<u32>> {
@@ -354,7 +359,9 @@ impl CurrentIndex {
             }
             let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().ok()?) as usize;
             pos += 4;
-            if bytes.len() < pos + 4 * len {
+            // u64 math: a corrupt length must not overflow the bounds
+            // check (and is rejected before any allocation).
+            if (bytes.len() as u64) < pos as u64 + 4 * len as u64 {
                 return None;
             }
             let v = (0..len)
@@ -366,7 +373,7 @@ impl CurrentIndex {
         let root: Vec<u32> = load()?;
         let digits: Vec<u32> = load()?;
         let remaining: Vec<u32> = load()?;
-        if digits.len() != remaining.len() {
+        if digits.len() != remaining.len() || pos != bytes.len() {
             return None;
         }
         let root_len = root.len();
@@ -578,6 +585,15 @@ mod tests {
         assert_eq!(back.donatable(), ci.donatable());
         assert_eq!(back.heaviest_weight(), ci.heaviest_weight());
         assert!(CurrentIndex::from_checkpoint(&[0, 0]).is_none());
+        // Strictness: trailing bytes after a complete checkpoint are
+        // rejected (journal records carry exactly one checkpoint).
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(CurrentIndex::from_checkpoint(&padded).is_none());
+        // Every strict prefix is truncation.
+        for cut in 0..bytes.len() {
+            assert!(CurrentIndex::from_checkpoint(&bytes[..cut]).is_none(), "prefix {cut}");
+        }
     }
 
     #[test]

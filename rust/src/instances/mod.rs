@@ -10,3 +10,80 @@ pub mod suite;
 
 pub use dimacs::{parse_dimacs, parse_dimacs_file};
 pub use suite::{paper_suite_ds, paper_suite_vc, Instance};
+
+use crate::graph::Graph;
+use anyhow::{bail, Result};
+
+/// Resolve an instance *spec* to a graph.  One string names any input the
+/// framework can produce, so every surface (CLI `solve`/`cluster`, the
+/// `pbt serve` job protocol, config files) speaks the same language:
+///
+/// * a suite name — `phat1`, `phat2`, `frb`, `cell60` (VC families),
+///   `ds1`, `ds2` (DS families), sized by `scale` ∈ {0, 1, 2};
+/// * a DIMACS file path ending in `.clq`, `.mis` or `.col`;
+/// * a generator spec — `gnm:<n>:<m>:<seed>` (random G(n,m)) or
+///   `randds:<n>:<m>:<seed>` (the DS family generator).  Generators are
+///   seeded, so the same spec denotes identical bytes on every machine —
+///   which is what lets a solve job travel as a short string.
+pub fn resolve_spec(spec: &str, scale: usize) -> Result<Graph> {
+    let vc_idx = |i: usize| paper_suite_vc(scale).swap_remove(i).graph;
+    let ds_idx = |i: usize| paper_suite_ds(scale).swap_remove(i).graph;
+    Ok(match spec {
+        "phat1" => vc_idx(0),
+        "phat2" => vc_idx(1),
+        "frb" => vc_idx(2),
+        "cell60" => vc_idx(3),
+        "ds1" => ds_idx(0),
+        "ds2" => ds_idx(1),
+        path if path.ends_with(".clq") || path.ends_with(".mis") || path.ends_with(".col") => {
+            parse_dimacs_file(path)?
+        }
+        gen if gen.contains(':') => {
+            let parts: Vec<&str> = gen.split(':').collect();
+            let arg = |i: usize| -> Result<u64> {
+                parts.get(i).and_then(|s| s.parse().ok()).ok_or_else(|| {
+                    anyhow::anyhow!("bad generator spec {gen:?} (want name:n:m:seed)")
+                })
+            };
+            match parts[0] {
+                "gnm" if parts.len() == 4 => {
+                    generators::gnm(arg(1)? as usize, arg(2)? as usize, arg(3)?)
+                }
+                "randds" if parts.len() == 4 => {
+                    generators::random_ds(arg(1)? as usize, arg(2)? as usize, arg(3)?)
+                }
+                other => bail!("unknown generator {other:?} in spec {gen:?} (gnm|randds)"),
+            }
+        }
+        other => bail!(
+            "unknown instance {other:?} (try phat1/phat2/frb/cell60/ds1/ds2, a DIMACS \
+             .clq/.mis/.col path, or gnm:<n>:<m>:<seed>)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_spec_names_generators_and_errors() {
+        assert!(resolve_spec("phat1", 0).is_ok());
+        assert!(resolve_spec("ds2", 0).is_ok());
+        let g = resolve_spec("gnm:30:90:7", 0).unwrap();
+        assert_eq!(g.num_vertices(), 30);
+        assert!(resolve_spec("randds:20:60:3", 0).is_ok());
+        assert!(resolve_spec("nonsense", 0).is_err());
+        assert!(resolve_spec("gnm:30:90", 0).is_err(), "missing seed");
+        assert!(resolve_spec("gnm:a:b:c", 0).is_err(), "non-numeric");
+        assert!(resolve_spec("zzz:1:2:3", 0).is_err(), "unknown generator");
+    }
+
+    #[test]
+    fn resolve_spec_is_deterministic() {
+        let a = resolve_spec("gnm:24:70:9", 0).unwrap();
+        let b = resolve_spec("gnm:24:70:9", 1).unwrap(); // scale ignored for specs
+        assert_eq!(a.num_vertices(), b.num_vertices());
+        assert_eq!(a.num_edges(), b.num_edges());
+    }
+}

@@ -40,12 +40,16 @@
 //! | §VI | experiments: Tables I/II, Figs. 9/10, `T_S`/`T_R` | [`experiments`], [`metrics`], `benches/` |
 //! | §VI (measurement) | perf-gated benchmark suite, `BENCH_*.json` | [`bench`] (`pbt bench`, spec: `docs/BENCHMARKS.md`) |
 //! | §VII | join-leave, checkpointing, **multi-machine runs** | [`coordinator`] (`Worker::leave`), [`comm::tcp`], [`runner::cluster`] |
+//! | §VII (durability) | checkpointed **solve service**: job queue, journaled resume | [`server`] (`pbt serve`, spec: `docs/SERVER.md`) |
 //!
 //! Execution strategies, all driving the identical worker state machine:
 //! [`runner::solve`] (one OS thread per core over [`comm::local`]),
 //! [`runner::cluster`] (one process per core over [`comm::tcp`] —
 //! `pbt cluster` on the command line), and [`sim::simulate`] (thousands of
-//! virtual cores under discrete-event time).
+//! virtual cores under discrete-event time).  Long-lived workloads run
+//! under the [`server`] subsystem instead: `pbt serve` queues many jobs,
+//! executes them on per-job thread budgets, and journals every job's
+//! checkpoint frontier so a killed daemon resumes where it stopped.
 //!
 //! ## Quickstart
 //!
@@ -69,6 +73,7 @@ pub mod topology;
 pub mod comm;
 pub mod coordinator;
 pub mod runner;
+pub mod server;
 pub mod problems;
 pub mod baselines;
 pub mod sim;

@@ -10,7 +10,7 @@ use pbt::cli::{Args, USAGE};
 use pbt::config::PbtConfig;
 use pbt::engine::Problem;
 use pbt::graph::Graph;
-use pbt::instances::{self, paper_suite_ds, paper_suite_vc};
+use pbt::instances;
 use pbt::metrics::{ascii_chart, fig10_series, fig9_series, paper_table, speedups};
 use pbt::problems::{BoundKind, DominatingSet, NQueens, VertexCover};
 use pbt::runner::{self, RunConfig};
@@ -41,6 +41,17 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         "solve" => cmd_solve(args),
         "cluster" => cmd_cluster(args),
+        "serve" => cmd_serve(args),
+        "submit" => cmd_submit(args),
+        "status" => cmd_status(args),
+        "result" => cmd_result(args),
+        "cancel" => cmd_cancel(args),
+        "server-stats" => cmd_server_stats(args),
+        "shutdown-server" => cmd_shutdown_server(args),
+        "version" | "--version" | "-V" => {
+            println!("pbt {} (rev {})", pbt::server::VERSION, pbt::server::git_rev());
+            Ok(())
+        }
         "simulate" => cmd_simulate(args),
         "bench" => cmd_bench(args),
         "table1" => cmd_table(args, true),
@@ -54,22 +65,10 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-/// Resolve a named or file-based instance.
+/// Resolve a named, generated or file-based instance (one spec language
+/// for every surface — see [`instances::resolve_spec`]).
 fn load_instance(name: &str, scale: usize) -> Result<Graph> {
-    let vc = paper_suite_vc(scale);
-    let ds = paper_suite_ds(scale);
-    Ok(match name {
-        "phat1" => vc[0].graph.clone(),
-        "phat2" => vc[1].graph.clone(),
-        "frb" => vc[2].graph.clone(),
-        "cell60" => vc[3].graph.clone(),
-        "ds1" => ds[0].graph.clone(),
-        "ds2" => ds[1].graph.clone(),
-        path if path.ends_with(".clq") || path.ends_with(".mis") || path.ends_with(".col") => {
-            instances::parse_dimacs_file(path)?
-        }
-        other => bail!("unknown instance {other:?} (try phat1/phat2/frb/cell60/ds1/ds2 or a DIMACS file)"),
-    })
+    instances::resolve_spec(name, scale)
 }
 
 fn run_config(args: &Args) -> Result<(RunConfig, PbtConfig)> {
@@ -300,6 +299,172 @@ fn print_cluster_report<S>(r: &pbt::runner::cluster::ClusterReport<S>) {
             r.peers_lost(),
         );
     }
+}
+
+/// `pbt serve` — the durable multi-job solve daemon (docs/SERVER.md).
+///
+/// Prints exactly one line to stdout — `SERVING <addr>` — so scripts and
+/// tests can parse the bound address (port 0 = ephemeral); everything else
+/// goes to stderr.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let base = match args.get("config") {
+        Some(path) => PbtConfig::from_file(path)?,
+        None => PbtConfig::default(),
+    };
+    let mut opts = pbt::server::ServeOptions::from(&base.server);
+    if let Some(bind) = args.get("bind") {
+        opts.bind = bind.to_string();
+    }
+    if let Some(dir) = args.get("journal") {
+        opts.journal_dir = std::path::PathBuf::from(dir);
+    }
+    opts.max_active = args.get_usize("max-active", opts.max_active)?.max(1);
+    opts.default_workers = args.get_usize("workers", opts.default_workers)?.max(1);
+    opts.slice_nodes = flag_u32(args, "slice", opts.slice_nodes)?.max(1);
+    opts.checkpoint_ms = args.get_u64("checkpoint-ms", opts.checkpoint_ms)?.max(1);
+    eprintln!(
+        "== pbt serve v{} (rev {}): journal {}, {} active job slot(s)",
+        pbt::server::VERSION,
+        pbt::server::git_rev(),
+        opts.journal_dir.display(),
+        opts.max_active,
+    );
+    pbt::server::serve(opts, |addr| {
+        use std::io::Write;
+        println!("SERVING {addr}");
+        let _ = std::io::stdout().flush();
+    })
+}
+
+/// Connect to the daemon named by `--server` (or the `[server]` config),
+/// warning on crate-version skew.
+fn serve_client(args: &Args) -> Result<pbt::server::client::Client> {
+    let base = match args.get("config") {
+        Some(path) => PbtConfig::from_file(path)?,
+        None => PbtConfig::default(),
+    };
+    let addr = args.get_str("server", &base.server.connect);
+    let client = pbt::server::client::Client::connect(&addr)?;
+    if let Some(skew) = client.version_skew() {
+        eprintln!("warning: version skew: {skew}");
+    }
+    Ok(client)
+}
+
+/// A `u32`-ranged flag: rejects (rather than silently truncates) values
+/// over `u32::MAX` — `--pace-ms 4294967296` must error, not wrap to 0.
+fn flag_u32(args: &Args, key: &str, default: u32) -> Result<u32> {
+    let v = args.get_u64(key, default as u64)?;
+    u32::try_from(v).map_err(|_| anyhow::anyhow!("--{key} too large (max {})", u32::MAX))
+}
+
+/// Positional job id for status/result/cancel.
+fn job_id_arg(args: &Args) -> Result<u64> {
+    let id = args
+        .positionals
+        .first()
+        .context("expected a job id (e.g. `pbt status 1`)")?;
+    id.parse().map_err(|_| anyhow::anyhow!("job id must be an integer, got {id:?}"))
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let spec = pbt::server::proto::JobSpec {
+        problem: args.get_str("problem", "vc"),
+        instance: args.get_str("instance", "phat1"),
+        scale: flag_u32(args, "scale", 1)?,
+        bound: args.get_str("bound", "edges"),
+        workers: flag_u32(args, "workers", 0)?,
+        priority: flag_u32(args, "priority", 0)?,
+        slice: flag_u32(args, "slice", 0)?,
+        pace_ms: flag_u32(args, "pace-ms", 0)?,
+    };
+    let id = serve_client(args)?.submit(&spec)?;
+    println!("JOB {id}");
+    println!(
+        "submitted {} on {} (scale {}, workers {}, priority {})",
+        spec.problem,
+        spec.instance,
+        spec.scale,
+        if spec.workers == 0 { "server-default".into() } else { spec.workers.to_string() },
+        spec.priority,
+    );
+    Ok(())
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    let id = job_id_arg(args)?;
+    let s = serve_client(args)?.status(id)?;
+    println!(
+        "job {}: {}   nodes: {} (total {})   checkpoints: {}   best: {}{}{}",
+        s.id,
+        s.state,
+        s.nodes,
+        s.nodes_total,
+        s.checkpoints,
+        match s.best {
+            Some(b) => b.to_string(),
+            None => "-".into(),
+        },
+        if s.resumed { "   (resumed from journal)" } else { "" },
+        if s.error.is_empty() { String::new() } else { format!("   error: {}", s.error) },
+    );
+    Ok(())
+}
+
+fn cmd_result(args: &Args) -> Result<()> {
+    let id = job_id_arg(args)?;
+    let wait_ms = if args.get_bool("wait", false)? {
+        args.get_u64("timeout-ms", 600_000)?
+    } else {
+        args.get_u64("timeout-ms", 0)?
+    };
+    let r = serve_client(args)?.result(id, wait_ms)?;
+    if !r.state.is_terminal() {
+        bail!("job {id} is still {} (use --wait [--timeout-ms N])", r.state);
+    }
+    println!(
+        "job {}: {}   best cost: {:?}   |solution|: {}   nodes: {} (total {})   time: {}{}",
+        r.id,
+        r.state,
+        r.best,
+        r.solution.len(),
+        r.nodes,
+        r.nodes_total,
+        human_duration(r.wall_secs),
+        if r.resumed { "   (resumed from journal)" } else { "" },
+    );
+    if r.state == pbt::server::proto::JobState::Failed {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+fn cmd_cancel(args: &Args) -> Result<()> {
+    let id = job_id_arg(args)?;
+    serve_client(args)?.cancel(id)?;
+    println!("job {id} cancelled");
+    Ok(())
+}
+
+fn cmd_server_stats(args: &Args) -> Result<()> {
+    let s = serve_client(args)?.stats()?;
+    println!(
+        "pbt serve {} (rev {}, proto v{})   uptime: {}   active: {}   queued: {}",
+        s.version,
+        s.git_rev,
+        s.proto_version,
+        human_duration(s.uptime_secs),
+        s.active,
+        s.queued,
+    );
+    println!("{}", s.metrics.render_table().render());
+    Ok(())
+}
+
+fn cmd_shutdown_server(args: &Args) -> Result<()> {
+    serve_client(args)?.shutdown()?;
+    println!("daemon shutting down (jobs journaled for resume)");
+    Ok(())
 }
 
 /// `pbt bench` — run the deterministic perf suite, write

@@ -1,7 +1,63 @@
 //! Experiment metrics: speedup/efficiency math and the paper-style table
-//! rows (Tables I/II, Figures 9/10).
+//! rows (Tables I/II, Figures 9/10), plus the job-lifecycle counters of
+//! the `pbt serve` daemon ([`ServerMetrics`]).
 
 use crate::util::table::{thousands, Table};
+
+/// Job-lifecycle counters of one `pbt serve` daemon process, reported by
+/// `pbt server-stats` and reset on daemon restart (journals persist, these
+/// do not — they describe the running process, not the job history).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServerMetrics {
+    /// Jobs accepted over the protocol this run.
+    pub jobs_submitted: u64,
+    /// Jobs that reached `Done`.
+    pub jobs_completed: u64,
+    /// Jobs cancelled by request.
+    pub jobs_cancelled: u64,
+    /// Jobs that failed (bad spec, unsolvable instance file, ...).
+    pub jobs_failed: u64,
+    /// Unfinished jobs adopted from the journal at startup (§VII resume).
+    pub jobs_resumed: u64,
+    /// Frontier snapshots drained to the journal.
+    pub checkpoints_written: u64,
+    /// Bytes of checkpoint payload journaled (durability cost; compare
+    /// with `nodes_explored` for the paper's few-bytes-per-subtree claim).
+    pub checkpoint_bytes: u64,
+    /// Search nodes visited across all jobs this run.
+    pub nodes_explored: u64,
+}
+
+impl ServerMetrics {
+    pub fn merge(&mut self, o: &ServerMetrics) {
+        self.jobs_submitted += o.jobs_submitted;
+        self.jobs_completed += o.jobs_completed;
+        self.jobs_cancelled += o.jobs_cancelled;
+        self.jobs_failed += o.jobs_failed;
+        self.jobs_resumed += o.jobs_resumed;
+        self.checkpoints_written += o.checkpoints_written;
+        self.checkpoint_bytes += o.checkpoint_bytes;
+        self.nodes_explored += o.nodes_explored;
+    }
+
+    /// Two-column rendering for `pbt server-stats`.
+    pub fn render_table(&self) -> Table {
+        let mut t = Table::new(["Counter", "Value"]);
+        for (k, v) in [
+            ("jobs submitted", self.jobs_submitted),
+            ("jobs completed", self.jobs_completed),
+            ("jobs cancelled", self.jobs_cancelled),
+            ("jobs failed", self.jobs_failed),
+            ("jobs resumed", self.jobs_resumed),
+            ("checkpoints written", self.checkpoints_written),
+            ("checkpoint bytes", self.checkpoint_bytes),
+            ("nodes explored", self.nodes_explored),
+        ] {
+            t.row([k.to_string(), thousands(v)]);
+        }
+        t
+    }
+}
 
 /// One sweep row: a (instance, core-count) measurement.
 #[derive(Debug, Clone)]
@@ -207,6 +263,19 @@ mod tests {
         let chart = ascii_chart("fig9", &s, 10);
         assert!(chart.contains('*'));
         assert!(chart.lines().count() > 10);
+    }
+
+    #[test]
+    fn server_metrics_merge_and_render() {
+        let mut a = ServerMetrics { jobs_submitted: 2, nodes_explored: 100, ..Default::default() };
+        let b = ServerMetrics { jobs_submitted: 1, jobs_completed: 3, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.jobs_submitted, 3);
+        assert_eq!(a.jobs_completed, 3);
+        assert_eq!(a.nodes_explored, 100);
+        let s = a.render_table().render();
+        assert!(s.contains("jobs submitted"));
+        assert!(s.contains("nodes explored"));
     }
 
     #[test]

@@ -1,0 +1,125 @@
+//! Client for the `pbt serve` protocol — the machinery behind
+//! `pbt submit|status|result|cancel|server-stats` and the integration
+//! tests.
+//!
+//! Connections are one-shot (handshake, one request, one response), so a
+//! [`Client`] is consumed by its request method; connect again for the
+//! next call.  Cheap by design: the daemon holds no per-client state.
+
+use super::proto::{
+    self, Hello, JobOutcome, JobSpec, JobStatus, Request, Response, ServerStats, Welcome,
+};
+use super::{git_rev, VERSION};
+use anyhow::{bail, Context, Result};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// A connected, handshaken client.
+pub struct Client {
+    stream: TcpStream,
+    /// The daemon's self-description from the handshake.
+    pub server: Welcome,
+}
+
+impl Client {
+    /// Dial the daemon and complete the version handshake.
+    pub fn connect(addr: &str) -> Result<Client> {
+        let mut stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to pbt serve at {addr}"))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let hello = Hello { version: VERSION.into(), git_rev: git_rev() };
+        proto::write_msg(&mut stream, &hello.encode())?;
+        let bytes = proto::read_msg(&mut stream).context("reading WELCOME")?;
+        // The daemon answers ERR (not WELCOME) on magic/proto mismatch.
+        let server = match Welcome::decode(&bytes) {
+            Ok(w) => w,
+            Err(_) => match Response::decode(&bytes) {
+                Ok(Response::Err(msg)) => bail!("daemon refused handshake: {msg}"),
+                _ => bail!("daemon sent an invalid handshake"),
+            },
+        };
+        Ok(Client { stream, server })
+    }
+
+    /// Crate-version skew between this client and the daemon, if any
+    /// (protocol-version skew fails the handshake outright; crate skew is
+    /// survivable and merely worth a warning).
+    pub fn version_skew(&self) -> Option<String> {
+        (self.server.version != VERSION).then(|| {
+            format!(
+                "client is pbt {VERSION} (rev {}), daemon is pbt {} (rev {})",
+                git_rev(),
+                self.server.version,
+                self.server.git_rev
+            )
+        })
+    }
+
+    fn request(mut self, req: &Request) -> Result<Response> {
+        proto::write_msg(&mut self.stream, &req.encode())?;
+        let bytes = proto::read_msg(&mut self.stream).context("reading response")?;
+        Ok(Response::decode(&bytes)?)
+    }
+
+    /// Submit a job; returns its id.
+    pub fn submit(self, spec: &JobSpec) -> Result<u64> {
+        match self.request(&Request::Submit(spec.clone()))? {
+            Response::Submitted(id) => Ok(id),
+            Response::Err(msg) => bail!("submit refused: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Live status of one job.
+    pub fn status(self, id: u64) -> Result<JobStatus> {
+        match self.request(&Request::Status(id))? {
+            Response::Status(s) => Ok(s),
+            Response::Err(msg) => bail!("{msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Fetch a job's outcome; `wait_ms > 0` blocks (server-side) until the
+    /// job is terminal or the wait expires.  The returned outcome's
+    /// `state` says which happened.
+    pub fn result(mut self, id: u64, wait_ms: u64) -> Result<JobOutcome> {
+        // The server sits on the request up to wait_ms; keep reading after.
+        self.stream
+            .set_read_timeout(Some(Duration::from_millis(wait_ms) + Duration::from_secs(30)))?;
+        match self.request(&Request::Result { id, wait_ms })? {
+            Response::Result(r) => Ok(r),
+            Response::Err(msg) => bail!("{msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Cancel a job (idempotent; running jobs stop at their next slice
+    /// boundary).
+    pub fn cancel(self, id: u64) -> Result<()> {
+        match self.request(&Request::Cancel(id))? {
+            Response::Ok => Ok(()),
+            Response::Err(msg) => bail!("{msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Daemon metrics + queue counts.
+    pub fn stats(self) -> Result<ServerStats> {
+        match self.request(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            Response::Err(msg) => bail!("{msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Ask the daemon to shut down gracefully (running jobs drain a final
+    /// checkpoint and stay resumable).
+    pub fn shutdown(self) -> Result<()> {
+        match self.request(&Request::Shutdown)? {
+            Response::Ok => Ok(()),
+            Response::Err(msg) => bail!("{msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+}

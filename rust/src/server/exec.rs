@@ -1,0 +1,591 @@
+//! The per-job checkpointed executor: drives one solve job on a budget of
+//! OS threads, keeping the job's *entire* unfinished work expressible as a
+//! list of index checkpoints at every instant — the property that makes
+//! `pbt serve` durable (paper §VII: a subtree is a few bytes).
+//!
+//! ## Model
+//!
+//! A job's remaining work is a **frontier**: a set of subtree checkpoints
+//! ([`Stepper::checkpoint_bytes`] blobs).  Worker threads pull checkpoints
+//! from a shared queue, restore a [`Stepper`] ([`Stepper::from_checkpoint`]
+//! = the paper's `CONVERTINDEX` replay), and run it in bounded *slices* of
+//! node visits.  At every slice boundary a thread refreshes its *slot* — a
+//! snapshot of its running subtree — and, when peers are idle, donates
+//! heaviest-first subtrees ([`Stepper::donate`]) into the queue, so load
+//! balancing inside a job is the paper's donation scheme at slice
+//! granularity.
+//!
+//! ## The durability invariant
+//!
+//! At any instant, every unfinished subtree is covered by `queue ∪ slots`:
+//! a pop installs the popped blob as the thread's slot *in the same
+//! critical section*, and slot refreshes happen *before* the donations
+//! they exclude are pushed.  Slot snapshots are allowed to be **stale**
+//! (up to one slice old) — a stale checkpoint describes a superset of the
+//! remaining work, so a crash-resume re-explores at most a slice's worth
+//! of nodes per thread and loses nothing.  Resume is therefore
+//! *at-least-once* per node, exactly-once for everything older than the
+//! last drained snapshot.
+//!
+//! The periodic drain ([`ExecOptions::checkpoint_ms`]) serializes that
+//! cover — plus best-so-far cost and solution — through the caller's
+//! `on_checkpoint` hook (the daemon journals it; see `server::journal`).
+//!
+//! [`Stepper`]: crate::engine::Stepper
+//! [`Stepper::checkpoint_bytes`]: crate::engine::Stepper::checkpoint_bytes
+//! [`Stepper::from_checkpoint`]: crate::engine::Stepper::from_checkpoint
+//! [`Stepper::donate`]: crate::engine::Stepper::donate
+
+use super::journal::FrontierRecord;
+use crate::engine::{Problem, SearchState, StepResult, Stepper};
+use crate::index::{CurrentIndex, NodeIndex};
+use crate::util::Stopwatch;
+use crate::COST_INF;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Most subtrees one thread donates per slice boundary (enough to feed
+/// every realistic idle set without emptying the donor).
+const MAX_DONATE_PER_SLICE: usize = 4;
+
+/// Executor tunables (defaults come from `[server]` config, per-job
+/// overrides from the submit).
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOptions {
+    /// Worker-thread budget for this job.
+    pub workers: usize,
+    /// Node visits per slice (checkpoint staleness ceiling).
+    pub slice_nodes: u32,
+    /// Sleep per slice in milliseconds (pacing; 0 = full speed).
+    pub pace_ms: u64,
+    /// Interval between `on_checkpoint` drains.
+    pub checkpoint_ms: u64,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { workers: 2, slice_nodes: 10_000, pace_ms: 0, checkpoint_ms: 500 }
+    }
+}
+
+/// External stop requests, strongest wins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopKind {
+    /// Keep running.
+    None = 0,
+    /// Park: drain a final frontier and return (daemon shutdown — the job
+    /// stays resumable).
+    Pause = 1,
+    /// Cancel: drain and return; the caller records a terminal state.
+    Cancel = 2,
+}
+
+/// Shared stop flag, settable from any thread (the daemon's request
+/// handlers hold one per running job).
+#[derive(Default)]
+pub struct ExecControl {
+    stop: AtomicU8,
+}
+
+impl ExecControl {
+    pub fn request(&self, kind: StopKind) {
+        // Strongest request wins; Cancel must not be downgraded to Pause.
+        self.stop.fetch_max(kind as u8, Ordering::SeqCst);
+    }
+
+    fn current(&self) -> StopKind {
+        match self.stop.load(Ordering::SeqCst) {
+            0 => StopKind::None,
+            1 => StopKind::Pause,
+            _ => StopKind::Cancel,
+        }
+    }
+}
+
+/// What one executor run produced.
+#[derive(Debug, Clone)]
+pub struct ExecOutcome {
+    /// True iff the frontier emptied: the search is complete.
+    pub finished: bool,
+    /// The stop kind that ended the run (None when finished naturally).
+    pub stopped: StopKind,
+    pub best: Option<u64>,
+    pub solution: Vec<u32>,
+    /// Nodes explored by this run.
+    pub nodes: u64,
+    /// Nodes including the pre-resume count passed in.
+    pub nodes_total: u64,
+    /// Surviving frontier (empty iff `finished`).
+    pub frontier: Vec<Vec<u8>>,
+    pub wall_secs: f64,
+}
+
+/// All cross-thread state, one lock for the frontier so drains see a
+/// consistent cover (see module docs).
+struct Shared {
+    frontier: Mutex<Frontier>,
+    /// Mirror of the best cost for cheap per-step pruning reads.
+    best: AtomicU64,
+    /// Authoritative (cost, payload) pair.
+    sol: Mutex<(u64, Option<Vec<u32>>)>,
+    nodes: AtomicU64,
+    idle: AtomicUsize,
+    live_threads: AtomicUsize,
+}
+
+struct Frontier {
+    /// Checkpoints nobody is running.
+    queue: VecDeque<Vec<u8>>,
+    /// Per-thread snapshot of the subtree it is running (possibly one
+    /// slice stale — a superset of the truth, never less).
+    slots: Vec<Option<Vec<u8>>>,
+    /// Unfinished subtrees overall (queue + running).  0 = job complete.
+    live: u64,
+}
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    // A worker panic would poison the lock; the job is lost either way,
+    // so propagate the panic rather than limp on.
+    m.lock().expect("executor lock poisoned")
+}
+
+impl Shared {
+    fn record_best(&self, cost: u64, payload: Vec<u32>) {
+        self.best.fetch_min(cost, Ordering::SeqCst);
+        let mut sol = lock(&self.sol);
+        if cost < sol.0 {
+            *sol = (cost, Some(payload));
+        }
+    }
+
+    /// Consistent view of (nodes, best, solution, frontier cover).
+    fn snapshot(&self, nodes0: u64) -> FrontierRecord {
+        let f = lock(&self.frontier);
+        let mut frontier: Vec<Vec<u8>> = f.queue.iter().cloned().collect();
+        frontier.extend(f.slots.iter().flatten().cloned());
+        drop(f);
+        let sol = lock(&self.sol);
+        FrontierRecord {
+            nodes_total: nodes0 + self.nodes.load(Ordering::SeqCst),
+            best: sol.0,
+            solution: sol.1.clone().unwrap_or_default(),
+            frontier,
+        }
+    }
+}
+
+/// Checkpoint blob addressing the subtree rooted at `idx` (fresh, nothing
+/// explored below it yet) — how donated [`NodeIndex`]es enter the queue.
+fn index_checkpoint(idx: NodeIndex) -> Vec<u8> {
+    CurrentIndex::new(idx).to_checkpoint()
+}
+
+/// The root frontier of a brand-new job.
+pub fn root_frontier() -> Vec<Vec<u8>> {
+    vec![index_checkpoint(NodeIndex::root())]
+}
+
+/// Run one job until its frontier is empty or `control` says stop.
+///
+/// * `init` — the starting frontier (from [`root_frontier`] or a journal
+///   replay); corrupt blobs are dropped with a count, not a panic.
+/// * `best0`/`sol0` — incumbent carried across a resume (restored pruning
+///   power is most of what a checkpoint is worth).
+/// * `nodes0` — journaled node count from previous runs.
+/// * `on_checkpoint` — called every [`ExecOptions::checkpoint_ms`] with a
+///   consistent [`FrontierRecord`], and once more on pause/cancel.
+#[allow(clippy::too_many_arguments)]
+pub fn run<P, F>(
+    problem: &P,
+    init: Vec<Vec<u8>>,
+    best0: u64,
+    sol0: Option<Vec<u32>>,
+    nodes0: u64,
+    opts: &ExecOptions,
+    control: &ExecControl,
+    mut on_checkpoint: F,
+) -> ExecOutcome
+where
+    P: Problem,
+    P::State: SearchState<Sol = Vec<u32>>,
+    F: FnMut(&FrontierRecord),
+{
+    let sw = Stopwatch::new();
+    let workers = opts.workers.max(1);
+    let shared = Shared {
+        frontier: Mutex::new(Frontier {
+            live: init.len() as u64,
+            queue: init.into(),
+            slots: (0..workers).map(|_| None).collect(),
+        }),
+        best: AtomicU64::new(best0),
+        sol: Mutex::new((best0, sol0.filter(|s| !s.is_empty()))),
+        nodes: AtomicU64::new(0),
+        idle: AtomicUsize::new(0),
+        live_threads: AtomicUsize::new(workers),
+    };
+
+    std::thread::scope(|scope| {
+        for i in 0..workers {
+            let shared = &shared;
+            scope.spawn(move || {
+                worker_loop(problem, i, shared, opts, control);
+                shared.live_threads.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        // Checkpoint drain loop (the scheduler side of §VII: periodically
+        // serialize everything the workers hold).
+        let mut last_drain = Instant::now();
+        while shared.live_threads.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(opts.checkpoint_ms.clamp(5, 25)));
+            if last_drain.elapsed() >= Duration::from_millis(opts.checkpoint_ms) {
+                on_checkpoint(&shared.snapshot(nodes0));
+                last_drain = Instant::now();
+            }
+        }
+    });
+
+    let stopped = control.current();
+    let rec = shared.snapshot(nodes0);
+    let finished = rec.frontier.is_empty();
+    if !finished {
+        // Final drain so pause/cancel always leaves a fresh journal tail.
+        on_checkpoint(&rec);
+    }
+    let nodes = shared.nodes.load(Ordering::SeqCst);
+    ExecOutcome {
+        finished,
+        stopped,
+        best: (rec.best != COST_INF).then_some(rec.best),
+        solution: rec.solution,
+        nodes,
+        nodes_total: nodes0 + nodes,
+        frontier: rec.frontier,
+        wall_secs: sw.elapsed_secs(),
+    }
+}
+
+fn worker_loop<P>(
+    problem: &P,
+    me: usize,
+    shared: &Shared,
+    opts: &ExecOptions,
+    control: &ExecControl,
+) where
+    P: Problem,
+    P::State: SearchState<Sol = Vec<u32>>,
+{
+    loop {
+        if control.current() != StopKind::None {
+            return;
+        }
+        // Pop + install as our slot in one critical section, so the blob
+        // is never outside the frontier cover.
+        let blob = {
+            let mut f = lock(&shared.frontier);
+            match f.queue.pop_front() {
+                Some(b) => {
+                    f.slots[me] = Some(b.clone());
+                    Some(b)
+                }
+                None => {
+                    if f.live == 0 {
+                        return; // job complete
+                    }
+                    None
+                }
+            }
+        };
+        let Some(blob) = blob else {
+            // Out of queued work while peers still run: wait for a
+            // donation (or completion) at slice latency.
+            shared.idle.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(1));
+            shared.idle.fetch_sub(1, Ordering::SeqCst);
+            continue;
+        };
+        match Stepper::from_checkpoint(problem, &blob) {
+            Ok(mut stepper) => drive(&mut stepper, me, shared, opts, control),
+            Err(_) => {
+                // CRC-guarded journals make this unreachable in practice;
+                // a corrupt blob is dropped rather than wedging the job.
+                let mut f = lock(&shared.frontier);
+                f.slots[me] = None;
+                f.live -= 1;
+            }
+        }
+    }
+}
+
+/// Run one restored stepper to exhaustion (or stop), slice by slice.
+fn drive<P>(
+    stepper: &mut Stepper<P>,
+    me: usize,
+    shared: &Shared,
+    opts: &ExecOptions,
+    control: &ExecControl,
+) where
+    P: Problem,
+    P::State: SearchState<Sol = Vec<u32>>,
+{
+    let slice = opts.slice_nodes.max(1);
+    loop {
+        let mut visited = 0u32;
+        while visited < slice {
+            match stepper.step(shared.best.load(Ordering::Relaxed)) {
+                StepResult::Progress { improved } => {
+                    visited += 1;
+                    if let Some((cost, sol)) = improved {
+                        shared.record_best(cost, sol);
+                    }
+                }
+                StepResult::Exhausted => break,
+            }
+        }
+        shared.nodes.fetch_add(visited as u64, Ordering::SeqCst);
+        if stepper.is_exhausted() {
+            let mut f = lock(&shared.frontier);
+            f.slots[me] = None;
+            f.live -= 1;
+            return;
+        }
+        // Slice boundary: refresh our snapshot FIRST, then donate — the
+        // refreshed slot still contains every subtree donated below, so
+        // the frontier cover holds throughout (duplicates are safe,
+        // losses are not).
+        {
+            let mut f = lock(&shared.frontier);
+            f.slots[me] = Some(stepper.checkpoint_bytes());
+            let hungry = shared.idle.load(Ordering::SeqCst).min(MAX_DONATE_PER_SLICE);
+            let deficit = hungry.saturating_sub(f.queue.len());
+            for _ in 0..deficit {
+                match stepper.donate() {
+                    Some(idx) => {
+                        f.queue.push_back(index_checkpoint(idx));
+                        f.live += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        match control.current() {
+            StopKind::None => {}
+            _ => {
+                // Park: our (fresh) remaining work goes back to the queue.
+                let cp = stepper.checkpoint_bytes();
+                let mut f = lock(&shared.frontier);
+                f.slots[me] = None;
+                f.queue.push_back(cp);
+                return;
+            }
+        }
+        if opts.pace_ms > 0 {
+            // Chunked so a huge client-supplied pace cannot defer
+            // cancel/pause past ~25ms (one stray slice may still run
+            // before the boundary stop-check parks us — bounded, fine).
+            let until = Instant::now() + Duration::from_millis(opts.pace_ms);
+            while control.current() == StopKind::None {
+                let now = Instant::now();
+                if now >= until {
+                    break;
+                }
+                std::thread::sleep((until - now).min(Duration::from_millis(25)));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::serial::solve_serial;
+    use crate::engine::toy::ToyTree;
+    use crate::instances::generators;
+    use crate::problems::VertexCover;
+
+    // ToyTree's Sol is Vec<u32>, so it satisfies the executor bound.
+
+    fn opts(workers: usize) -> ExecOptions {
+        ExecOptions { workers, slice_nodes: 64, pace_ms: 0, checkpoint_ms: 5 }
+    }
+
+    fn run_plain<P>(problem: &P, workers: usize) -> ExecOutcome
+    where
+        P: Problem,
+        P::State: SearchState<Sol = Vec<u32>>,
+    {
+        run(
+            problem,
+            root_frontier(),
+            COST_INF,
+            None,
+            0,
+            &opts(workers),
+            &ExecControl::default(),
+            |_| {},
+        )
+    }
+
+    #[test]
+    fn single_worker_matches_serial_exactly() {
+        let p = ToyTree { height: 10 };
+        let serial = solve_serial(&p, u64::MAX);
+        let out = run_plain(&p, 1);
+        assert!(out.finished);
+        assert_eq!(out.best, serial.best_cost);
+        // One thread, no donation: node-for-node the serial DFS.
+        assert_eq!(out.nodes, serial.stats.nodes);
+        assert!(out.frontier.is_empty());
+    }
+
+    #[test]
+    fn multi_worker_matches_serial_optimum_on_vc() {
+        let g = generators::gnm(36, 160, 5);
+        let p = VertexCover::new(&g);
+        let serial = solve_serial(&p, u64::MAX);
+        for workers in [2, 4] {
+            let out = run_plain(&p, workers);
+            assert!(out.finished, "workers={workers}");
+            assert_eq!(out.best, serial.best_cost, "workers={workers}");
+            let sol = out.solution.clone();
+            assert_eq!(sol.len() as u64, out.best.unwrap());
+            assert!(g.is_vertex_cover(&sol), "payload is a real cover");
+            // Donation duplicates at most re-visit replayed prefixes;
+            // gross inflation would mean the frontier logic double-runs
+            // whole subtrees.
+            assert!(
+                out.nodes >= serial.stats.nodes && out.nodes <= serial.stats.nodes * 2,
+                "nodes {} vs serial {}",
+                out.nodes,
+                serial.stats.nodes
+            );
+        }
+    }
+
+    #[test]
+    fn pause_then_resume_completes_with_fewer_nodes() {
+        let p = ToyTree { height: 13 }; // 16383 nodes
+        let serial = solve_serial(&p, u64::MAX);
+        let control = ExecControl::default();
+        let o = ExecOptions { workers: 2, slice_nodes: 100, pace_ms: 1, checkpoint_ms: 2 };
+
+        // First run: pause once some progress exists (from a drain hook,
+        // which sees the node counter move).
+        let paused = std::thread::scope(|s| {
+            let ctl = &control;
+            let h = s.spawn(|| {
+                run(&p, root_frontier(), COST_INF, None, 0, &o, ctl, |rec| {
+                    if rec.nodes_total > 1200 {
+                        ctl.request(StopKind::Pause);
+                    }
+                })
+            });
+            h.join().unwrap()
+        });
+        assert!(!paused.finished);
+        assert_eq!(paused.stopped, StopKind::Pause);
+        assert!(!paused.frontier.is_empty(), "parked work survives");
+        assert!(paused.nodes > 1000);
+
+        // Second run: resume from the surviving frontier.
+        let resumed = run(
+            &p,
+            paused.frontier.clone(),
+            paused.best.unwrap_or(COST_INF),
+            Some(paused.solution.clone()),
+            paused.nodes,
+            &opts(2),
+            &ExecControl::default(),
+            |_| {},
+        );
+        assert!(resumed.finished);
+        assert_eq!(resumed.best, serial.best_cost);
+        // The acceptance property: resume explores strictly less than a
+        // from-scratch run (the checkpoints skip explored subtrees)...
+        assert!(
+            resumed.nodes < serial.stats.nodes,
+            "resumed {} vs scratch {}",
+            resumed.nodes,
+            serial.stats.nodes
+        );
+        // ...while together both runs cover at least the whole tree
+        // (at-least-once semantics; staleness only ever re-explores).
+        assert!(paused.nodes + resumed.nodes >= serial.stats.nodes);
+    }
+
+    #[test]
+    fn cancel_stops_quickly_and_reports_cancelled() {
+        let p = ToyTree { height: 16 };
+        let control = ExecControl::default();
+        let o = ExecOptions { workers: 2, slice_nodes: 50, pace_ms: 1, checkpoint_ms: 2 };
+        let out = std::thread::scope(|s| {
+            let ctl = &control;
+            s.spawn(|| {
+                run(&p, root_frontier(), COST_INF, None, 0, &o, ctl, |rec| {
+                    if rec.nodes_total > 500 {
+                        ctl.request(StopKind::Cancel);
+                    }
+                })
+            })
+            .join()
+            .unwrap()
+        });
+        assert!(!out.finished);
+        assert_eq!(out.stopped, StopKind::Cancel);
+        // Far from the 131071-node full tree.
+        assert!(out.nodes < 100_000);
+    }
+
+    #[test]
+    fn corrupt_frontier_blobs_are_dropped_not_fatal() {
+        let p = ToyTree { height: 6 };
+        let serial = solve_serial(&p, u64::MAX);
+        let mut init = root_frontier();
+        init.push(vec![0xFF; 7]); // rejected by CurrentIndex::from_checkpoint
+        init.push(vec![]); // rejected: empty
+        let out = run(
+            &p,
+            init,
+            COST_INF,
+            None,
+            0,
+            &opts(2),
+            &ExecControl::default(),
+            |_| {},
+        );
+        assert!(out.finished);
+        assert_eq!(out.best, serial.best_cost);
+    }
+
+    #[test]
+    fn checkpoint_hook_sees_consistent_covers() {
+        let p = ToyTree { height: 11 };
+        let serial = solve_serial(&p, u64::MAX);
+        let records = Mutex::new(Vec::new());
+        let o = ExecOptions { workers: 3, slice_nodes: 64, pace_ms: 1, checkpoint_ms: 1 };
+        let out = run(&p, root_frontier(), COST_INF, None, 0, &o, &ExecControl::default(), |r| {
+            records.lock().unwrap().push(r.clone());
+        });
+        assert!(out.finished);
+        assert_eq!(out.best, serial.best_cost);
+        // Every drained record's frontier must itself resume to completion
+        // with the right optimum (take the last non-empty one).
+        let recs = records.into_inner().unwrap();
+        if let Some(rec) = recs.iter().rev().find(|r| !r.frontier.is_empty()) {
+            let resumed = run(
+                &p,
+                rec.frontier.clone(),
+                rec.best,
+                Some(rec.solution.clone()),
+                rec.nodes_total,
+                &opts(2),
+                &ExecControl::default(),
+                |_| {},
+            );
+            assert!(resumed.finished);
+            assert_eq!(resumed.best, serial.best_cost);
+        }
+    }
+}

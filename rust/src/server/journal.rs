@@ -1,0 +1,573 @@
+//! The append-safe on-disk job journal (durability spec in
+//! `docs/SERVER.md`).
+//!
+//! One file per job (`job-<id>.pbtj`) in the daemon's journal directory.
+//! Records are appended, never rewritten:
+//!
+//! ```text
+//! [len u32 LE] [crc32 u32 LE] [type u8] [body ...]
+//! ```
+//!
+//! `len` covers type + body; `crc32` (IEEE) covers the same bytes.  Replay
+//! reads records until the file ends or a record fails its length or CRC
+//! check — a torn tail (daemon killed mid-append) or a bit-flipped record
+//! silently truncates the journal to its last good record instead of
+//! poisoning the job.  Combined with the strictness of
+//! [`CurrentIndex::from_checkpoint`](crate::index::CurrentIndex::from_checkpoint),
+//! no journal byte sequence can panic the daemon.
+//!
+//! Record types:
+//!
+//! * `SPEC` (0x01) — the [`JobSpec`] + priority seq, written once at
+//!   submit; a file without a valid SPEC is ignored wholesale.
+//! * `FRONTIER` (0x02) — a full snapshot of the job's unfinished work:
+//!   nodes-so-far, best cost + solution payload, and every outstanding
+//!   subtree checkpoint ([`Stepper::checkpoint_bytes`] blobs).  Each
+//!   FRONTIER *supersedes* all previous ones, so replay keeps only the
+//!   last valid snapshot — the journal is append-only but logically
+//!   last-writer-wins.
+//! * `DONE` (0x03) — terminal success: the [`JobOutcome`] fields.
+//! * `CANCELLED` (0x04) / `FAILED` (0x05) — terminal without a result.
+//!
+//! [`Stepper::checkpoint_bytes`]: crate::engine::Stepper::checkpoint_bytes
+
+use super::proto::JobSpec;
+use anyhow::{bail, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const REC_SPEC: u8 = 0x01;
+const REC_FRONTIER: u8 = 0x02;
+const REC_DONE: u8 = 0x03;
+const REC_CANCELLED: u8 = 0x04;
+const REC_FAILED: u8 = 0x05;
+
+/// Ceiling for one journal record (a frontier is at most a few checkpoints
+/// of a few hundred bytes each; anything larger is corruption).
+const MAX_RECORD_BYTES: usize = 64 * 1024 * 1024;
+
+/// Journal file name for a job id.
+pub fn job_file(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("job-{id}.pbtj"))
+}
+
+/// CRC-32 (IEEE 802.3, reflected).  Bitwise — journal records are small
+/// and written at checkpoint cadence, so table-free keeps this dependency-
+/// and unsafe-free.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = !0;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// --------------------------------------------------------------- records
+
+/// A full frontier snapshot: everything needed to resume the job.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FrontierRecord {
+    /// Nodes explored across all runs up to this snapshot.
+    pub nodes_total: u64,
+    /// Best cost so far (`u64::MAX` = none).
+    pub best: u64,
+    /// Solution payload for `best` (empty when none).
+    pub solution: Vec<u32>,
+    /// Outstanding subtree checkpoints (the unfinished work).
+    pub frontier: Vec<Vec<u8>>,
+}
+
+/// Terminal success record.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DoneRecord {
+    pub best: u64,
+    pub solution: Vec<u32>,
+    /// Nodes explored by the finishing run.
+    pub nodes: u64,
+    pub nodes_total: u64,
+    pub wall_secs: f64,
+}
+
+/// Everything replay recovers about one job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    pub id: u64,
+    pub spec: JobSpec,
+    /// Last valid frontier snapshot, if any checkpoint was ever drained.
+    pub frontier: Option<FrontierRecord>,
+    pub done: Option<DoneRecord>,
+    pub cancelled: bool,
+    /// Failure message when the job failed terminally.
+    pub failed: Option<String>,
+    /// File length up to the last valid record.  A SIGKILL can tear the
+    /// final append; before appending again the daemon truncates the file
+    /// here — otherwise records written after the torn bytes would be
+    /// unreachable on the *next* replay (which stops at the first bad
+    /// record).
+    pub valid_len: u64,
+}
+
+impl JobRecord {
+    pub fn is_terminal(&self) -> bool {
+        self.done.is_some() || self.cancelled || self.failed.is_some()
+    }
+}
+
+// The little-endian scalar primitives are crate-wide (`comm::wire`); the
+// journal layer speaks `Option` natively, so no adapters are needed.
+use crate::comm::wire::{
+    push_u32_le as push_u32, push_u64_le as push_u64, take_bytes as take,
+    take_u32_le as take_u32, take_u64_le as take_u64,
+};
+
+fn encode_solution(out: &mut Vec<u8>, sol: &[u32]) {
+    push_u32(out, sol.len() as u32);
+    for &v in sol {
+        push_u32(out, v);
+    }
+}
+
+fn decode_solution(b: &[u8], pos: &mut usize) -> Option<Vec<u32>> {
+    crate::comm::wire::take_u32_vec(b, pos)
+}
+
+fn encode_frontier(rec: &FrontierRecord) -> Vec<u8> {
+    let mut out = vec![REC_FRONTIER];
+    push_u64(&mut out, rec.nodes_total);
+    push_u64(&mut out, rec.best);
+    encode_solution(&mut out, &rec.solution);
+    push_u32(&mut out, rec.frontier.len() as u32);
+    for blob in &rec.frontier {
+        push_u32(&mut out, blob.len() as u32);
+        out.extend_from_slice(blob);
+    }
+    out
+}
+
+fn decode_frontier(body: &[u8]) -> Option<FrontierRecord> {
+    let mut pos = 0usize;
+    let nodes_total = take_u64(body, &mut pos)?;
+    let best = take_u64(body, &mut pos)?;
+    let solution = decode_solution(body, &mut pos)?;
+    let count = take_u32(body, &mut pos)? as usize;
+    let mut frontier = Vec::with_capacity(count.min(1024));
+    for _ in 0..count {
+        let len = take_u32(body, &mut pos)? as usize;
+        frontier.push(take(body, &mut pos, len)?.to_vec());
+    }
+    (pos == body.len()).then_some(FrontierRecord { nodes_total, best, solution, frontier })
+}
+
+fn encode_done(rec: &DoneRecord) -> Vec<u8> {
+    let mut out = vec![REC_DONE];
+    push_u64(&mut out, rec.best);
+    encode_solution(&mut out, &rec.solution);
+    push_u64(&mut out, rec.nodes);
+    push_u64(&mut out, rec.nodes_total);
+    push_u64(&mut out, rec.wall_secs.to_bits());
+    out
+}
+
+fn decode_done(body: &[u8]) -> Option<DoneRecord> {
+    let mut pos = 0usize;
+    let best = take_u64(body, &mut pos)?;
+    let solution = decode_solution(body, &mut pos)?;
+    let rec = DoneRecord {
+        best,
+        solution,
+        nodes: take_u64(body, &mut pos)?,
+        nodes_total: take_u64(body, &mut pos)?,
+        wall_secs: f64::from_bits(take_u64(body, &mut pos)?),
+    };
+    (pos == body.len()).then_some(rec)
+}
+
+// --------------------------------------------------------------- journal
+
+/// Append handle for one job's journal file.
+pub struct Journal {
+    file: File,
+    path: PathBuf,
+}
+
+impl Journal {
+    /// Create the journal for a fresh job and persist its SPEC record
+    /// (synced: a submit acknowledged over the wire must survive a crash).
+    pub fn create(dir: &Path, id: u64, spec: &JobSpec) -> Result<Journal> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating journal dir {}", dir.display()))?;
+        let path = job_file(dir, id);
+        let file = OpenOptions::new()
+            .create_new(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        let mut j = Journal { file, path };
+        let mut body = vec![REC_SPEC];
+        spec.encode_into(&mut body);
+        j.append(&body)?;
+        j.file.sync_data().context("syncing SPEC record")?;
+        Ok(j)
+    }
+
+    /// Reopen an existing journal for appending (daemon restart).
+    pub fn reopen(dir: &Path, id: u64) -> Result<Journal> {
+        let path = job_file(dir, id);
+        let file = OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("reopening journal {}", path.display()))?;
+        Ok(Journal { file, path })
+    }
+
+    /// Drop a torn tail left by a crash mid-append: truncate the file to
+    /// the replay's [`JobRecord::valid_len`].  Must run before the first
+    /// re-append — records written after torn bytes would be unreachable
+    /// on the next replay.
+    pub fn truncate_torn_tail(dir: &Path, rec: &JobRecord) -> Result<()> {
+        let path = job_file(dir, rec.id);
+        let actual = std::fs::metadata(&path)
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        if actual > rec.valid_len {
+            eprintln!(
+                "pbt serve: journal {}: dropping {} torn byte(s) after the last valid record",
+                path.display(),
+                actual - rec.valid_len
+            );
+            OpenOptions::new()
+                .write(true)
+                .open(&path)
+                .and_then(|f| f.set_len(rec.valid_len))
+                .with_context(|| format!("truncating {}", path.display()))?;
+        }
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn append(&mut self, payload: &[u8]) -> Result<()> {
+        let mut rec = Vec::with_capacity(8 + payload.len());
+        rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&crc32(payload).to_le_bytes());
+        rec.extend_from_slice(payload);
+        self.file
+            .write_all(&rec)
+            .with_context(|| format!("appending to {}", self.path.display()))?;
+        self.file.flush()?;
+        Ok(())
+    }
+
+    /// Drain one frontier snapshot.  Returns the record's on-disk size
+    /// (for the `checkpoint_bytes` metric).
+    pub fn append_frontier(&mut self, rec: &FrontierRecord) -> Result<u64> {
+        let body = encode_frontier(rec);
+        let size = 8 + body.len() as u64;
+        self.append(&body)?;
+        Ok(size)
+    }
+
+    /// Record terminal success (synced — a reported result must survive).
+    pub fn append_done(&mut self, rec: &DoneRecord) -> Result<()> {
+        self.append(&encode_done(rec))?;
+        self.file.sync_data().context("syncing DONE record")
+    }
+
+    /// Record terminal cancellation (synced).
+    pub fn append_cancelled(&mut self) -> Result<()> {
+        self.append(&[REC_CANCELLED])?;
+        self.file.sync_data().context("syncing CANCELLED record")
+    }
+
+    /// Record terminal failure (synced).
+    pub fn append_failed(&mut self, msg: &str) -> Result<()> {
+        let mut body = vec![REC_FAILED];
+        push_u32(&mut body, msg.len() as u32);
+        body.extend_from_slice(msg.as_bytes());
+        self.append(&body)?;
+        self.file.sync_data().context("syncing FAILED record")
+    }
+}
+
+/// Replay one journal file.  Stops cleanly at the first torn or corrupt
+/// record (everything before it is kept); errors only on I/O failures or
+/// a file with no valid SPEC.
+pub fn replay_file(path: &Path, id: u64) -> Result<JobRecord> {
+    let mut bytes = Vec::new();
+    File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut bytes))
+        .with_context(|| format!("reading journal {}", path.display()))?;
+
+    let mut pos = 0usize;
+    let mut spec: Option<JobSpec> = None;
+    let mut rec = JobRecord {
+        id,
+        spec: JobSpec::default(),
+        frontier: None,
+        done: None,
+        cancelled: false,
+        failed: None,
+        valid_len: 0,
+    };
+    loop {
+        rec.valid_len = pos as u64; // everything before this parsed cleanly
+        // Record header; anything short or inconsistent ends the replay.
+        let Some(len) = take_u32(&bytes, &mut pos) else { break };
+        let Some(crc) = take_u32(&bytes, &mut pos) else { break };
+        if len as usize > MAX_RECORD_BYTES {
+            break;
+        }
+        let Some(payload) = take(&bytes, &mut pos, len as usize) else { break };
+        if crc32(payload) != crc || payload.is_empty() {
+            break;
+        }
+        let body = &payload[1..];
+        match payload[0] {
+            REC_SPEC => {
+                let mut p = 0usize;
+                match JobSpec::decode_from(body, &mut p) {
+                    Ok(s) if p == body.len() && spec.is_none() => spec = Some(s),
+                    _ => break,
+                }
+            }
+            REC_FRONTIER => match decode_frontier(body) {
+                Some(f) => rec.frontier = Some(f),
+                None => break,
+            },
+            REC_DONE => match decode_done(body) {
+                Some(d) => rec.done = Some(d),
+                None => break,
+            },
+            REC_CANCELLED if body.is_empty() => rec.cancelled = true,
+            REC_FAILED => {
+                let mut p = 0usize;
+                match take_u32(body, &mut p)
+                    .and_then(|n| take(body, &mut p, n as usize))
+                    .and_then(|s| std::str::from_utf8(s).ok())
+                {
+                    Some(msg) if p == body.len() => rec.failed = Some(msg.to_string()),
+                    _ => break,
+                }
+            }
+            _ => break, // unknown record type: future format — stop here
+        }
+    }
+    match spec {
+        Some(s) => {
+            rec.spec = s;
+            Ok(rec)
+        }
+        None => bail!("journal {} has no valid SPEC record", path.display()),
+    }
+}
+
+/// Job id encoded in a journal file name, if it is one.
+fn job_id_of(name: &str) -> Option<u64> {
+    name.strip_prefix("job-").and_then(|s| s.strip_suffix(".pbtj")).and_then(|s| s.parse().ok())
+}
+
+/// Scan a journal directory: every parseable `job-<id>.pbtj` becomes a
+/// [`JobRecord`]; unreadable or spec-less files are skipped with a note to
+/// stderr (a bad file must not take the daemon down).
+pub fn replay_dir(dir: &Path) -> Result<Vec<JobRecord>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    for entry in std::fs::read_dir(dir).with_context(|| format!("scanning {}", dir.display()))? {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let Some(id) = job_id_of(name) else { continue };
+        match replay_file(&path, id) {
+            Ok(rec) => out.push(rec),
+            Err(e) => eprintln!("pbt serve: skipping journal {}: {e:#}", path.display()),
+        }
+    }
+    out.sort_by_key(|r| r.id);
+    Ok(out)
+}
+
+/// Highest job id any `job-<id>.pbtj` file name claims — parseable or
+/// not.  Fresh ids must clear even skipped-as-corrupt files, or a later
+/// submit would collide with their name (`create_new`) and fail
+/// spuriously.
+pub fn max_claimed_id(dir: &Path) -> u64 {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    entries
+        .flatten()
+        .filter_map(|e| e.file_name().to_str().and_then(job_id_of))
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "pbt-journal-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_frontier(n: u64) -> FrontierRecord {
+        FrontierRecord {
+            nodes_total: n,
+            best: 12,
+            solution: vec![1, 4, 7],
+            frontier: vec![vec![1, 2, 3], vec![9; 40]],
+        }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn journal_roundtrip_spec_frontier_done() {
+        let dir = tmp_dir("roundtrip");
+        let spec = JobSpec { instance: "gnm:30:90:7".into(), ..Default::default() };
+        let mut j = Journal::create(&dir, 3, &spec).unwrap();
+        j.append_frontier(&sample_frontier(100)).unwrap();
+        j.append_frontier(&sample_frontier(250)).unwrap();
+        let done = DoneRecord {
+            best: 9,
+            solution: vec![2, 3],
+            nodes: 500,
+            nodes_total: 750,
+            wall_secs: 0.5,
+        };
+        j.append_done(&done).unwrap();
+
+        let rec = replay_file(&job_file(&dir, 3), 3).unwrap();
+        assert_eq!(rec.spec, spec);
+        // Last frontier wins.
+        assert_eq!(rec.frontier, Some(sample_frontier(250)));
+        assert_eq!(rec.done, Some(done));
+        assert!(rec.is_terminal());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_keeps_last_good_record() {
+        let dir = tmp_dir("torn");
+        let spec = JobSpec::default();
+        let mut j = Journal::create(&dir, 1, &spec).unwrap();
+        j.append_frontier(&sample_frontier(100)).unwrap();
+        let good_len = std::fs::metadata(job_file(&dir, 1)).unwrap().len();
+        j.append_frontier(&sample_frontier(999)).unwrap();
+        drop(j);
+
+        // Tear the last record at every possible byte boundary: replay must
+        // keep the first frontier and never error or panic.
+        let full = std::fs::read(job_file(&dir, 1)).unwrap();
+        for cut in good_len as usize..full.len() {
+            std::fs::write(job_file(&dir, 1), &full[..cut]).unwrap();
+            let rec = replay_file(&job_file(&dir, 1), 1).unwrap();
+            assert_eq!(rec.frontier, Some(sample_frontier(100)), "cut {cut}");
+            assert!(!rec.is_terminal());
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bit_flip_truncates_at_the_flipped_record() {
+        let dir = tmp_dir("flip");
+        let mut j = Journal::create(&dir, 2, &JobSpec::default()).unwrap();
+        j.append_frontier(&sample_frontier(100)).unwrap();
+        let first_two = std::fs::metadata(job_file(&dir, 2)).unwrap().len() as usize;
+        j.append_frontier(&sample_frontier(200)).unwrap();
+        drop(j);
+        let mut bytes = std::fs::read(job_file(&dir, 2)).unwrap();
+        // Flip one bit inside the second frontier's payload: its CRC fails,
+        // replay keeps the first.
+        let idx = first_two + 12;
+        bytes[idx] ^= 0x40;
+        std::fs::write(job_file(&dir, 2), &bytes).unwrap();
+        let rec = replay_file(&job_file(&dir, 2), 2).unwrap();
+        assert_eq!(rec.frontier, Some(sample_frontier(100)));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncate_torn_tail_makes_reappends_reachable() {
+        let dir = tmp_dir("truncate");
+        let mut j = Journal::create(&dir, 4, &JobSpec::default()).unwrap();
+        j.append_frontier(&sample_frontier(100)).unwrap();
+        drop(j);
+        // Simulate a SIGKILL mid-append: half a record at the tail.
+        let mut bytes = std::fs::read(job_file(&dir, 4)).unwrap();
+        let intact = bytes.len() as u64;
+        bytes.extend_from_slice(&[0x55; 9]);
+        std::fs::write(job_file(&dir, 4), &bytes).unwrap();
+
+        let rec = replay_file(&job_file(&dir, 4), 4).unwrap();
+        assert_eq!(rec.valid_len, intact, "torn tail excluded from the valid span");
+        Journal::truncate_torn_tail(&dir, &rec).unwrap();
+        assert_eq!(std::fs::metadata(job_file(&dir, 4)).unwrap().len(), intact);
+
+        // Appends after the truncation are visible to the next replay —
+        // without the truncation this DONE record would be unreachable.
+        let mut j = Journal::reopen(&dir, 4).unwrap();
+        let done =
+            DoneRecord { best: 3, solution: vec![1], nodes: 10, nodes_total: 110, wall_secs: 0.1 };
+        j.append_done(&done).unwrap();
+        drop(j);
+        let rec = replay_file(&job_file(&dir, 4), 4).unwrap();
+        assert_eq!(rec.done, Some(done));
+        assert_eq!(rec.frontier, Some(sample_frontier(100)));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn replay_dir_skips_garbage_and_sorts() {
+        let dir = tmp_dir("scan");
+        Journal::create(&dir, 10, &JobSpec::default()).unwrap();
+        Journal::create(&dir, 2, &JobSpec::default()).unwrap();
+        std::fs::write(dir.join("job-99.pbtj"), b"not a journal").unwrap();
+        std::fs::write(dir.join("README.txt"), b"ignore me").unwrap();
+        let recs = replay_dir(&dir).unwrap();
+        assert_eq!(recs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 10]);
+        // Unparseable files still pin their id: fresh submits must not
+        // collide with job-99.pbtj's name.
+        assert_eq!(max_claimed_id(&dir), 99);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cancelled_and_failed_are_terminal() {
+        let dir = tmp_dir("terminal");
+        let mut j = Journal::create(&dir, 5, &JobSpec::default()).unwrap();
+        j.append_cancelled().unwrap();
+        let rec = replay_file(&job_file(&dir, 5), 5).unwrap();
+        assert!(rec.cancelled && rec.is_terminal());
+
+        let mut j = Journal::create(&dir, 6, &JobSpec::default()).unwrap();
+        j.append_failed("bad instance").unwrap();
+        let rec = replay_file(&job_file(&dir, 6), 6).unwrap();
+        assert_eq!(rec.failed.as_deref(), Some("bad instance"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn create_refuses_duplicate_ids() {
+        let dir = tmp_dir("dup");
+        Journal::create(&dir, 1, &JobSpec::default()).unwrap();
+        assert!(Journal::create(&dir, 1, &JobSpec::default()).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

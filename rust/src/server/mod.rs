@@ -1,0 +1,776 @@
+//! `pbt serve` — the durable multi-job solve service (spec:
+//! `docs/SERVER.md`).
+//!
+//! The paper's §VII observation — an indexed search tree makes a worker's
+//! whole unfinished workload a few-byte checkpoint — is what makes a
+//! *service* cheap to build on this engine: the daemon accepts solve jobs
+//! over TCP ([`proto`]), multiplexes them onto per-job thread budgets
+//! ([`exec`]), and drains every job's frontier to an append-safe journal
+//! ([`journal`]) on a timer.  A killed or restarted daemon pointed at the
+//! same journal directory resumes every in-flight job from its last
+//! checkpoint instead of recomputing — `Stepper::from_checkpoint` is the
+//! entire recovery story.
+//!
+//! Semi-centralized by design (after Pastrana-Cruz et al.,
+//! arXiv:2305.09117): job bookkeeping — queue, priorities, journals,
+//! lifecycle — is centralized in the daemon, while the search itself stays
+//! decentralized donation-based work sharing inside each job's executor.
+//!
+//! Layering:
+//!
+//! * [`proto`] — versioned length-framed client protocol (`PBTS`).
+//! * [`journal`] — CRC-guarded append-only job journals.
+//! * [`exec`] — the checkpointed slice executor (one per running job).
+//! * [`client`] — the client used by `pbt submit|status|result|cancel|
+//!   server-stats`.
+//! * this module — the daemon: scheduler, lifecycle, request handlers.
+
+pub mod client;
+pub mod exec;
+pub mod journal;
+pub mod proto;
+
+use crate::config::ServerConfig;
+use crate::instances;
+use crate::metrics::ServerMetrics;
+use crate::problems::{BoundKind, DominatingSet, VertexCover};
+use crate::{Cost, COST_INF};
+use anyhow::{bail, Context, Result};
+use exec::{ExecControl, ExecOptions, StopKind};
+use journal::{DoneRecord, FrontierRecord, Journal};
+use proto::{JobOutcome, JobSpec, JobState, JobStatus, Request, Response, ServerStats};
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Crate version, stamped into the handshake and `pbt version`.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Best-effort git revision (shared with the bench subsystem's report
+/// stamping; `unknown` outside a checkout).  Cached: the handshake sends
+/// it on every connection, and shelling out to `git` per status poll
+/// would dominate the request cost.
+pub fn git_rev() -> String {
+    static REV: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    REV.get_or_init(crate::bench::git_rev).clone()
+}
+
+/// Daemon options (the `[server]` config section plus CLI overrides).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub bind: String,
+    pub journal_dir: PathBuf,
+    /// Jobs running concurrently; others wait in the priority queue.
+    pub max_active: usize,
+    /// Worker budget for submits that do not name one.
+    pub default_workers: usize,
+    /// Default executor slice (checkpoint granularity).
+    pub slice_nodes: u32,
+    /// Journal drain interval per running job.
+    pub checkpoint_ms: u64,
+}
+
+impl From<&ServerConfig> for ServeOptions {
+    fn from(c: &ServerConfig) -> Self {
+        ServeOptions {
+            bind: c.bind.clone(),
+            journal_dir: PathBuf::from(&c.journal_dir),
+            max_active: c.max_active.max(1),
+            default_workers: c.workers.max(1),
+            slice_nodes: c.slice_nodes.max(1),
+            checkpoint_ms: c.checkpoint_ms.max(1),
+        }
+    }
+}
+
+/// Live progress counters, shared between a job's runner and the status
+/// handler (updated at checkpoint cadence).
+struct Progress {
+    /// Nodes explored by this daemon process.
+    nodes: AtomicU64,
+    /// Including journaled progress from before the last restart.
+    nodes_total: AtomicU64,
+    /// Frontier drains journaled for this job.
+    checkpoints: AtomicU64,
+    /// Best-so-far cost mirror (`COST_INF` = none).
+    best: AtomicU64,
+}
+
+impl Default for Progress {
+    fn default() -> Self {
+        // Hand-written so `best` starts at the "no incumbent" sentinel —
+        // a derived all-zeros default would read as "cost 0 found".
+        Progress {
+            nodes: AtomicU64::new(0),
+            nodes_total: AtomicU64::new(0),
+            checkpoints: AtomicU64::new(0),
+            best: AtomicU64::new(COST_INF),
+        }
+    }
+}
+
+/// One job as the daemon tracks it.
+struct JobEntry {
+    spec: JobSpec,
+    state: JobState,
+    /// Adopted from the journal at startup.
+    resumed: bool,
+    /// Resume payload for queued jobs (`None` = start at the root).
+    resume: Option<FrontierRecord>,
+    progress: Arc<Progress>,
+    /// Stop lever, present while running.
+    control: Option<Arc<ExecControl>>,
+    /// Terminal outcome, present once done/cancelled/failed.
+    outcome: Option<JobOutcome>,
+    error: String,
+}
+
+impl JobEntry {
+    fn status(&self, id: u64) -> JobStatus {
+        let best = self.progress.best.load(Ordering::SeqCst);
+        JobStatus {
+            id,
+            state: self.state,
+            priority: self.spec.priority,
+            workers: self.spec.workers,
+            resumed: self.resumed,
+            nodes: self.progress.nodes.load(Ordering::SeqCst),
+            nodes_total: self.progress.nodes_total.load(Ordering::SeqCst),
+            checkpoints: self.progress.checkpoints.load(Ordering::SeqCst),
+            best: (best != COST_INF).then_some(best),
+            error: self.error.clone(),
+        }
+    }
+
+    /// The outcome to report right now: the terminal one, or a snapshot of
+    /// the current state (for an expired bounded wait).
+    fn outcome_now(&self, id: u64) -> JobOutcome {
+        self.outcome.clone().unwrap_or_else(|| {
+            let best = self.progress.best.load(Ordering::SeqCst);
+            JobOutcome {
+                id,
+                state: self.state,
+                best: (best != COST_INF).then_some(best),
+                solution: Vec::new(),
+                nodes: self.progress.nodes.load(Ordering::SeqCst),
+                nodes_total: self.progress.nodes_total.load(Ordering::SeqCst),
+                wall_secs: 0.0,
+                resumed: self.resumed,
+            }
+        })
+    }
+}
+
+/// Shared daemon state.
+struct ServerState {
+    opts: ServeOptions,
+    jobs: Mutex<BTreeMap<u64, JobEntry>>,
+    next_id: AtomicU64,
+    metrics: Mutex<ServerMetrics>,
+    active: AtomicUsize,
+    shutdown: AtomicBool,
+    started: Instant,
+}
+
+/// Run the daemon until a `Shutdown` request arrives.  `on_bound` receives
+/// the actually-bound address (resolving port 0) before the first accept —
+/// callers print the `SERVING <addr>` line from it.
+pub fn serve(opts: ServeOptions, on_bound: impl FnOnce(&str)) -> Result<()> {
+    std::fs::create_dir_all(&opts.journal_dir)
+        .with_context(|| format!("creating journal dir {}", opts.journal_dir.display()))?;
+
+    let state = Arc::new(ServerState {
+        jobs: Mutex::new(BTreeMap::new()),
+        next_id: AtomicU64::new(1),
+        metrics: Mutex::new(ServerMetrics::default()),
+        active: AtomicUsize::new(0),
+        shutdown: AtomicBool::new(false),
+        started: Instant::now(),
+        opts,
+    });
+    adopt_journals(&state)?;
+
+    let listener =
+        bind_with_retry(&state.opts.bind).with_context(|| format!("binding {}", state.opts.bind))?;
+    listener.set_nonblocking(true)?;
+    on_bound(&listener.local_addr()?.to_string());
+
+    while !state.shutdown.load(Ordering::SeqCst) {
+        schedule(&state);
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let state = Arc::clone(&state);
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_connection(&state, stream) {
+                        // Protocol garbage or a dropped client; the daemon
+                        // carries on.
+                        eprintln!("pbt serve: connection error: {e:#}");
+                    }
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accepting client"),
+        }
+    }
+
+    // Graceful drain: park every running job (each drains a final frontier
+    // to its journal, so a restart resumes them), then exit.
+    {
+        let jobs = state.jobs.lock().expect("jobs lock");
+        for entry in jobs.values() {
+            if let Some(ctl) = &entry.control {
+                ctl.request(StopKind::Pause);
+            }
+        }
+    }
+    while state.active.load(Ordering::SeqCst) > 0 {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    eprintln!("pbt serve: shut down cleanly (journals in {})", state.opts.journal_dir.display());
+    Ok(())
+}
+
+/// Bind the daemon socket, absorbing transient `EADDRINUSE` for a few
+/// seconds.  std's `TcpListener` cannot set `SO_REUSEADDR`, so lingering
+/// TIME_WAIT sockets from a just-killed daemon on a fixed port would
+/// otherwise make the advertised kill-and-restart flow flaky.
+fn bind_with_retry(addr: &str) -> std::io::Result<TcpListener> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match TcpListener::bind(addr) {
+            Err(e)
+                if e.kind() == std::io::ErrorKind::AddrInUse && Instant::now() < deadline =>
+            {
+                std::thread::sleep(Duration::from_millis(250));
+            }
+            other => return other,
+        }
+    }
+}
+
+/// Rebuild the job table from the journal directory (daemon restart).
+fn adopt_journals(state: &Arc<ServerState>) -> Result<()> {
+    let records = journal::replay_dir(&state.opts.journal_dir)?;
+    let mut max_id = 0u64;
+    let mut jobs = state.jobs.lock().expect("jobs lock");
+    let mut resumed_count = 0u64;
+    for rec in records {
+        max_id = max_id.max(rec.id);
+        let mut entry = JobEntry {
+            spec: rec.spec.clone(),
+            state: JobState::Queued,
+            resumed: true,
+            resume: None,
+            progress: Arc::new(Progress::default()),
+            control: None,
+            outcome: None,
+            error: String::new(),
+        };
+        if let Some(done) = &rec.done {
+            entry.state = JobState::Done;
+            entry.progress.nodes_total.store(done.nodes_total, Ordering::SeqCst);
+            entry.progress.best.store(done.best, Ordering::SeqCst);
+            entry.outcome = Some(JobOutcome {
+                id: rec.id,
+                state: JobState::Done,
+                best: (done.best != COST_INF).then_some(done.best),
+                solution: done.solution.clone(),
+                nodes: done.nodes,
+                nodes_total: done.nodes_total,
+                wall_secs: done.wall_secs,
+                resumed: true,
+            });
+        } else if rec.cancelled {
+            entry.state = JobState::Cancelled;
+            entry.outcome = Some(JobOutcome {
+                id: rec.id,
+                state: JobState::Cancelled,
+                best: None,
+                solution: Vec::new(),
+                nodes: 0,
+                nodes_total: rec.frontier.as_ref().map_or(0, |f| f.nodes_total),
+                wall_secs: 0.0,
+                resumed: true,
+            });
+        } else if let Some(msg) = &rec.failed {
+            entry.state = JobState::Failed;
+            entry.error = msg.clone();
+            entry.outcome = Some(JobOutcome {
+                id: rec.id,
+                state: JobState::Failed,
+                best: None,
+                solution: Vec::new(),
+                nodes: 0,
+                nodes_total: 0,
+                wall_secs: 0.0,
+                resumed: true,
+            });
+        } else {
+            // Unfinished: this journal will be appended to again — drop
+            // any torn tail the crash left first, or the new records
+            // would be unreachable on the next replay.
+            if let Err(e) = Journal::truncate_torn_tail(&state.opts.journal_dir, &rec) {
+                eprintln!("pbt serve: job {}: {e:#}", rec.id);
+            }
+            // Queue it for resume from its last checkpoint.
+            if let Some(f) = &rec.frontier {
+                entry.progress.nodes_total.store(f.nodes_total, Ordering::SeqCst);
+                entry.progress.best.store(f.best, Ordering::SeqCst);
+            }
+            entry.resume = rec.frontier;
+            resumed_count += 1;
+            eprintln!(
+                "pbt serve: resuming job {} ({} {}) from its journal",
+                rec.id, rec.spec.problem, rec.spec.instance
+            );
+        }
+        jobs.insert(rec.id, entry);
+    }
+    drop(jobs);
+    // Clear every id any journal FILE claims, even ones replay skipped as
+    // corrupt — a fresh submit must never collide with a leftover name.
+    max_id = max_id.max(journal::max_claimed_id(&state.opts.journal_dir));
+    state.next_id.store(max_id + 1, Ordering::SeqCst);
+    state.metrics.lock().expect("metrics lock").jobs_resumed += resumed_count;
+    Ok(())
+}
+
+/// Start queued jobs while scheduler slots are free: highest priority
+/// first, FIFO (lowest id) within a priority.
+fn schedule(state: &Arc<ServerState>) {
+    while state.active.load(Ordering::SeqCst) < state.opts.max_active {
+        let Some(id) = next_runnable(state) else { return };
+        let (spec, resume, progress, control) = {
+            let mut jobs = state.jobs.lock().expect("jobs lock");
+            let entry = jobs.get_mut(&id).expect("picked job exists");
+            if entry.state != JobState::Queued {
+                continue; // cancelled between the pick and this lock
+            }
+            entry.state = JobState::Running;
+            let control = Arc::new(ExecControl::default());
+            entry.control = Some(Arc::clone(&control));
+            (entry.spec.clone(), entry.resume.take(), Arc::clone(&entry.progress), control)
+        };
+        state.active.fetch_add(1, Ordering::SeqCst);
+        let state = Arc::clone(state);
+        std::thread::spawn(move || {
+            // The slot MUST come back even if the job path panics (a
+            // poisoned executor lock, a Problem-impl bug): a leaked slot
+            // would starve the scheduler and wedge graceful shutdown's
+            // active==0 wait.
+            struct SlotGuard<'a>(&'a AtomicUsize);
+            impl Drop for SlotGuard<'_> {
+                fn drop(&mut self) {
+                    self.0.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            let _slot = SlotGuard(&state.active);
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_job(&state, id, spec, resume, progress, control);
+            }));
+            if run.is_err() {
+                fail_job(&state, id, "job runner panicked (see stderr)".into(), None);
+            }
+        });
+    }
+}
+
+fn next_runnable(state: &Arc<ServerState>) -> Option<u64> {
+    let jobs = state.jobs.lock().expect("jobs lock");
+    jobs.iter()
+        .filter(|(_, e)| e.state == JobState::Queued)
+        .max_by_key(|(id, e)| (e.spec.priority, std::cmp::Reverse(**id)))
+        .map(|(id, _)| *id)
+}
+
+/// The runner thread of one job: journal drains while the executor works,
+/// then the terminal record.
+fn run_job(
+    state: &Arc<ServerState>,
+    id: u64,
+    spec: JobSpec,
+    resume: Option<FrontierRecord>,
+    progress: Arc<Progress>,
+    control: Arc<ExecControl>,
+) {
+    let mut jrn = match Journal::reopen(&state.opts.journal_dir, id) {
+        Ok(j) => j,
+        Err(e) => {
+            fail_job(state, id, format!("journal unavailable: {e:#}"), None);
+            return;
+        }
+    };
+    let eopts = ExecOptions {
+        workers: if spec.workers == 0 {
+            state.opts.default_workers
+        } else {
+            spec.workers as usize
+        },
+        slice_nodes: if spec.slice == 0 { state.opts.slice_nodes } else { spec.slice },
+        pace_ms: spec.pace_ms as u64,
+        checkpoint_ms: state.opts.checkpoint_ms,
+    };
+    let (init, best0, sol0, nodes0) = match resume {
+        Some(f) => {
+            let sol = (!f.solution.is_empty()).then_some(f.solution);
+            (f.frontier, f.best, sol, f.nodes_total)
+        }
+        None => (exec::root_frontier(), COST_INF, None, 0),
+    };
+
+    let outcome = {
+        let on_checkpoint = |rec: &FrontierRecord| {
+            match jrn.append_frontier(rec) {
+                Ok(bytes) => {
+                    progress.checkpoints.fetch_add(1, Ordering::SeqCst);
+                    let mut m = state.metrics.lock().expect("metrics lock");
+                    m.checkpoints_written += 1;
+                    m.checkpoint_bytes += bytes;
+                }
+                Err(e) => eprintln!("pbt serve: job {id}: journal drain failed: {e:#}"),
+            }
+            progress.nodes_total.store(rec.nodes_total, Ordering::SeqCst);
+            progress.nodes.store(rec.nodes_total - nodes0, Ordering::SeqCst);
+            progress.best.store(rec.best, Ordering::SeqCst);
+        };
+        match run_problem(&spec, init, best0, sol0, nodes0, &eopts, &control, on_checkpoint) {
+            Ok(out) => out,
+            Err(e) => {
+                fail_job(state, id, format!("{e:#}"), Some(&mut jrn));
+                return;
+            }
+        }
+    };
+
+    // Final progress mirror (the last slice may postdate the last drain).
+    progress.nodes.store(outcome.nodes, Ordering::SeqCst);
+    progress.nodes_total.store(outcome.nodes_total, Ordering::SeqCst);
+    if let Some(b) = outcome.best {
+        progress.best.store(b, Ordering::SeqCst);
+    }
+
+    let mut jobs = state.jobs.lock().expect("jobs lock");
+    let entry = jobs.get_mut(&id).expect("running job exists");
+    entry.control = None;
+    let mut metrics = state.metrics.lock().expect("metrics lock");
+    metrics.nodes_explored += outcome.nodes;
+    if outcome.finished {
+        let done = DoneRecord {
+            best: outcome.best.unwrap_or(COST_INF),
+            solution: outcome.solution.clone(),
+            nodes: outcome.nodes,
+            nodes_total: outcome.nodes_total,
+            wall_secs: outcome.wall_secs,
+        };
+        if let Err(e) = jrn.append_done(&done) {
+            eprintln!("pbt serve: job {id}: DONE record failed: {e:#}");
+        }
+        entry.state = JobState::Done;
+        entry.outcome = Some(JobOutcome {
+            id,
+            state: JobState::Done,
+            best: outcome.best,
+            solution: outcome.solution,
+            nodes: outcome.nodes,
+            nodes_total: outcome.nodes_total,
+            wall_secs: outcome.wall_secs,
+            resumed: entry.resumed,
+        });
+        metrics.jobs_completed += 1;
+        eprintln!(
+            "pbt serve: job {id} done: best {:?}, {} nodes ({} total)",
+            entry.outcome.as_ref().unwrap().best,
+            outcome.nodes,
+            outcome.nodes_total
+        );
+    } else if outcome.stopped == StopKind::Cancel {
+        if let Err(e) = jrn.append_cancelled() {
+            eprintln!("pbt serve: job {id}: CANCELLED record failed: {e:#}");
+        }
+        entry.state = JobState::Cancelled;
+        entry.outcome = Some(JobOutcome {
+            id,
+            state: JobState::Cancelled,
+            best: outcome.best,
+            solution: outcome.solution,
+            nodes: outcome.nodes,
+            nodes_total: outcome.nodes_total,
+            wall_secs: outcome.wall_secs,
+            resumed: entry.resumed,
+        });
+        metrics.jobs_cancelled += 1;
+    } else {
+        // Paused (daemon shutdown): back to the queue, resumable — the
+        // executor's final drain already journaled the frontier.
+        entry.state = JobState::Queued;
+        entry.resume = Some(FrontierRecord {
+            nodes_total: outcome.nodes_total,
+            best: outcome.best.unwrap_or(COST_INF),
+            solution: outcome.solution,
+            frontier: outcome.frontier,
+        });
+    }
+}
+
+/// Instantiate the problem named by the spec and run the executor on it.
+/// Monomorphic dispatch: each problem family gets its own executor
+/// instantiation over the same generic engine.
+#[allow(clippy::too_many_arguments)]
+fn run_problem<F>(
+    spec: &JobSpec,
+    init: Vec<Vec<u8>>,
+    best0: Cost,
+    sol0: Option<Vec<u32>>,
+    nodes0: u64,
+    eopts: &ExecOptions,
+    control: &ExecControl,
+    on_checkpoint: F,
+) -> Result<exec::ExecOutcome>
+where
+    F: FnMut(&FrontierRecord),
+{
+    let g = instances::resolve_spec(&spec.instance, spec.scale as usize)?;
+    match spec.problem.as_str() {
+        "vc" => {
+            let bound = match spec.bound.as_str() {
+                "none" => BoundKind::None,
+                "matching" => BoundKind::Matching,
+                _ => BoundKind::EdgesOverMaxDeg,
+            };
+            let p = VertexCover::with_bound(&g, bound);
+            Ok(exec::run(&p, init, best0, sol0, nodes0, eopts, control, on_checkpoint))
+        }
+        "ds" => {
+            let p = DominatingSet::new(&g);
+            Ok(exec::run(&p, init, best0, sol0, nodes0, eopts, control, on_checkpoint))
+        }
+        other => bail!("unknown problem {other:?} (serve supports vc|ds)"),
+    }
+}
+
+fn fail_job(state: &Arc<ServerState>, id: u64, msg: String, jrn: Option<&mut Journal>) {
+    eprintln!("pbt serve: job {id} failed: {msg}");
+    if let Some(jrn) = jrn {
+        if let Err(e) = jrn.append_failed(&msg) {
+            eprintln!("pbt serve: job {id}: FAILED record failed: {e:#}");
+        }
+    }
+    let mut jobs = state.jobs.lock().expect("jobs lock");
+    if let Some(entry) = jobs.get_mut(&id) {
+        entry.state = JobState::Failed;
+        entry.control = None;
+        entry.error = msg;
+        entry.outcome = Some(JobOutcome {
+            id,
+            state: JobState::Failed,
+            best: None,
+            solution: Vec::new(),
+            nodes: 0,
+            nodes_total: 0,
+            wall_secs: 0.0,
+            resumed: entry.resumed,
+        });
+    }
+    state.metrics.lock().expect("metrics lock").jobs_failed += 1;
+}
+
+// ------------------------------------------------------------- handlers
+
+/// After the last response, wait (bounded) for the client to close its
+/// end first.  The side that closes first eats the TIME_WAIT state; if
+/// that were the daemon, a fixed-port restart inside the TIME_WAIT window
+/// could hit `EADDRINUSE` (std offers no `SO_REUSEADDR`).  Clients drop
+/// their socket immediately after decoding, so this normally returns in
+/// microseconds.
+fn linger_for_client_close(stream: &mut TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let deadline = Instant::now() + Duration::from_secs(2);
+    let mut scratch = [0u8; 64];
+    loop {
+        match std::io::Read::read(stream, &mut scratch) {
+            Ok(0) | Err(_) => return, // EOF (clean) or timeout/reset
+            Ok(_) => {
+                // Stray bytes: drain, but never past the overall bound (a
+                // trickling client must not pin the handler thread).
+                if Instant::now() >= deadline {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn handle_connection(state: &Arc<ServerState>, mut stream: TcpStream) -> Result<()> {
+    // BSD-family accept() inherits O_NONBLOCK from the (nonblocking)
+    // listener; the frame reads below assume a blocking socket.
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+
+    // Handshake: a non-pbt client is answered with ERR and dropped.
+    let hello_bytes = proto::read_msg(&mut stream)?;
+    if proto::Hello::decode(&hello_bytes).is_err() {
+        let rsp = Response::Err("not a pbt serve client (magic/proto mismatch)".into());
+        let _ = proto::write_msg(&mut stream, &rsp.encode());
+        linger_for_client_close(&mut stream);
+        return Ok(());
+    }
+    let welcome = proto::Welcome {
+        version: VERSION.into(),
+        git_rev: git_rev(),
+        proto_version: proto::PROTO_VERSION,
+    };
+    proto::write_msg(&mut stream, &welcome.encode())?;
+
+    let req = match Request::decode(&proto::read_msg(&mut stream)?) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = proto::write_msg(&mut stream, &Response::Err(e.to_string()).encode());
+            linger_for_client_close(&mut stream);
+            return Ok(());
+        }
+    };
+    let rsp = match req {
+        Request::Submit(spec) => handle_submit(state, spec),
+        Request::Status(id) => with_job(state, id, |id, e| Response::Status(e.status(id))),
+        Request::Result { id, wait_ms } => handle_result(state, id, wait_ms),
+        Request::Cancel(id) => handle_cancel(state, id),
+        Request::Stats => handle_stats(state),
+        Request::Shutdown => {
+            // Acknowledge BEFORE raising the flag: once the main loop sees
+            // it, the process may exit faster than an unflushed response
+            // reaches the client.
+            proto::write_msg(&mut stream, &Response::Ok.encode())?;
+            stream.flush()?;
+            linger_for_client_close(&mut stream);
+            state.shutdown.store(true, Ordering::SeqCst);
+            return Ok(());
+        }
+    };
+    proto::write_msg(&mut stream, &rsp.encode())?;
+    stream.flush()?;
+    linger_for_client_close(&mut stream);
+    Ok(())
+}
+
+fn with_job(
+    state: &Arc<ServerState>,
+    id: u64,
+    f: impl FnOnce(u64, &JobEntry) -> Response,
+) -> Response {
+    let jobs = state.jobs.lock().expect("jobs lock");
+    match jobs.get(&id) {
+        Some(entry) => f(id, entry),
+        None => Response::Err(format!("no such job {id}")),
+    }
+}
+
+fn handle_submit(state: &Arc<ServerState>, spec: JobSpec) -> Response {
+    if !matches!(spec.problem.as_str(), "vc" | "ds") {
+        return Response::Err(format!("unknown problem {:?} (serve supports vc|ds)", spec.problem));
+    }
+    let id = state.next_id.fetch_add(1, Ordering::SeqCst);
+    // SPEC is journaled (and synced) before the id is acknowledged: an
+    // accepted job survives any crash from here on.
+    if let Err(e) = Journal::create(&state.opts.journal_dir, id, &spec) {
+        return Response::Err(format!("journal create failed: {e:#}"));
+    }
+    let entry = JobEntry {
+        spec,
+        state: JobState::Queued,
+        resumed: false,
+        resume: None,
+        progress: Arc::new(Progress::default()),
+        control: None,
+        outcome: None,
+        error: String::new(),
+    };
+    state.jobs.lock().expect("jobs lock").insert(id, entry);
+    state.metrics.lock().expect("metrics lock").jobs_submitted += 1;
+    Response::Submitted(id)
+}
+
+/// Ceiling on one `RESULT` request's server-side wait.  Bounds how long a
+/// handler thread can be parked by one connection (and keeps the
+/// `Instant + Duration` arithmetic below panic-free on every platform for
+/// hostile `wait_ms` values).
+const MAX_RESULT_WAIT_MS: u64 = 3_600_000;
+
+fn handle_result(state: &Arc<ServerState>, id: u64, wait_ms: u64) -> Response {
+    let deadline = Instant::now() + Duration::from_millis(wait_ms.min(MAX_RESULT_WAIT_MS));
+    loop {
+        let (terminal, rsp) = {
+            let jobs = state.jobs.lock().expect("jobs lock");
+            match jobs.get(&id) {
+                None => return Response::Err(format!("no such job {id}")),
+                Some(e) => (e.state.is_terminal(), Response::Result(e.outcome_now(id))),
+            }
+        };
+        if terminal || Instant::now() >= deadline {
+            return rsp;
+        }
+        std::thread::sleep(Duration::from_millis(15));
+    }
+}
+
+fn handle_cancel(state: &Arc<ServerState>, id: u64) -> Response {
+    let mut jobs = state.jobs.lock().expect("jobs lock");
+    let Some(entry) = jobs.get_mut(&id) else {
+        return Response::Err(format!("no such job {id}"));
+    };
+    match entry.state {
+        JobState::Running => {
+            if let Some(ctl) = &entry.control {
+                ctl.request(StopKind::Cancel);
+            }
+            // The runner thread journals CANCELLED and flips the state.
+            Response::Ok
+        }
+        JobState::Queued => {
+            entry.state = JobState::Cancelled;
+            entry.outcome = Some(JobOutcome {
+                id,
+                state: JobState::Cancelled,
+                best: None,
+                solution: Vec::new(),
+                nodes: 0,
+                nodes_total: entry.progress.nodes_total.load(Ordering::SeqCst),
+                wall_secs: 0.0,
+                resumed: entry.resumed,
+            });
+            drop(jobs);
+            match Journal::reopen(&state.opts.journal_dir, id)
+                .and_then(|mut j| j.append_cancelled())
+            {
+                Ok(()) => {}
+                Err(e) => eprintln!("pbt serve: job {id}: CANCELLED record failed: {e:#}"),
+            }
+            state.metrics.lock().expect("metrics lock").jobs_cancelled += 1;
+            Response::Ok
+        }
+        // Terminal already: cancel is idempotent.
+        _ => Response::Ok,
+    }
+}
+
+fn handle_stats(state: &Arc<ServerState>) -> Response {
+    let jobs = state.jobs.lock().expect("jobs lock");
+    let queued = jobs.values().filter(|e| e.state == JobState::Queued).count() as u32;
+    let active = jobs.values().filter(|e| e.state == JobState::Running).count() as u32;
+    drop(jobs);
+    Response::Stats(ServerStats {
+        version: VERSION.into(),
+        git_rev: git_rev(),
+        proto_version: proto::PROTO_VERSION,
+        uptime_secs: state.started.elapsed().as_secs_f64(),
+        active,
+        queued,
+        metrics: *state.metrics.lock().expect("metrics lock"),
+    })
+}

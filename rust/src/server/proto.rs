@@ -1,0 +1,765 @@
+//! Client/daemon wire protocol of the solve service (`pbt serve`).
+//!
+//! Byte-level spec in `docs/SERVER.md`; this module is its executable
+//! form.  The conventions are those of [`crate::comm::wire`]: every
+//! message is one length-prefixed frame ([`wire::write_blob_frame`] /
+//! [`wire::read_blob_frame`]), all integers little-endian, every variant a
+//! tag byte plus fixed fields, strict decoding (truncation, unknown tags
+//! and trailing bytes are errors, never panics).
+//!
+//! A connection carries exactly one exchange:
+//!
+//! 1. client sends [`Hello`] (magic `PBTS`, protocol version, crate
+//!    version, git rev) — the version skew detector of `pbt version`;
+//! 2. daemon answers [`Welcome`] (its own version triple);
+//! 3. client sends one [`Request`], daemon answers one [`Response`], both
+//!    sides close.
+//!
+//! One-shot connections keep the daemon trivially robust to half-dead
+//! clients: there is no per-connection session state to reap.
+
+use crate::comm::wire;
+use crate::metrics::ServerMetrics;
+use std::io::{Read, Write};
+
+/// Protocol magic in every `HELLO` ("PBTS": pbt serve).
+pub const MAGIC: &[u8; 4] = b"PBTS";
+
+/// Bumped on incompatible frame-layout changes; a daemon refuses a client
+/// speaking a different protocol version (crate-version skew is only a
+/// warning, layout skew is not survivable).
+pub const PROTO_VERSION: u32 = 1;
+
+/// Ceiling for one protocol frame (a result payload is one `u32` per
+/// solution vertex — far below this; anything larger is not a pbt peer).
+pub const MAX_SERVE_FRAME: usize = 4 * 1024 * 1024;
+
+const TAG_HELLO: u8 = 0x20;
+const TAG_WELCOME: u8 = 0x21;
+const TAG_SUBMIT: u8 = 0x22;
+const TAG_SUBMITTED: u8 = 0x23;
+const TAG_STATUS: u8 = 0x24;
+const TAG_STATUS_R: u8 = 0x25;
+const TAG_RESULT: u8 = 0x26;
+const TAG_RESULT_R: u8 = 0x27;
+const TAG_CANCEL: u8 = 0x28;
+const TAG_OK: u8 = 0x29;
+const TAG_STATS: u8 = 0x2A;
+const TAG_STATS_R: u8 = 0x2B;
+const TAG_SHUTDOWN: u8 = 0x2C;
+const TAG_ERR: u8 = 0x2F;
+
+/// Decode failure: the payload does not describe a valid protocol message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Payload ended before the fields it promised.
+    Truncated,
+    /// Unknown message tag byte.
+    BadTag(u8),
+    /// Wrong magic or protocol version in a `HELLO`.
+    BadMagic,
+    /// Unknown job-state byte.
+    BadState(u8),
+    /// A string field was not UTF-8.
+    BadString,
+    /// Bytes remained after the last field.
+    TrailingBytes(usize),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Truncated => write!(f, "payload truncated"),
+            ProtoError::BadTag(t) => write!(f, "unknown serve tag {t:#04x}"),
+            ProtoError::BadMagic => write!(f, "not a pbt serve peer (bad magic/version)"),
+            ProtoError::BadState(s) => write!(f, "unknown job-state byte {s}"),
+            ProtoError::BadString => write!(f, "non-utf8 string field"),
+            ProtoError::TrailingBytes(n) => write!(f, "{n} trailing bytes after message"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl From<ProtoError> for std::io::Error {
+    fn from(e: ProtoError) -> Self {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+    }
+}
+
+// ---------------------------------------------------------------- scalars
+// Thin ProtoError adapters over the crate-wide little-endian primitives in
+// `comm::wire` — the bounds-check discipline lives there, once.
+
+use crate::comm::wire::{push_u32_le as push_u32, push_u64_le as push_u64};
+
+fn push_str(out: &mut Vec<u8>, s: &str) {
+    push_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn take<'a>(b: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], ProtoError> {
+    wire::take_bytes(b, pos, n).ok_or(ProtoError::Truncated)
+}
+
+fn take_u8(b: &[u8], pos: &mut usize) -> Result<u8, ProtoError> {
+    Ok(take(b, pos, 1)?[0])
+}
+
+fn take_u32(b: &[u8], pos: &mut usize) -> Result<u32, ProtoError> {
+    wire::take_u32_le(b, pos).ok_or(ProtoError::Truncated)
+}
+
+fn take_u64(b: &[u8], pos: &mut usize) -> Result<u64, ProtoError> {
+    wire::take_u64_le(b, pos).ok_or(ProtoError::Truncated)
+}
+
+fn take_str(b: &[u8], pos: &mut usize) -> Result<String, ProtoError> {
+    let len = take_u32(b, pos)? as usize;
+    let s = take(b, pos, len)?;
+    std::str::from_utf8(s).map(str::to_string).map_err(|_| ProtoError::BadString)
+}
+
+fn push_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(v as u8);
+}
+
+fn take_bool(b: &[u8], pos: &mut usize) -> Result<bool, ProtoError> {
+    match take_u8(b, pos)? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => Err(ProtoError::BadState(other)),
+    }
+}
+
+fn done(b: &[u8], pos: usize) -> Result<(), ProtoError> {
+    if pos == b.len() {
+        Ok(())
+    } else {
+        Err(ProtoError::TrailingBytes(b.len() - pos))
+    }
+}
+
+// ------------------------------------------------------------------ model
+
+/// Everything a solve job is: a short, machine-portable description.  The
+/// instance travels as a [`crate::instances::resolve_spec`] string, so a
+/// job record is a few dozen bytes — the service-level analogue of the
+/// paper's "a task is its index".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    /// Problem family: `vc` | `ds`.
+    pub problem: String,
+    /// Instance spec (suite name, DIMACS path, or generator spec).
+    pub instance: String,
+    /// Suite scale for named instances.
+    pub scale: u32,
+    /// VC bound: `none` | `edges` | `matching` (ignored for `ds`).
+    pub bound: String,
+    /// Per-job worker budget (threads while running); 0 = server default.
+    pub workers: u32,
+    /// Scheduling priority: higher runs sooner; FIFO within a priority.
+    pub priority: u32,
+    /// Node visits per executor slice (checkpoint granularity); 0 =
+    /// server default.
+    pub slice: u32,
+    /// Sleep per slice in milliseconds (pacing for fair-sharing and
+    /// crash-resume tests); 0 = full speed.
+    pub pace_ms: u32,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            problem: "vc".into(),
+            instance: "phat1".into(),
+            scale: 1,
+            bound: "edges".into(),
+            workers: 0,
+            priority: 0,
+            slice: 0,
+            pace_ms: 0,
+        }
+    }
+}
+
+impl JobSpec {
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        push_str(out, &self.problem);
+        push_str(out, &self.instance);
+        push_u32(out, self.scale);
+        push_str(out, &self.bound);
+        push_u32(out, self.workers);
+        push_u32(out, self.priority);
+        push_u32(out, self.slice);
+        push_u32(out, self.pace_ms);
+    }
+
+    pub fn decode_from(b: &[u8], pos: &mut usize) -> Result<JobSpec, ProtoError> {
+        Ok(JobSpec {
+            problem: take_str(b, pos)?,
+            instance: take_str(b, pos)?,
+            scale: take_u32(b, pos)?,
+            bound: take_str(b, pos)?,
+            workers: take_u32(b, pos)?,
+            priority: take_u32(b, pos)?,
+            slice: take_u32(b, pos)?,
+            pace_ms: take_u32(b, pos)?,
+        })
+    }
+}
+
+/// Job lifecycle states (journal + protocol byte values are identical).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting for a scheduler slot (includes resumed-not-yet-restarted).
+    Queued = 0,
+    Running = 1,
+    Done = 2,
+    Cancelled = 3,
+    Failed = 4,
+}
+
+impl JobState {
+    pub fn as_byte(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_byte(b: u8) -> Result<JobState, ProtoError> {
+        Ok(match b {
+            0 => JobState::Queued,
+            1 => JobState::Running,
+            2 => JobState::Done,
+            3 => JobState::Cancelled,
+            4 => JobState::Failed,
+            other => return Err(ProtoError::BadState(other)),
+        })
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Cancelled | JobState::Failed)
+    }
+}
+
+impl std::fmt::Display for JobState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Cancelled => "cancelled",
+            JobState::Failed => "failed",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Live view of one job (`pbt status`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobStatus {
+    pub id: u64,
+    pub state: JobState,
+    pub priority: u32,
+    pub workers: u32,
+    /// True when the job was adopted from the journal at daemon startup.
+    pub resumed: bool,
+    /// Nodes explored by the current daemon process.
+    pub nodes: u64,
+    /// Nodes including journaled progress from before the last restart.
+    pub nodes_total: u64,
+    /// Frontier snapshots drained to the journal so far.
+    pub checkpoints: u64,
+    /// Best-so-far cost, if any solution has been seen.
+    pub best: Option<u64>,
+    /// Failure message (non-empty iff `state == Failed`).
+    pub error: String,
+}
+
+/// Terminal outcome of one job (`pbt result`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobOutcome {
+    pub id: u64,
+    /// Terminal state — or the current state when a bounded wait expired.
+    pub state: JobState,
+    pub best: Option<u64>,
+    /// Solution payload (vertex/set ids); empty when none was found.
+    pub solution: Vec<u32>,
+    /// Nodes explored by the run that finished the job.
+    pub nodes: u64,
+    /// Nodes including journaled pre-restart progress.
+    pub nodes_total: u64,
+    /// Wall seconds of the finishing run.
+    pub wall_secs: f64,
+    pub resumed: bool,
+}
+
+/// Daemon self-description + counters (`pbt server-stats`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerStats {
+    pub version: String,
+    pub git_rev: String,
+    pub proto_version: u32,
+    pub uptime_secs: f64,
+    pub active: u32,
+    pub queued: u32,
+    pub metrics: ServerMetrics,
+}
+
+/// Handshake opener (client → daemon).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    /// Client crate version (`CARGO_PKG_VERSION`).
+    pub version: String,
+    /// Client git revision (best effort, `unknown` outside a checkout).
+    pub git_rev: String,
+}
+
+/// Handshake answer (daemon → client).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Welcome {
+    pub version: String,
+    pub git_rev: String,
+    pub proto_version: u32,
+}
+
+/// One client request (exactly one per connection, after the handshake).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Submit(JobSpec),
+    Status(u64),
+    /// Fetch a job's outcome; `wait_ms > 0` blocks until the job is
+    /// terminal or the wait expires (the daemon answers with the current
+    /// state either way).
+    Result { id: u64, wait_ms: u64 },
+    Cancel(u64),
+    Stats,
+    /// Graceful stop: every running job drains a final checkpoint to its
+    /// journal and the daemon exits; a restart resumes them.
+    Shutdown,
+}
+
+/// One daemon response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Submitted(u64),
+    Status(JobStatus),
+    Result(JobOutcome),
+    /// Acknowledges `Cancel` and `Shutdown`.
+    Ok,
+    Stats(ServerStats),
+    Err(String),
+}
+
+// ------------------------------------------------------------------ codec
+
+impl Hello {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = vec![TAG_HELLO];
+        out.extend_from_slice(MAGIC);
+        push_u32(&mut out, PROTO_VERSION);
+        push_str(&mut out, &self.version);
+        push_str(&mut out, &self.git_rev);
+        out
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Hello, ProtoError> {
+        let mut pos = 0usize;
+        if take_u8(b, &mut pos)? != TAG_HELLO {
+            return Err(ProtoError::BadMagic);
+        }
+        if take(b, &mut pos, 4)? != MAGIC || take_u32(b, &mut pos)? != PROTO_VERSION {
+            return Err(ProtoError::BadMagic);
+        }
+        let h = Hello { version: take_str(b, &mut pos)?, git_rev: take_str(b, &mut pos)? };
+        done(b, pos)?;
+        Ok(h)
+    }
+}
+
+impl Welcome {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = vec![TAG_WELCOME];
+        push_u32(&mut out, self.proto_version);
+        push_str(&mut out, &self.version);
+        push_str(&mut out, &self.git_rev);
+        out
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Welcome, ProtoError> {
+        let mut pos = 0usize;
+        if take_u8(b, &mut pos)? != TAG_WELCOME {
+            return Err(ProtoError::BadMagic);
+        }
+        let proto_version = take_u32(b, &mut pos)?;
+        let w = Welcome {
+            proto_version,
+            version: take_str(b, &mut pos)?,
+            git_rev: take_str(b, &mut pos)?,
+        };
+        done(b, pos)?;
+        Ok(w)
+    }
+}
+
+/// `Option<Cost>` travels as a bare u64 with `u64::MAX` = none (the
+/// engine's own `COST_INF` sentinel).
+fn push_cost(out: &mut Vec<u8>, c: Option<u64>) {
+    push_u64(out, c.unwrap_or(u64::MAX));
+}
+
+fn take_cost(b: &[u8], pos: &mut usize) -> Result<Option<u64>, ProtoError> {
+    let v = take_u64(b, pos)?;
+    Ok((v != u64::MAX).then_some(v))
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Request::Submit(spec) => {
+                out.push(TAG_SUBMIT);
+                spec.encode_into(&mut out);
+            }
+            Request::Status(id) => {
+                out.push(TAG_STATUS);
+                push_u64(&mut out, *id);
+            }
+            Request::Result { id, wait_ms } => {
+                out.push(TAG_RESULT);
+                push_u64(&mut out, *id);
+                push_u64(&mut out, *wait_ms);
+            }
+            Request::Cancel(id) => {
+                out.push(TAG_CANCEL);
+                push_u64(&mut out, *id);
+            }
+            Request::Stats => out.push(TAG_STATS),
+            Request::Shutdown => out.push(TAG_SHUTDOWN),
+        }
+        out
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Request, ProtoError> {
+        let mut pos = 0usize;
+        let tag = take_u8(b, &mut pos)?;
+        let req = match tag {
+            TAG_SUBMIT => Request::Submit(JobSpec::decode_from(b, &mut pos)?),
+            TAG_STATUS => Request::Status(take_u64(b, &mut pos)?),
+            TAG_RESULT => {
+                Request::Result { id: take_u64(b, &mut pos)?, wait_ms: take_u64(b, &mut pos)? }
+            }
+            TAG_CANCEL => Request::Cancel(take_u64(b, &mut pos)?),
+            TAG_STATS => Request::Stats,
+            TAG_SHUTDOWN => Request::Shutdown,
+            other => return Err(ProtoError::BadTag(other)),
+        };
+        done(b, pos)?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Response::Submitted(id) => {
+                out.push(TAG_SUBMITTED);
+                push_u64(&mut out, *id);
+            }
+            Response::Status(s) => {
+                out.push(TAG_STATUS_R);
+                push_u64(&mut out, s.id);
+                out.push(s.state.as_byte());
+                push_u32(&mut out, s.priority);
+                push_u32(&mut out, s.workers);
+                push_bool(&mut out, s.resumed);
+                push_u64(&mut out, s.nodes);
+                push_u64(&mut out, s.nodes_total);
+                push_u64(&mut out, s.checkpoints);
+                push_cost(&mut out, s.best);
+                push_str(&mut out, &s.error);
+            }
+            Response::Result(r) => {
+                out.push(TAG_RESULT_R);
+                push_u64(&mut out, r.id);
+                out.push(r.state.as_byte());
+                push_cost(&mut out, r.best);
+                push_u32(&mut out, r.solution.len() as u32);
+                for &v in &r.solution {
+                    push_u32(&mut out, v);
+                }
+                push_u64(&mut out, r.nodes);
+                push_u64(&mut out, r.nodes_total);
+                push_u64(&mut out, r.wall_secs.to_bits());
+                push_bool(&mut out, r.resumed);
+            }
+            Response::Ok => out.push(TAG_OK),
+            Response::Stats(s) => {
+                out.push(TAG_STATS_R);
+                push_str(&mut out, &s.version);
+                push_str(&mut out, &s.git_rev);
+                push_u32(&mut out, s.proto_version);
+                push_u64(&mut out, s.uptime_secs.to_bits());
+                push_u32(&mut out, s.active);
+                push_u32(&mut out, s.queued);
+                let m = &s.metrics;
+                for v in [
+                    m.jobs_submitted,
+                    m.jobs_completed,
+                    m.jobs_cancelled,
+                    m.jobs_failed,
+                    m.jobs_resumed,
+                    m.checkpoints_written,
+                    m.checkpoint_bytes,
+                    m.nodes_explored,
+                ] {
+                    push_u64(&mut out, v);
+                }
+            }
+            Response::Err(msg) => {
+                out.push(TAG_ERR);
+                push_str(&mut out, msg);
+            }
+        }
+        out
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Response, ProtoError> {
+        let mut pos = 0usize;
+        let tag = take_u8(b, &mut pos)?;
+        let rsp = match tag {
+            TAG_SUBMITTED => Response::Submitted(take_u64(b, &mut pos)?),
+            TAG_STATUS_R => Response::Status(JobStatus {
+                id: take_u64(b, &mut pos)?,
+                state: JobState::from_byte(take_u8(b, &mut pos)?)?,
+                priority: take_u32(b, &mut pos)?,
+                workers: take_u32(b, &mut pos)?,
+                resumed: take_bool(b, &mut pos)?,
+                nodes: take_u64(b, &mut pos)?,
+                nodes_total: take_u64(b, &mut pos)?,
+                checkpoints: take_u64(b, &mut pos)?,
+                best: take_cost(b, &mut pos)?,
+                error: take_str(b, &mut pos)?,
+            }),
+            TAG_RESULT_R => {
+                let id = take_u64(b, &mut pos)?;
+                let state = JobState::from_byte(take_u8(b, &mut pos)?)?;
+                let best = take_cost(b, &mut pos)?;
+                // The shared guarded decode rejects a hostile count
+                // before allocating.
+                let solution = wire::take_u32_vec(b, &mut pos).ok_or(ProtoError::Truncated)?;
+                Response::Result(JobOutcome {
+                    id,
+                    state,
+                    best,
+                    solution,
+                    nodes: take_u64(b, &mut pos)?,
+                    nodes_total: take_u64(b, &mut pos)?,
+                    wall_secs: f64::from_bits(take_u64(b, &mut pos)?),
+                    resumed: take_bool(b, &mut pos)?,
+                })
+            }
+            TAG_OK => Response::Ok,
+            TAG_STATS_R => {
+                let version = take_str(b, &mut pos)?;
+                let git_rev = take_str(b, &mut pos)?;
+                let proto_version = take_u32(b, &mut pos)?;
+                let uptime_secs = f64::from_bits(take_u64(b, &mut pos)?);
+                let active = take_u32(b, &mut pos)?;
+                let queued = take_u32(b, &mut pos)?;
+                let mut vals = [0u64; 8];
+                for v in &mut vals {
+                    *v = take_u64(b, &mut pos)?;
+                }
+                Response::Stats(ServerStats {
+                    version,
+                    git_rev,
+                    proto_version,
+                    uptime_secs,
+                    active,
+                    queued,
+                    metrics: ServerMetrics {
+                        jobs_submitted: vals[0],
+                        jobs_completed: vals[1],
+                        jobs_cancelled: vals[2],
+                        jobs_failed: vals[3],
+                        jobs_resumed: vals[4],
+                        checkpoints_written: vals[5],
+                        checkpoint_bytes: vals[6],
+                        nodes_explored: vals[7],
+                    },
+                })
+            }
+            TAG_ERR => Response::Err(take_str(b, &mut pos)?),
+            other => return Err(ProtoError::BadTag(other)),
+        };
+        done(b, pos)?;
+        Ok(rsp)
+    }
+}
+
+// ------------------------------------------------------------------ frames
+
+/// Write one protocol message as a length-prefixed frame.
+pub fn write_msg<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
+    wire::write_blob_frame(w, payload)
+}
+
+/// Read one protocol frame payload (ceiling [`MAX_SERVE_FRAME`]).
+pub fn read_msg<R: Read>(r: &mut R) -> std::io::Result<Vec<u8>> {
+    wire::read_blob_frame(r, MAX_SERVE_FRAME)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_status() -> JobStatus {
+        JobStatus {
+            id: 7,
+            state: JobState::Running,
+            priority: 3,
+            workers: 2,
+            resumed: true,
+            nodes: 123,
+            nodes_total: 456,
+            checkpoints: 9,
+            best: Some(17),
+            error: String::new(),
+        }
+    }
+
+    #[test]
+    fn handshake_roundtrip_and_magic_check() {
+        let h = Hello { version: "0.2.0".into(), git_rev: "abc123".into() };
+        assert_eq!(Hello::decode(&h.encode()), Ok(h.clone()));
+        let w = Welcome { version: "0.2.0".into(), git_rev: "def".into(), proto_version: 1 };
+        assert_eq!(Welcome::decode(&w.encode()), Ok(w));
+        // Wrong magic is refused.
+        let mut bad = h.encode();
+        bad[1] = b'X';
+        assert_eq!(Hello::decode(&bad), Err(ProtoError::BadMagic));
+        // Wrong protocol version is refused.
+        let mut bad = h.encode();
+        bad[5] = 99;
+        assert_eq!(Hello::decode(&bad), Err(ProtoError::BadMagic));
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        for req in [
+            Request::Submit(JobSpec::default()),
+            Request::Submit(JobSpec {
+                problem: "ds".into(),
+                instance: "gnm:40:200:7".into(),
+                scale: 0,
+                bound: "none".into(),
+                workers: 8,
+                priority: 5,
+                slice: 512,
+                pace_ms: 20,
+            }),
+            Request::Status(42),
+            Request::Result { id: 1, wait_ms: 30_000 },
+            Request::Cancel(9),
+            Request::Stats,
+            Request::Shutdown,
+        ] {
+            assert_eq!(Request::decode(&req.encode()), Ok(req.clone()), "{req:?}");
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        for rsp in [
+            Response::Submitted(11),
+            Response::Status(sample_status()),
+            Response::Result(JobOutcome {
+                id: 7,
+                state: JobState::Done,
+                best: Some(12),
+                solution: vec![1, 5, 9, 30],
+                nodes: 1000,
+                nodes_total: 4000,
+                wall_secs: 1.25,
+                resumed: true,
+            }),
+            Response::Result(JobOutcome {
+                id: 8,
+                state: JobState::Cancelled,
+                best: None,
+                solution: vec![],
+                nodes: 0,
+                nodes_total: 0,
+                wall_secs: 0.0,
+                resumed: false,
+            }),
+            Response::Ok,
+            Response::Stats(ServerStats {
+                version: "0.2.0".into(),
+                git_rev: "unknown".into(),
+                proto_version: PROTO_VERSION,
+                uptime_secs: 12.5,
+                active: 2,
+                queued: 3,
+                metrics: ServerMetrics {
+                    jobs_submitted: 5,
+                    jobs_completed: 2,
+                    checkpoints_written: 40,
+                    checkpoint_bytes: 4096,
+                    nodes_explored: 123456,
+                    ..Default::default()
+                },
+            }),
+            Response::Err("no such job".into()),
+        ] {
+            assert_eq!(Response::decode(&rsp.encode()), Ok(rsp.clone()), "{rsp:?}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        assert_eq!(Request::decode(&[]), Err(ProtoError::Truncated));
+        assert_eq!(Request::decode(&[0x7F]), Err(ProtoError::BadTag(0x7F)));
+        // Trailing bytes after a complete request.
+        let mut b = Request::Stats.encode();
+        b.push(0);
+        assert_eq!(Request::decode(&b), Err(ProtoError::TrailingBytes(1)));
+        // Truncated mid-field.
+        let b = Request::Status(1).encode();
+        assert_eq!(Request::decode(&b[..4]), Err(ProtoError::Truncated));
+        // Bad job-state byte in a status response.
+        let mut b = Response::Status(sample_status()).encode();
+        b[9] = 9; // state byte follows the 8-byte id
+        assert_eq!(Response::decode(&b), Err(ProtoError::BadState(9)));
+        // Hostile solution count must not allocate: claims 2^31 vertices.
+        let mut b = vec![TAG_RESULT_R];
+        b.extend_from_slice(&7u64.to_le_bytes());
+        b.push(JobState::Done.as_byte());
+        b.extend_from_slice(&u64::MAX.to_le_bytes());
+        b.extend_from_slice(&0x8000_0000u32.to_le_bytes());
+        assert_eq!(Response::decode(&b), Err(ProtoError::Truncated));
+        // Non-utf8 string field.
+        let mut b = vec![TAG_ERR];
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&[0xFF, 0xFE]);
+        assert_eq!(Response::decode(&b), Err(ProtoError::BadString));
+    }
+
+    #[test]
+    fn every_strict_prefix_of_each_message_is_rejected() {
+        let msgs = [
+            Request::Submit(JobSpec::default()).encode(),
+            Response::Status(sample_status()).encode(),
+        ];
+        for bytes in msgs {
+            for cut in 0..bytes.len() {
+                assert!(
+                    Request::decode(&bytes[..cut]).is_err()
+                        && Response::decode(&bytes[..cut]).is_err(),
+                    "prefix {cut} must not decode"
+                );
+            }
+        }
+    }
+}
