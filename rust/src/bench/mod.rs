@@ -35,7 +35,7 @@ use crate::engine::serial::solve_serial;
 use crate::experiments::TICKS_PER_SEC;
 use crate::instances::generators;
 use crate::metrics::nodes_per_sec;
-use crate::problems::{BoundKind, DominatingSet, NQueens, VertexCover};
+use crate::problems::{BoundKind, DominatingSet, MaxClique, NQueens, VertexCover};
 use crate::runner::{self, RunConfig};
 use crate::sim::{simulate, SimConfig};
 use crate::util::table::Table;
@@ -44,7 +44,8 @@ use json::Json;
 
 /// Bumped when the case list or the JSON schema changes incompatibly;
 /// [`check_against`] refuses to gate across different suite versions.
-pub const SUITE_VERSION: u32 = 1;
+/// v2: MAX-CLIQUE cases + optional per-case `shape` (tree-shape summary).
+pub const SUITE_VERSION: u32 = 2;
 
 /// Default regression tolerance: fail when a case loses more than this
 /// fraction of its (calibrated) throughput, or gains it in makespan.
@@ -87,6 +88,9 @@ pub struct CaseResult {
     pub tasks_requested: u64,
     /// Optimum found (correctness cross-check between runs).
     pub best_cost: Option<u64>,
+    /// Tree-shape summary (simulator cases run with shape collection on;
+    /// null elsewhere).  Informational: the gate never compares it.
+    pub shape: Option<crate::metrics::TreeShapeSummary>,
 }
 
 /// A full suite run, ready to serialize as `BENCH_<label>.json`.
@@ -133,6 +137,13 @@ pub(crate) fn hotpath_workloads(smoke: bool) -> Vec<(String, HotpathRun)> {
     let g_vc2 = g_vc.clone();
     let g_ds =
         if smoke { generators::random_ds(30, 120, 41) } else { generators::random_ds(70, 280, 41) };
+    // Near-transition densities; sparser planted instances prune to almost
+    // nothing (smoke ≈ 0.6k serial nodes, full ≈ 5k).
+    let g_clq = if smoke {
+        generators::planted_clique(40, 560, 9, 61)
+    } else {
+        generators::planted_clique(60, 1600, 13, 61)
+    };
     let queens_n: u32 = if smoke { 8 } else { 10 };
     vec![
         (
@@ -153,6 +164,13 @@ pub(crate) fn hotpath_workloads(smoke: bool) -> Vec<(String, HotpathRun)> {
             "hotpath/ds".to_string(),
             Box::new(move |budget| {
                 let r = solve_serial(&DominatingSet::new(&g_ds), budget);
+                (r.stats.nodes, r.best_cost)
+            }),
+        ),
+        (
+            "hotpath/clique-planted".to_string(),
+            Box::new(move |budget| {
+                let r = solve_serial(&MaxClique::new(&g_clq), budget);
                 (r.stats.nodes, r.best_cost)
             }),
         ),
@@ -199,6 +217,7 @@ fn hotpath_case(
         tasks_received: 0,
         tasks_requested: 0,
         best_cost,
+        shape: None,
     }
 }
 
@@ -243,6 +262,7 @@ fn calibration_case(min_millis: u64, min_iters: usize) -> CaseResult {
         tasks_received: 0,
         tasks_requested: 0,
         best_cost: None,
+        shape: None,
     }
 }
 
@@ -295,26 +315,21 @@ pub fn run_suite(opts: &BenchOptions) -> BenchReport {
             tasks_received: comm.tasks_received,
             tasks_requested: comm.tasks_requested,
             best_cost: rep.best_cost,
+            shape: None,
         });
     }
 
     // Simulator sweep: virtual makespan is deterministic, so these cases
     // gate protocol-level regressions exactly (no tolerance noise needed —
-    // but the shared tolerance keeps the check uniform).
-    let g_sim = generators::gnm(60, 240, 42);
-    let p_sim = VertexCover::new(&g_sim);
-    let cores: &[usize] = if smoke { &[64] } else { &[64, 256, 1024] };
-    for &c in cores {
-        let r = simulate(
-            &p_sim,
-            &SimConfig { cores: c, worker: WorkerConfig::default(), ..Default::default() },
-        );
+    // but the shared tolerance keeps the check uniform).  Shape collection
+    // is on: the per-run tree profile rides into the JSON artifact.
+    let sim_case = |name: String, r: &crate::sim::SimReport| {
         let comm = r.per_worker.iter().fold(crate::comm::CommStats::default(), |mut acc, w| {
             acc.merge(&w.comm);
             acc
         });
-        cases.push(CaseResult {
-            name: format!("sim/c{c}"),
+        CaseResult {
+            name,
             kind: "sim".into(),
             nodes: r.total_nodes(),
             wall_secs: 0.0,
@@ -324,8 +339,29 @@ pub fn run_suite(opts: &BenchOptions) -> BenchReport {
             tasks_received: comm.tasks_received,
             tasks_requested: comm.tasks_requested,
             best_cost: r.best_cost,
-        });
+            shape: r.tree_shape.as_ref().map(|s| s.summary()),
+        }
+    };
+    let sim_worker = WorkerConfig { collect_shape: true, ..Default::default() };
+    let g_sim = generators::gnm(60, 240, 42);
+    let p_sim = VertexCover::new(&g_sim);
+    let cores: &[usize] = if smoke { &[64] } else { &[64, 256, 1024] };
+    for &c in cores {
+        let r = simulate(&p_sim, &SimConfig { cores: c, worker: sim_worker, ..Default::default() });
+        cases.push(sim_case(format!("sim/c{c}"), &r));
     }
+
+    // MAX-CLIQUE on the scenario matrix: multiway (non-binary) branching
+    // through the full donation protocol, plus its tree profile.
+    let g_clq = if smoke {
+        generators::planted_clique(40, 560, 9, 61)
+    } else {
+        generators::planted_clique(55, 1280, 12, 61)
+    };
+    let p_clq = MaxClique::new(&g_clq);
+    let r =
+        simulate(&p_clq, &SimConfig { cores: 64, worker: sim_worker, ..Default::default() });
+    cases.push(sim_case("sim/clique-planted-c64".into(), &r));
 
     BenchReport {
         suite_version: SUITE_VERSION,
@@ -361,6 +397,21 @@ impl BenchReport {
                     (
                         "best_cost".into(),
                         c.best_cost.map_or(Json::Null, |b| Json::Num(b as f64)),
+                    ),
+                    (
+                        "shape".into(),
+                        c.shape.map_or(Json::Null, |s| {
+                            Json::Obj(vec![
+                                ("total_nodes".into(), Json::Num(s.total_nodes as f64)),
+                                ("max_depth".into(), Json::Num(s.max_depth as f64)),
+                                ("prune_rate".into(), Json::Num(s.prune_rate)),
+                                ("subtree_skew".into(), Json::Num(s.subtree_skew)),
+                                (
+                                    "depth_of_mass_half".into(),
+                                    Json::Num(s.depth_of_mass_half as f64),
+                                ),
+                            ])
+                        }),
                     ),
                 ])
             })
@@ -410,6 +461,16 @@ impl BenchReport {
                 tasks_received: cf("tasks_received")?.as_u64().unwrap_or(0),
                 tasks_requested: cf("tasks_requested")?.as_u64().unwrap_or(0),
                 best_cost: c.get("best_cost").and_then(Json::as_u64),
+                // Optional (absent/null in pre-v2 files and non-sim cases).
+                shape: c.get("shape").and_then(|v| {
+                    Some(crate::metrics::TreeShapeSummary {
+                        total_nodes: v.get("total_nodes")?.as_u64()?,
+                        max_depth: v.get("max_depth")?.as_u64()? as usize,
+                        prune_rate: v.get("prune_rate")?.as_f64()?,
+                        subtree_skew: v.get("subtree_skew")?.as_f64()?,
+                        depth_of_mass_half: v.get("depth_of_mass_half")?.as_u64()? as usize,
+                    })
+                }),
             });
         }
         Ok(BenchReport {
@@ -594,6 +655,7 @@ mod tests {
             tasks_received: 0,
             tasks_requested: 0,
             best_cost: Some(3),
+            shape: None,
         }
     }
 
@@ -609,6 +671,13 @@ mod tests {
             tasks_received: 4,
             tasks_requested: 9,
             best_cost: Some(3),
+            shape: Some(crate::metrics::TreeShapeSummary {
+                total_nodes: 1000,
+                max_depth: 12,
+                prune_rate: 0.25,
+                subtree_skew: 1.5,
+                depth_of_mass_half: 7,
+            }),
         }
     }
 
@@ -623,6 +692,13 @@ mod tests {
         assert_eq!(back.cases[1].makespan_secs, Some(0.125));
         assert_eq!(back.cases[1].tasks_requested, 9);
         assert!(!back.bootstrap);
+        // Shape roundtrips through the optional nested object.
+        assert!(back.cases[0].shape.is_none());
+        let s = back.cases[1].shape.expect("sim case shape survives");
+        assert_eq!(s.total_nodes, 1000);
+        assert_eq!(s.max_depth, 12);
+        assert_eq!(s.depth_of_mass_half, 7);
+        assert!((s.prune_rate - 0.25).abs() < 1e-12);
     }
 
     #[test]
@@ -713,6 +789,16 @@ mod tests {
                 "missing family {family}"
             );
         }
+        // MAX-CLIQUE rides in both families, and sim cases carry a shape.
+        assert!(r.cases.iter().any(|c| c.name == "hotpath/clique-planted"));
+        let clq = r
+            .cases
+            .iter()
+            .find(|c| c.name == "sim/clique-planted-c64")
+            .expect("clique sim case");
+        let shape = clq.shape.expect("sim cases collect tree shape");
+        assert_eq!(shape.total_nodes, clq.nodes);
+        assert!(r.cases.iter().filter(|c| c.kind == "sim").all(|c| c.shape.is_some()));
         let back = BenchReport::from_json(&json::parse(&r.to_json().render()).unwrap()).unwrap();
         assert_eq!(back.cases.len(), r.cases.len());
         // Self-check: a run can never regress against itself.

@@ -93,8 +93,10 @@ USAGE:
 
 COMMANDS:
     solve       solve one instance with PARALLEL-RB on real threads
-                  --problem vc|ds|queens  --instance <name|path.clq>  --workers N
+                  --problem vc|ds|queens|clique  --instance <name|path.clq>  --workers N
                   --bound none|edges|matching  --config file.toml
+                  [--tree-shape]  (serial run + per-depth tree profile,
+                   docs/TREE_SHAPE.md)
     cluster     multi-process PARALLEL-RB over TCP (see docs/WIRE_PROTOCOL.md)
                   cluster listen --bind HOST:PORT --peers C  [solve flags]
                   cluster join   --connect HOST:PORT [--advertise HOST]  [solve flags]
@@ -108,7 +110,7 @@ COMMANDS:
                 (prints `SERVING <addr>`; kill -9 + restart with the same
                  --journal resumes every in-flight job from its checkpoint)
     submit      queue a job on a running daemon; prints `JOB <id>`
-                  --problem vc|ds  --instance <spec>  [--scale 0|1|2]
+                  --problem vc|ds|clique  --instance <spec>  [--scale 0|1|2]
                   [--bound none|edges|matching]  [--workers N]  [--priority P]
                   [--slice NODES]  [--pace-ms T]  [--server HOST:PORT]
                 (<spec> = suite name, DIMACS path, or gnm:<n>:<m>:<seed>)
@@ -120,7 +122,8 @@ COMMANDS:
                      on the next `pbt serve` with the same --journal
     version     print crate version + git revision (also: --version)
     simulate    virtual-time run on simulated cores
-                  --problem vc|ds  --instance <name>  --cores N  --latency T  --batch B
+                  --problem vc|ds|clique  --instance <name>  --cores N
+                  --latency T  --batch B  [--tree-shape]
     bench       deterministic perf suite -> BENCH_<label>.json (docs/BENCHMARKS.md)
                   [--smoke]  [--label L]  [--out FILE]
                   [--check baseline.json [--tolerance 0.2]]  (exit 1 on regression)
@@ -138,8 +141,13 @@ COMMANDS:
 INSTANCES (generated, seeded):
     phat1 phat2 frb cell60   (vertex cover, Table I families)
     ds1 ds2                  (dominating set, Table II families)
+    clique-planted clique-turan clique-skew clique-gnm
+                             (max clique scenario matrix, docs/TREE_SHAPE.md)
     gnm:<n>:<m>:<seed>       (random G(n,m), identical bytes everywhere)
     randds:<n>:<m>:<seed>    (random dominating-set family)
+    planted:<n>:<m>:<k>:<seed>    (G(n,m) + planted K_k)
+    turan:<n>:<r>                 (Turán-like r-partite, ω = r)
+    gnpskew:<n>:<deg>:<alpha_tenths>:<seed>  (Chung–Lu skewed degrees)
     or any DIMACS .clq/.mis/.col file path
 ";
 

@@ -65,6 +65,10 @@ pub struct WorkerConfig {
     /// Tasks donated per request (§IV-C subset-of-siblings; 1 = paper's
     /// binary-tree behaviour).
     pub donate_batch: usize,
+    /// Collect a per-depth tree-shape profile of this worker's visits
+    /// (merged across workers by the runner/simulator; off by default —
+    /// the hot path pays one branch per visit when on).
+    pub collect_shape: bool,
 }
 
 impl Default for WorkerConfig {
@@ -76,6 +80,7 @@ impl Default for WorkerConfig {
             victims: VictimStrategy::VirtualTree,
             steal_seed: 0x5EED,
             donate_batch: 1,
+            collect_shape: false,
         }
     }
 }
@@ -184,6 +189,10 @@ pub struct Worker<'p, P: Problem, S: StatusTable = VecStatus> {
     /// before any new request goes out. NOT a task buffer in the §III-B
     /// sense: it holds only what one response carried.
     pending: std::collections::VecDeque<NodeIndex>,
+    /// Tree-shape accumulator across this worker's steppers (only with
+    /// `cfg.collect_shape`); merges exactly across workers because every
+    /// node visit keeps its global depth and root-child digit.
+    shape: Option<crate::metrics::TreeShape>,
 }
 
 impl<'p, P: Problem> Worker<'p, P, VecStatus> {
@@ -225,9 +234,10 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
             outbox: Vec::new(),
             rng: crate::util::Rng::new(cfg.steal_seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15)),
             pending: std::collections::VecDeque::new(),
+            shape: None,
         };
         if rank == 0 {
-            w.stepper = Some(Stepper::at_root(problem));
+            w.install_stepper(Stepper::at_root(problem));
             w.init = false;
         } else {
             if cfg.victims == VictimStrategy::Random {
@@ -269,6 +279,35 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
     /// Collect queued outgoing envelopes (the driver delivers them).
     pub fn drain_outbox(&mut self) -> Vec<Envelope> {
         std::mem::take(&mut self.outbox)
+    }
+
+    /// Hand this worker a fresh stepper, switching shape collection on when
+    /// configured (every stepper creation site funnels through here).
+    fn install_stepper(&mut self, mut stepper: Stepper<P>) {
+        if self.cfg.collect_shape {
+            stepper.enable_shape();
+        }
+        self.stepper = Some(stepper);
+    }
+
+    /// Fold a retiring stepper's tree shape into the worker accumulator.
+    fn absorb_shape(&mut self, stepper: &mut Stepper<P>) {
+        if let Some(sh) = stepper.take_shape() {
+            self.shape.get_or_insert_with(Default::default).merge(&sh);
+        }
+    }
+
+    /// Detach this worker's accumulated tree shape, including the live
+    /// stepper's share.  `None` unless `cfg.collect_shape` is on.
+    pub fn take_tree_shape(&mut self) -> Option<crate::metrics::TreeShape> {
+        if let Some(s) = self.stepper.as_mut() {
+            if let Some(sh) = s.take_shape() {
+                self.shape.get_or_insert_with(Default::default).merge(&sh);
+                // Keep collecting if the stepper lives on.
+                s.enable_shape();
+            }
+        }
+        self.shape.take()
     }
 
     fn push_msg(&mut self, to: Dest, msg: Message) {
@@ -357,7 +396,7 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
                     self.pending.extend(it);
                     match Stepper::from_index(self.problem, &first) {
                         Ok(stepper) => {
-                            self.stepper = Some(stepper);
+                            self.install_stepper(stepper);
                             self.phase = Phase::Working;
                             self.probes_this_pass = 0;
                             self.passes = 0;
@@ -511,9 +550,10 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
     /// must survive too.
     pub fn leave(&mut self) -> Option<Vec<u8>> {
         let cp = match self.stepper.take() {
-            Some(s) => {
+            Some(mut s) => {
                 let st = s.stats;
                 self.stats.search.merge(&st);
+                self.absorb_shape(&mut s);
                 (!s.is_exhausted()).then(|| s.checkpoint_bytes())
             }
             None => None,
@@ -558,12 +598,14 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
         }
         if let Some(st) = finished_stats {
             self.stats.search.merge(&st);
-            self.stepper = None;
+            if let Some(mut s) = self.stepper.take() {
+                self.absorb_shape(&mut s);
+            }
             // §IV-C multi-task responses: run the remaining siblings before
             // asking anyone for more work.
             while let Some(next) = self.pending.pop_front() {
                 if let Ok(stepper) = Stepper::from_index(self.problem, &next) {
-                    self.stepper = Some(stepper);
+                    self.install_stepper(stepper);
                     return done;
                 }
             }
@@ -604,7 +646,9 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
         self.stats.comm.tasks_requested += remaining;
         self.stats.comm.messages_sent += remaining;
         self.stats.comm.bytes_sent += remaining * 9;
-        self.stepper = None;
+        if let Some(mut s) = self.stepper.take() {
+            self.absorb_shape(&mut s);
+        }
         self.go_inactive();
         remaining
     }
@@ -883,6 +927,28 @@ mod tests {
         let ts: u64 = ws.iter().map(|w| w.stats.comm.tasks_received).sum();
         let don: u64 = ws.iter().map(|w| w.stats.comm.tasks_donated).sum();
         assert_eq!(ts, don);
+    }
+
+    #[test]
+    fn tree_shape_merges_across_donation_to_serial_profile() {
+        // ToyTree has no bound, so node conservation is exact — the merged
+        // per-worker shapes must reproduce the serial profile bit-for-bit
+        // even though donation scattered the subtrees across workers.
+        let p = ToyTree { height: 8 };
+        let serial = crate::engine::serial::solve_serial_with_shape(&p, u64::MAX);
+        let expected = serial.tree_shape.expect("serial shape collected");
+        let cfg = WorkerConfig { collect_shape: true, ..Default::default() };
+        let mut ws = pump(&p, 4, cfg);
+        let mut merged = crate::metrics::TreeShape::default();
+        for w in ws.iter_mut() {
+            if let Some(sh) = w.take_tree_shape() {
+                merged.merge(&sh);
+            }
+        }
+        assert_eq!(merged, expected);
+        // Off by default: no shape comes back.
+        let mut plain = pump(&p, 2, WorkerConfig::default());
+        assert!(plain.iter_mut().all(|w| w.take_tree_shape().is_none()));
     }
 
     #[test]

@@ -121,6 +121,8 @@ pub struct Stepper<P: Problem> {
     pending: Option<NodeEval>,
     done: bool,
     pub stats: SearchStats,
+    /// Tree-shape collector, off by default (the hot path pays one branch).
+    shape: Option<Box<crate::metrics::TreeShape>>,
 }
 
 impl<P: Problem> Stepper<P> {
@@ -150,7 +152,20 @@ impl<P: Problem> Stepper<P> {
             pending: Some(ev),
             done: false,
             stats: SearchStats::default(),
+            shape: None,
         })
+    }
+
+    /// Start collecting a per-depth tree-shape profile from the next visit.
+    pub fn enable_shape(&mut self) {
+        if self.shape.is_none() {
+            self.shape = Some(Box::default());
+        }
+    }
+
+    /// Detach the collected shape (None when collection was never enabled).
+    pub fn take_shape(&mut self) -> Option<crate::metrics::TreeShape> {
+        self.shape.take().map(|b| *b)
     }
 
     /// Has the assigned subtree been fully explored?
@@ -231,6 +246,15 @@ impl<P: Problem> Stepper<P> {
         let prune = ev.bound != 0 && ev.bound >= best_now;
         if prune {
             self.stats.pruned += 1;
+        }
+        if let Some(shape) = self.shape.as_deref_mut() {
+            shape.record(
+                self.ci.global_depth(),
+                self.ci.top_digit(),
+                ev.children,
+                prune,
+                ev.solution.is_some(),
+            );
         }
         if ev.children > 0 && !prune {
             self.ci.push(0, ev.children);

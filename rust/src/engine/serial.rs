@@ -2,6 +2,7 @@
 //! baseline (`T_1`) and by correctness tests.
 
 use super::{Problem, SearchState, SearchStats, StepResult, Stepper};
+use crate::metrics::TreeShape;
 use crate::util::Stopwatch;
 use crate::{Cost, COST_INF};
 
@@ -16,6 +17,8 @@ pub struct SerialReport<S> {
     pub wall_secs: f64,
     /// True if the node budget expired before exhaustion.
     pub budget_exhausted: bool,
+    /// Per-depth tree-shape profile (only with [`solve_serial_with_shape`]).
+    pub tree_shape: Option<TreeShape>,
 }
 
 /// Run SERIAL-RB to completion (or until `node_budget` visits).
@@ -23,8 +26,28 @@ pub fn solve_serial<P: Problem>(
     problem: &P,
     node_budget: u64,
 ) -> SerialReport<<P::State as SearchState>::Sol> {
+    solve_serial_impl(problem, node_budget, false)
+}
+
+/// [`solve_serial`] with tree-shape collection on — same search, plus the
+/// per-depth profile in `tree_shape` (the `pbt solve --tree-shape` path).
+pub fn solve_serial_with_shape<P: Problem>(
+    problem: &P,
+    node_budget: u64,
+) -> SerialReport<<P::State as SearchState>::Sol> {
+    solve_serial_impl(problem, node_budget, true)
+}
+
+fn solve_serial_impl<P: Problem>(
+    problem: &P,
+    node_budget: u64,
+    collect_shape: bool,
+) -> SerialReport<<P::State as SearchState>::Sol> {
     let sw = Stopwatch::new();
     let mut stepper = Stepper::at_root(problem);
+    if collect_shape {
+        stepper.enable_shape();
+    }
     let mut best = COST_INF;
     let mut best_solution = None;
     let mut budget_exhausted = false;
@@ -49,6 +72,7 @@ pub fn solve_serial<P: Problem>(
         stats: stepper.stats,
         wall_secs: sw.elapsed_secs(),
         budget_exhausted,
+        tree_shape: stepper.take_shape(),
     }
 }
 
@@ -64,6 +88,7 @@ mod tests {
         assert_eq!(r.stats.nodes, 63);
         assert!(!r.budget_exhausted);
         assert_eq!(r.best_solution, Some(vec![0, 0, 0, 0, 0]));
+        assert!(r.tree_shape.is_none(), "shape off by default");
     }
 
     #[test]
@@ -71,5 +96,27 @@ mod tests {
         let r = solve_serial(&ToyTree { height: 10 }, 100);
         assert!(r.budget_exhausted);
         assert_eq!(r.stats.nodes, 100);
+    }
+
+    #[test]
+    fn shape_profile_matches_toy_tree() {
+        // Complete binary tree height 3: depths 0..3 hold 1,2,4,8 nodes.
+        let r = solve_serial_with_shape(&ToyTree { height: 3 }, u64::MAX);
+        let shape = r.tree_shape.expect("shape collected");
+        assert_eq!(shape.total_nodes(), r.stats.nodes);
+        assert_eq!(shape.nodes_at_depth, vec![1, 2, 4, 8]);
+        assert_eq!(shape.max_depth(), r.stats.max_depth);
+        // 8 leaves are solution nodes.
+        assert_eq!(shape.solutions_at_depth, vec![0, 0, 0, 8]);
+        // Two root-child subtrees of 7 visits each + the root itself.
+        assert_eq!(shape.root_visits, 1);
+        assert_eq!(shape.top_subtrees, vec![7, 7]);
+        assert_eq!(shape.subtree_skew(), 1.0);
+        // Toy tree has no bound: nothing pruned.
+        assert_eq!(shape.prune_rate(), 0.0);
+        // Identical search either way.
+        let plain = solve_serial(&ToyTree { height: 3 }, u64::MAX);
+        assert_eq!(plain.stats, r.stats);
+        assert_eq!(plain.best_cost, r.best_cost);
     }
 }

@@ -52,6 +52,7 @@ pub fn sweep_sim<P: Problem>(
             nodes: r.total_nodes(),
             tasks_donated: r.per_worker.iter().map(|w| w.comm.tasks_donated).sum(),
             best_cost: r.best_cost,
+            shape: r.tree_shape.as_ref().map(|s| s.summary()),
         });
     }
     rows
@@ -76,6 +77,9 @@ pub fn sweep_threads<P: Problem>(
             nodes: r.total_nodes(),
             tasks_donated: r.total_comm().tasks_donated,
             best_cost: r.best_cost,
+            // The thread runner has no shape plumbing (virtual-time sweeps
+            // are the observability path).
+            shape: None,
         });
     }
     rows
@@ -276,6 +280,20 @@ mod tests {
         let rows = table2(0, 4);
         assert_eq!(rows.len(), 2 * 2);
         assert!(rows.iter().all(|r| r.best_cost.is_some()));
+    }
+
+    #[test]
+    fn sweep_sim_carries_shape_summary_when_enabled() {
+        let g = crate::instances::generators::gnm(16, 40, 7);
+        let p = VertexCover::new(&g);
+        let worker = WorkerConfig { collect_shape: true, ..Default::default() };
+        let rows = sweep_sim(&p, "shape-test", &[2, 4], worker);
+        assert!(rows.iter().all(|r| r.shape.is_some()));
+        let s = rows[0].shape.unwrap();
+        assert_eq!(s.total_nodes, rows[0].nodes);
+        // Off by default.
+        let off = sweep_sim(&p, "shape-off", &[2], WorkerConfig::default());
+        assert!(off[0].shape.is_none());
     }
 
     #[test]

@@ -234,6 +234,15 @@ impl CurrentIndex {
         self.path.len()
     }
 
+    /// First digit of the global path — which root-child subtree the current
+    /// node lives under (`None` at the root itself).  Tree-shape collection
+    /// uses this to attribute node visits to top-level subtrees; it stays
+    /// meaningful under donation because a donated task keeps its global
+    /// prefix.
+    pub fn top_digit(&self) -> Option<u32> {
+        self.path.first().copied()
+    }
+
     /// Record a descent: at the current node we take child `digit` out of
     /// `num_children` total (the paper's `current_idx[d] ← p` plus the
     /// sibling count for row 1).
@@ -457,6 +466,21 @@ mod tests {
         assert_eq!(NodeIndex::decode_from(&bytes, &mut pos), Some(b));
         assert_eq!(pos, bytes.len());
         assert_eq!(NodeIndex::decode_from(&bytes, &mut pos), None);
+    }
+
+    #[test]
+    fn top_digit_tracks_root_child_subtree() {
+        // At the global root there is no enclosing top-level subtree.
+        let mut ci = CurrentIndex::new(NodeIndex::root());
+        assert_eq!(ci.top_digit(), None);
+        ci.push(2, 4);
+        ci.push(0, 3);
+        assert_eq!(ci.top_digit(), Some(2));
+        // A donated subtree keeps its global prefix: root [1], local path [0].
+        let mut donated = CurrentIndex::new(NodeIndex(vec![1]));
+        assert_eq!(donated.top_digit(), Some(1));
+        donated.push(0, 2);
+        assert_eq!(donated.top_digit(), Some(1));
     }
 
     #[test]

@@ -139,6 +139,90 @@ pub fn random_ds(n: usize, m: usize, seed: u64) -> Graph {
     g
 }
 
+/// Planted-clique instance: a clique K_k on `k` seeded-random vertices plus
+/// up to `m` random noise edges.  The planted clique guarantees ω ≥ k while
+/// the noise hides it — the classic adversarial input for clique search,
+/// and a shallow-heavy tree for the B&B solver (the bound fires early in
+/// the noise, late inside the plant).
+pub fn planted_clique(n: usize, m: usize, k: usize, seed: u64) -> Graph {
+    assert!(k <= n, "clique size {k} exceeds n={n}");
+    let max_m = n * (n - 1) / 2;
+    assert!(m <= max_m, "m={m} exceeds max {max_m} for n={n}");
+    let mut rng = Rng::new(seed);
+    let members: Vec<u32> = rng.sample_indices(n, k).into_iter().map(|v| v as u32).collect();
+    let mut seen = std::collections::HashSet::new();
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    for (i, &u) in members.iter().enumerate() {
+        for &v in &members[i + 1..] {
+            let key = (u.min(v), u.max(v));
+            seen.insert(key);
+            edges.push(key);
+        }
+    }
+    let mut added = 0usize;
+    let mut attempts = 0usize;
+    while added < m && attempts < 100 * m + 1000 {
+        attempts += 1;
+        let u = rng.gen_range(n) as u32;
+        let v = rng.gen_range(n) as u32;
+        if u == v {
+            continue;
+        }
+        let key = (u.min(v), u.max(v));
+        if seen.insert(key) {
+            edges.push(key);
+            added += 1;
+        }
+    }
+    Graph::from_edges(format!("planted_{n}m{m}k{k}_s{seed}"), n, &edges)
+        .expect("planted_clique generates simple graphs")
+}
+
+/// Turán-like graph: complete multipartite with `r` near-equal parts
+/// (vertex `v` in part `v mod r`).  ω = r exactly — one vertex per part is
+/// a clique, two vertices share a part never are — so it pins the solvers
+/// to a known optimum while the branching factor stays high (every
+/// cross-part vertex is a candidate).
+pub fn turan_like(n: usize, r: usize) -> Graph {
+    assert!(r >= 1 && r <= n, "parts r={r} out of range for n={n}");
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if u % r != v % r {
+                edges.push((u as u32, v as u32));
+            }
+        }
+    }
+    Graph::from_edges(format!("turan_{n}r{r}"), n, &edges)
+        .expect("turan_like generates simple graphs")
+}
+
+/// Skewed-degree random graph (Chung–Lu): vertex `i` gets weight
+/// `(i+1)^(−alpha)` scaled so the expected average degree is `avg_deg`, and
+/// each pair is an edge with probability `w_u·w_v / Σw` (capped at 1).
+/// Heavy-tailed degrees concentrate the search in a few hub subtrees —
+/// exactly the uneven-subtree regime (McCreesh & Prosser, arXiv:1401.5921)
+/// the tree-shape metrics and donation policy are evaluated against.
+pub fn gnp_skew(n: usize, avg_deg: usize, alpha: f64, seed: u64) -> Graph {
+    assert!(n >= 2, "gnp_skew needs at least two vertices");
+    let mut rng = Rng::new(seed);
+    let raw: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).powf(-alpha)).collect();
+    let sum_raw: f64 = raw.iter().sum();
+    let total = (avg_deg * n) as f64;
+    let w: Vec<f64> = raw.iter().map(|r| r * total / sum_raw).collect();
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let p = (w[u] * w[v] / total).min(1.0);
+            if rng.gen_bool(p) {
+                edges.push((u as u32, v as u32));
+            }
+        }
+    }
+    Graph::from_edges(format!("gnpskew_{n}d{avg_deg}a{alpha:.1}_s{seed}"), n, &edges)
+        .expect("gnp_skew generates simple graphs")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,5 +329,45 @@ mod tests {
         let g = random_ds(50, 300, 2);
         assert_eq!(g.name, "50x300.ds");
         assert_eq!(g.num_edges(), 300);
+    }
+
+    #[test]
+    fn planted_clique_contains_its_plant() {
+        let g = planted_clique(30, 60, 6, 13);
+        assert_eq!(g.num_vertices(), 30);
+        // K6 (15 edges) + 60 noise edges, all distinct.
+        assert_eq!(g.num_edges(), 15 + 60);
+        // Deterministic, and a 6-clique really exists.
+        let h = planted_clique(30, 60, 6, 13);
+        assert_eq!(g.edges(), h.edges());
+        let (size, _) = crate::problems::max_clique_bb(&g, u64::MAX).unwrap();
+        assert!(size >= 6, "planted K6 missing: ω={size}");
+    }
+
+    #[test]
+    fn turan_like_structure() {
+        let g = turan_like(12, 4);
+        // T(12, 4): 4 parts of 3; edges = C(12,2) − 4·C(3,2) = 66 − 12 = 54.
+        assert_eq!(g.num_edges(), 54);
+        // Same part (0 and 4, both ≡ 0 mod 4): no edge; cross-part: edge.
+        assert!(!g.has_edge(0, 4));
+        assert!(g.has_edge(0, 1));
+        // ω = r exactly.
+        assert_eq!(crate::problems::max_clique_bb(&g, u64::MAX).unwrap().0, 4);
+    }
+
+    #[test]
+    fn gnp_skew_is_deterministic_and_skewed() {
+        let g = gnp_skew(60, 6, 0.8, 9);
+        let h = gnp_skew(60, 6, 0.8, 9);
+        assert_eq!(g.edges(), h.edges());
+        // Average degree in the right ballpark (loose: the cap at p=1 and
+        // sampling noise both pull it around).
+        let avg = 2.0 * g.num_edges() as f64 / 60.0;
+        assert!(avg > 2.0 && avg < 14.0, "avg degree {avg}");
+        // Heavy head: the first few vertices out-degree the tail.
+        let head: u32 = (0..5u32).map(|v| g.degree(v) as u32).sum();
+        let tail: u32 = (55..60u32).map(|v| g.degree(v) as u32).sum();
+        assert!(head > tail, "head {head} <= tail {tail}");
     }
 }

@@ -9,7 +9,7 @@ pub mod generators;
 pub mod suite;
 
 pub use dimacs::{parse_dimacs, parse_dimacs_file};
-pub use suite::{paper_suite_ds, paper_suite_vc, Instance};
+pub use suite::{paper_suite_ds, paper_suite_vc, scenario_matrix, scenario_matrix_tiny, Instance};
 
 use crate::graph::Graph;
 use anyhow::{bail, Result};
@@ -19,15 +19,22 @@ use anyhow::{bail, Result};
 /// `pbt serve` job protocol, config files) speaks the same language:
 ///
 /// * a suite name — `phat1`, `phat2`, `frb`, `cell60` (VC families),
-///   `ds1`, `ds2` (DS families), sized by `scale` ∈ {0, 1, 2};
+///   `ds1`, `ds2` (DS families), or a clique scenario-matrix name
+///   (`clique-planted`, `clique-turan`, `clique-skew`, `clique-gnm`),
+///   sized by `scale` ∈ {0, 1, 2};
 /// * a DIMACS file path ending in `.clq`, `.mis` or `.col`;
-/// * a generator spec — `gnm:<n>:<m>:<seed>` (random G(n,m)) or
-///   `randds:<n>:<m>:<seed>` (the DS family generator).  Generators are
-///   seeded, so the same spec denotes identical bytes on every machine —
-///   which is what lets a solve job travel as a short string.
+/// * a generator spec — `gnm:<n>:<m>:<seed>` (random G(n,m)),
+///   `randds:<n>:<m>:<seed>` (the DS family generator),
+///   `planted:<n>:<m>:<k>:<seed>` (K_k planted in m noise edges),
+///   `turan:<n>:<r>` (complete multipartite, ω = r) or
+///   `gnpskew:<n>:<deg>:<alpha_tenths>:<seed>` (Chung–Lu heavy-tail,
+///   exponent α = alpha_tenths / 10).  Generators are seeded, so the same
+///   spec denotes identical bytes on every machine — which is what lets a
+///   solve job travel as a short string.
 pub fn resolve_spec(spec: &str, scale: usize) -> Result<Graph> {
     let vc_idx = |i: usize| paper_suite_vc(scale).swap_remove(i).graph;
     let ds_idx = |i: usize| paper_suite_ds(scale).swap_remove(i).graph;
+    let clique_idx = |i: usize| scenario_matrix(scale).swap_remove(i).graph;
     Ok(match spec {
         "phat1" => vc_idx(0),
         "phat2" => vc_idx(1),
@@ -35,6 +42,10 @@ pub fn resolve_spec(spec: &str, scale: usize) -> Result<Graph> {
         "cell60" => vc_idx(3),
         "ds1" => ds_idx(0),
         "ds2" => ds_idx(1),
+        "clique-planted" => clique_idx(0),
+        "clique-turan" => clique_idx(1),
+        "clique-skew" => clique_idx(2),
+        "clique-gnm" => clique_idx(3),
         path if path.ends_with(".clq") || path.ends_with(".mis") || path.ends_with(".col") => {
             parse_dimacs_file(path)?
         }
@@ -42,7 +53,7 @@ pub fn resolve_spec(spec: &str, scale: usize) -> Result<Graph> {
             let parts: Vec<&str> = gen.split(':').collect();
             let arg = |i: usize| -> Result<u64> {
                 parts.get(i).and_then(|s| s.parse().ok()).ok_or_else(|| {
-                    anyhow::anyhow!("bad generator spec {gen:?} (want name:n:m:seed)")
+                    anyhow::anyhow!("bad generator spec {gen:?} (want name:args…, all numeric)")
                 })
             };
             match parts[0] {
@@ -52,12 +63,31 @@ pub fn resolve_spec(spec: &str, scale: usize) -> Result<Graph> {
                 "randds" if parts.len() == 4 => {
                     generators::random_ds(arg(1)? as usize, arg(2)? as usize, arg(3)?)
                 }
-                other => bail!("unknown generator {other:?} in spec {gen:?} (gnm|randds)"),
+                "planted" if parts.len() == 5 => generators::planted_clique(
+                    arg(1)? as usize,
+                    arg(2)? as usize,
+                    arg(3)? as usize,
+                    arg(4)?,
+                ),
+                "turan" if parts.len() == 3 => {
+                    generators::turan_like(arg(1)? as usize, arg(2)? as usize)
+                }
+                "gnpskew" if parts.len() == 5 => generators::gnp_skew(
+                    arg(1)? as usize,
+                    arg(2)? as usize,
+                    arg(3)? as f64 / 10.0,
+                    arg(4)?,
+                ),
+                other => bail!(
+                    "unknown generator {other:?} in spec {gen:?} \
+                     (gnm|randds|planted|turan|gnpskew)"
+                ),
             }
         }
         other => bail!(
-            "unknown instance {other:?} (try phat1/phat2/frb/cell60/ds1/ds2, a DIMACS \
-             .clq/.mis/.col path, or gnm:<n>:<m>:<seed>)"
+            "unknown instance {other:?} (try phat1/phat2/frb/cell60/ds1/ds2, a clique \
+             scenario clique-planted/clique-turan/clique-skew/clique-gnm, a DIMACS \
+             .clq/.mis/.col path, or a generator spec like gnm:<n>:<m>:<seed>)"
         ),
     })
 }
@@ -77,6 +107,22 @@ mod tests {
         assert!(resolve_spec("gnm:30:90", 0).is_err(), "missing seed");
         assert!(resolve_spec("gnm:a:b:c", 0).is_err(), "non-numeric");
         assert!(resolve_spec("zzz:1:2:3", 0).is_err(), "unknown generator");
+    }
+
+    #[test]
+    fn resolve_spec_clique_scenarios_and_generators() {
+        for name in ["clique-planted", "clique-turan", "clique-skew", "clique-gnm"] {
+            let g = resolve_spec(name, 0).unwrap();
+            assert!(g.name.starts_with(name), "{name} -> {}", g.name);
+        }
+        let g = resolve_spec("planted:20:40:5:9", 0).unwrap();
+        assert_eq!(g.num_vertices(), 20);
+        let g = resolve_spec("turan:12:4", 0).unwrap();
+        assert_eq!(g.num_edges(), 54);
+        let g = resolve_spec("gnpskew:30:6:8:5", 0).unwrap();
+        assert_eq!(g.num_vertices(), 30);
+        assert!(resolve_spec("planted:20:40:5", 0).is_err(), "missing seed");
+        assert!(resolve_spec("turan:12", 0).is_err(), "missing parts");
     }
 
     #[test]

@@ -62,6 +62,75 @@ pub fn paper_suite_ds(scale: usize) -> Vec<Instance> {
     ]
 }
 
+/// The MAX CLIQUE scenario matrix (ROADMAP item 4): heavy-tailed and
+/// adversarial families chosen for their *tree shapes*, not their size —
+/// mts (arXiv:1709.07605) argues frameworks must be validated per tree
+/// shape.  Resolvable by scenario name (`clique-planted`, `clique-turan`,
+/// `clique-skew`, `clique-gnm`) through `instances::resolve_spec`.
+pub fn scenario_matrix(scale: usize) -> Vec<Instance> {
+    // Densities sit near the clique phase transition (~0.75–0.9): sparser
+    // graphs let the coloring bound prune the tree to a few dozen nodes,
+    // which exercises nothing.  (Calibrated: planted scale 0/1/2 → ~0.6k/
+    // 2.3k/6k serial nodes; gnm scale 2 → ~22k.)
+    let (planted, turan, skew, gnm) = match scale {
+        0 => ((40, 560, 9, 61u64), (21, 7), (40, 36, 62u64), (35, 420, 63u64)),
+        1 => ((45, 850, 10, 61), (30, 6), (50, 44, 62), (50, 1050, 63)),
+        _ => ((55, 1280, 12, 61), (36, 6), (60, 52, 62), (64, 1750, 63)),
+    };
+    let mut planted_g = generators::planted_clique(planted.0, planted.1, planted.2, planted.3);
+    planted_g.name = format!("clique-planted (n={} k={})", planted.0, planted.2);
+    let mut turan_g = generators::turan_like(turan.0, turan.1);
+    turan_g.name = format!("clique-turan (n={} r={})", turan.0, turan.1);
+    // Alpha 0.6: heavy-tailed but the Chung–Lu p-cap doesn't starve the
+    // overall density (alpha 0.8 saturates the hubs and the tree collapses).
+    let mut skew_g = generators::gnp_skew(skew.0, skew.1, 0.6, skew.2);
+    skew_g.name = format!("clique-skew (n={} deg={})", skew.0, skew.1);
+    let mut gnm_g = generators::gnm(gnm.0, gnm.1, gnm.2);
+    gnm_g.name = format!("clique-gnm (n={} m={})", gnm.0, gnm.1);
+    vec![
+        Instance {
+            graph: planted_g,
+            stands_for: "planted K_k in noise",
+            family: "shallow-heavy: bound kills noise, plant runs deep",
+        },
+        Instance {
+            graph: turan_g,
+            stands_for: "Turán T(n,r), ω = r exact",
+            family: "wide flat branching, known optimum",
+        },
+        Instance {
+            graph: skew_g,
+            stands_for: "Chung–Lu heavy-tail",
+            family: "skewed subtrees around hub vertices",
+        },
+        Instance {
+            graph: gnm_g,
+            stands_for: "dense uniform G(n,m)",
+            family: "balanced baseline",
+        },
+    ]
+}
+
+/// Oracle-sized (≤ 16 vertices) variants of the scenario families: every
+/// instance is small enough for `testing::oracle` to enumerate, so the
+/// cross-validation suite can pin B&B == oracle == complement-VC on each.
+pub fn scenario_matrix_tiny() -> Vec<Instance> {
+    let mut planted_g = generators::planted_clique(14, 24, 5, 71);
+    planted_g.name = "clique-planted-tiny".to_string();
+    let mut turan_g = generators::turan_like(12, 4);
+    turan_g.name = "clique-turan-tiny".to_string();
+    let mut skew_g = generators::gnp_skew(15, 5, 0.8, 72);
+    skew_g.name = "clique-skew-tiny".to_string();
+    let mut gnm_g = generators::gnm(16, 60, 73);
+    gnm_g.name = "clique-gnm-tiny".to_string();
+    vec![
+        Instance { graph: planted_g, stands_for: "planted K_5", family: "oracle-sized planted" },
+        Instance { graph: turan_g, stands_for: "Turán T(12,4)", family: "oracle-sized Turán" },
+        Instance { graph: skew_g, stands_for: "Chung–Lu tail", family: "oracle-sized skew" },
+        Instance { graph: gnm_g, stands_for: "G(16,60)", family: "oracle-sized uniform" },
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,6 +151,28 @@ mod tests {
         let s = paper_suite_ds(0);
         assert_eq!(s.len(), 2);
         assert!(s[0].graph.name.ends_with(".ds"));
+    }
+
+    #[test]
+    fn scenario_matrix_families_and_names() {
+        for scale in 0..3 {
+            let s = scenario_matrix(scale);
+            assert_eq!(s.len(), 4);
+            for (inst, prefix) in
+                s.iter().zip(["clique-planted", "clique-turan", "clique-skew", "clique-gnm"])
+            {
+                assert!(inst.graph.name.starts_with(prefix), "{}", inst.graph.name);
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_matrix_is_oracle_sized() {
+        let s = scenario_matrix_tiny();
+        assert_eq!(s.len(), 4);
+        for inst in &s {
+            assert!(inst.graph.num_vertices() <= 16, "{}", inst.graph.name);
+        }
     }
 
     #[test]

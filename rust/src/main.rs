@@ -12,7 +12,7 @@ use pbt::engine::Problem;
 use pbt::graph::Graph;
 use pbt::instances;
 use pbt::metrics::{ascii_chart, fig10_series, fig9_series, paper_table, speedups};
-use pbt::problems::{BoundKind, DominatingSet, NQueens, VertexCover};
+use pbt::problems::{BoundKind, DominatingSet, MaxClique, NQueens, VertexCover};
 use pbt::runner::{self, RunConfig};
 use pbt::sim::{simulate, SimConfig};
 use pbt::util::table::Table;
@@ -89,6 +89,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let inst = args.get_str("instance", "phat1");
     println!("== pbt solve: problem={problem_kind} instance={inst} workers={}", cfg.workers);
 
+    let tree_shape = args.get_bool("tree-shape", false)?;
     match problem_kind.as_str() {
         "vc" => {
             let g = load_instance(&inst, scale)?;
@@ -98,12 +99,29 @@ fn cmd_solve(args: &Args) -> Result<()> {
                 _ => BoundKind::EdgesOverMaxDeg,
             };
             let p = VertexCover::with_bound(&g, bound);
-            report_run(&p, &cfg, |sol| format!("|cover| = {}", sol.len()));
+            if tree_shape {
+                solve_with_shape(&p, |c| format!("τ = {c}"));
+            } else {
+                report_run(&p, &cfg, |sol| format!("|cover| = {}", sol.len()));
+            }
         }
         "ds" => {
             let g = load_instance(&inst, scale)?;
             let p = DominatingSet::new(&g);
-            report_run(&p, &cfg, |sol| format!("|dominating set| = {}", sol.len()));
+            if tree_shape {
+                solve_with_shape(&p, |c| format!("γ = {c}"));
+            } else {
+                report_run(&p, &cfg, |sol| format!("|dominating set| = {}", sol.len()));
+            }
+        }
+        "clique" => {
+            let g = load_instance(&inst, scale)?;
+            let p = MaxClique::new(&g);
+            if tree_shape {
+                solve_with_shape(&p, |c| format!("ω = {}", p.clique_size(c)));
+            } else {
+                report_run(&p, &cfg, |sol| format!("|clique| = {} (ω)", sol.len()));
+            }
         }
         "queens" => {
             let n = args.get_usize("n", 10)? as u32;
@@ -138,6 +156,33 @@ fn report_run<P: Problem>(
     if let Some(sol) = &r.best_solution {
         println!("{}", describe(sol));
     }
+}
+
+/// `pbt solve --tree-shape`: serial run with the per-depth profile
+/// (docs/TREE_SHAPE.md).  Serial so the profile is exactly the canonical
+/// best-first-free tree, independent of worker count.
+fn solve_with_shape<P: Problem>(problem: &P, describe_cost: impl Fn(pbt::Cost) -> String) {
+    let r = pbt::engine::serial::solve_serial_with_shape(problem, u64::MAX);
+    println!(
+        "best cost: {:?}   time: {}   nodes: {}   pruned: {}",
+        r.best_cost,
+        human_duration(r.wall_secs),
+        r.stats.nodes,
+        r.stats.pruned,
+    );
+    if let Some(c) = r.best_cost {
+        println!("{}", describe_cost(c));
+    }
+    let shape = r.tree_shape.expect("shape collection was enabled");
+    println!("{}", shape.render_table().render());
+    let s = shape.summary();
+    println!(
+        "shape: depth {}   prune rate {:.1}%   subtree skew {:.2}x   half-mass depth {}",
+        s.max_depth,
+        s.prune_rate * 100.0,
+        s.subtree_skew,
+        s.depth_of_mass_half,
+    );
 }
 
 /// `pbt cluster <listen|join|run>` — multi-process PARALLEL-RB over the
@@ -179,7 +224,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             let p = DominatingSet::new(&g);
             run_cluster_mode(mode, args, &base, &p, tcp, wcfg, timeout)
         }
-        other => bail!("unknown problem {other:?} (cluster supports vc|ds)"),
+        "clique" => {
+            let p = MaxClique::new(&g);
+            run_cluster_mode(mode, args, &base, &p, tcp, wcfg, timeout)
+        }
+        other => bail!("unknown problem {other:?} (cluster supports vc|ds|clique)"),
     }
 }
 
@@ -544,11 +593,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let cores = args.get_usize("cores", 1024)?;
     let inst = args.get_str("instance", "phat1");
     let problem_kind = args.get_str("problem", "vc");
+    let mut worker = base.worker_config();
+    worker.collect_shape = args.get_bool("tree-shape", false)?;
     let sim_cfg = SimConfig {
         cores,
         latency: args.get_u64("latency", base.sim_latency)?,
         batch: args.get_u64("batch", base.sim_batch as u64)? as u32,
-        worker: base.worker_config(),
+        worker,
         ..Default::default()
     };
     println!("== pbt simulate: {problem_kind}/{inst} on {cores} virtual cores");
@@ -560,6 +611,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
         "ds" => {
             let p = DominatingSet::new(&g);
+            simulate(&p, &sim_cfg)
+        }
+        "clique" => {
+            let p = MaxClique::new(&g);
             simulate(&p, &sim_cfg)
         }
         other => bail!("unknown problem {other:?}"),
@@ -575,6 +630,17 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         report.events,
         if report.endgame_collapsed { "   (endgame collapsed)" } else { "" },
     );
+    if let Some(shape) = &report.tree_shape {
+        println!("{}", shape.render_table().render());
+        let s = shape.summary();
+        println!(
+            "shape: depth {}   prune rate {:.1}%   subtree skew {:.2}x   half-mass depth {}",
+            s.max_depth,
+            s.prune_rate * 100.0,
+            s.subtree_skew,
+            s.depth_of_mass_half,
+        );
+    }
     Ok(())
 }
 

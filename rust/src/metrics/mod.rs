@@ -1,8 +1,185 @@
 //! Experiment metrics: speedup/efficiency math and the paper-style table
-//! rows (Tables I/II, Figures 9/10), plus the job-lifecycle counters of
-//! the `pbt serve` daemon ([`ServerMetrics`]).
+//! rows (Tables I/II, Figures 9/10), the job-lifecycle counters of the
+//! `pbt serve` daemon ([`ServerMetrics`]), and the search-tree shape
+//! collector ([`TreeShape`]) that characterizes *where* in the tree the
+//! work lives — the per-tree-shape validation mts (arXiv:1709.07605) calls
+//! for, and the lens on the shallow-heavy clique trees of McCreesh &
+//! Prosser (arXiv:1401.5921).
 
 use crate::util::table::{thousands, Table};
+
+/// Per-depth profile of one search (or one worker's share of it).
+///
+/// Recorded by the engine stepper at every node visit, so the same numbers
+/// fall out of the serial solver, the thread runner and the virtual-time
+/// simulator; per-worker shapes [`merge`](TreeShape::merge) exactly because
+/// each node is visited once and keeps its global depth and root-child
+/// digit under donation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TreeShape {
+    /// Node visits per global depth.
+    pub nodes_at_depth: Vec<u64>,
+    /// Sum of reported child counts per depth (branching profile).
+    pub children_at_depth: Vec<u64>,
+    /// Subtrees cut by the bound, per depth (where pruning bites).
+    pub pruned_at_depth: Vec<u64>,
+    /// Solution nodes per depth.
+    pub solutions_at_depth: Vec<u64>,
+    /// Node visits under each root-child subtree (indexed by the first
+    /// digit of the global path) — the subtree-size skew donation fights.
+    pub top_subtrees: Vec<u64>,
+    /// Visits of the global root itself (no enclosing top-level subtree).
+    pub root_visits: u64,
+}
+
+fn bump(v: &mut Vec<u64>, i: usize, by: u64) {
+    if v.len() <= i {
+        v.resize(i + 1, 0);
+    }
+    v[i] += by;
+}
+
+impl TreeShape {
+    /// Record one node visit.
+    pub fn record(
+        &mut self,
+        depth: usize,
+        top_digit: Option<u32>,
+        children: u32,
+        pruned: bool,
+        solution: bool,
+    ) {
+        bump(&mut self.nodes_at_depth, depth, 1);
+        bump(&mut self.children_at_depth, depth, children as u64);
+        if pruned {
+            bump(&mut self.pruned_at_depth, depth, 1);
+        }
+        if solution {
+            bump(&mut self.solutions_at_depth, depth, 1);
+        }
+        match top_digit {
+            Some(d) => bump(&mut self.top_subtrees, d as usize, 1),
+            None => self.root_visits += 1,
+        }
+    }
+
+    /// Element-wise accumulation (per-worker → whole-run shape).
+    pub fn merge(&mut self, o: &TreeShape) {
+        for (i, &x) in o.nodes_at_depth.iter().enumerate() {
+            bump(&mut self.nodes_at_depth, i, x);
+        }
+        for (i, &x) in o.children_at_depth.iter().enumerate() {
+            bump(&mut self.children_at_depth, i, x);
+        }
+        for (i, &x) in o.pruned_at_depth.iter().enumerate() {
+            bump(&mut self.pruned_at_depth, i, x);
+        }
+        for (i, &x) in o.solutions_at_depth.iter().enumerate() {
+            bump(&mut self.solutions_at_depth, i, x);
+        }
+        for (i, &x) in o.top_subtrees.iter().enumerate() {
+            bump(&mut self.top_subtrees, i, x);
+        }
+        self.root_visits += o.root_visits;
+    }
+
+    pub fn total_nodes(&self) -> u64 {
+        self.nodes_at_depth.iter().sum()
+    }
+
+    /// Deepest depth any visit reached.
+    pub fn max_depth(&self) -> usize {
+        self.nodes_at_depth.len().saturating_sub(1)
+    }
+
+    /// Fraction of visits whose subtree the bound cut.
+    pub fn prune_rate(&self) -> f64 {
+        let total = self.total_nodes();
+        if total == 0 {
+            return 0.0;
+        }
+        self.pruned_at_depth.iter().sum::<u64>() as f64 / total as f64
+    }
+
+    /// Max/mean visit count over the root-child subtrees: 1.0 is perfectly
+    /// balanced, large values mean one subtree dominates (the donation
+    /// stress case).  Zero-visit subtrees (pruned or donated away before a
+    /// single visit) count toward the mean.
+    pub fn subtree_skew(&self) -> f64 {
+        if self.top_subtrees.is_empty() {
+            return 1.0;
+        }
+        let max = *self.top_subtrees.iter().max().unwrap() as f64;
+        let mean = self.top_subtrees.iter().sum::<u64>() as f64 / self.top_subtrees.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Smallest depth by which a fraction `q` of all visits has happened —
+    /// `depth_of_mass(0.5)` low means a shallow-heavy tree.
+    pub fn depth_of_mass(&self, q: f64) -> usize {
+        let total = self.total_nodes();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (d, &n) in self.nodes_at_depth.iter().enumerate() {
+            acc += n;
+            if acc >= target {
+                return d;
+            }
+        }
+        self.max_depth()
+    }
+
+    /// Condense to the flat, `Copy` summary carried by [`SweepRow`] and the
+    /// bench JSON.
+    pub fn summary(&self) -> TreeShapeSummary {
+        TreeShapeSummary {
+            total_nodes: self.total_nodes(),
+            max_depth: self.max_depth(),
+            prune_rate: self.prune_rate(),
+            subtree_skew: self.subtree_skew(),
+            depth_of_mass_half: self.depth_of_mass(0.5),
+        }
+    }
+
+    /// Per-depth table for `pbt solve --tree-shape` / `pbt simulate`.
+    pub fn render_table(&self) -> Table {
+        let mut t = Table::new(["Depth", "Nodes", "Avg branch", "Pruned", "Solutions"]);
+        for (d, &n) in self.nodes_at_depth.iter().enumerate() {
+            let branch = if n == 0 {
+                0.0
+            } else {
+                self.children_at_depth.get(d).copied().unwrap_or(0) as f64 / n as f64
+            };
+            t.row([
+                format!("{d}"),
+                thousands(n),
+                format!("{branch:.2}"),
+                thousands(self.pruned_at_depth.get(d).copied().unwrap_or(0)),
+                thousands(self.solutions_at_depth.get(d).copied().unwrap_or(0)),
+            ]);
+        }
+        t
+    }
+}
+
+/// Flat tree-shape digest: the numbers that survive into [`SweepRow`] and
+/// `BENCH_*.json`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TreeShapeSummary {
+    pub total_nodes: u64,
+    pub max_depth: usize,
+    pub prune_rate: f64,
+    pub subtree_skew: f64,
+    /// Depth by which half of all node visits have happened.
+    pub depth_of_mass_half: usize,
+}
 
 /// Job-lifecycle counters of one `pbt serve` daemon process, reported by
 /// `pbt server-stats` and reset on daemon restart (journals persist, these
@@ -76,6 +253,8 @@ pub struct SweepRow {
     /// bench suite records it per sweep point).
     pub tasks_donated: u64,
     pub best_cost: Option<u64>,
+    /// Tree-shape digest when the sweep ran with shape collection on.
+    pub shape: Option<TreeShapeSummary>,
 }
 
 /// Node-visit throughput; 0 when no time elapsed (degenerate runs must not
@@ -219,11 +398,25 @@ fn log2_label(c: usize) -> String {
 mod tests {
     use super::*;
 
+    fn row(instance: &str, cores: usize, time_secs: f64, nodes: u64, best: u64) -> SweepRow {
+        SweepRow {
+            instance: instance.into(),
+            cores,
+            time_secs,
+            t_s: 10.0,
+            t_r: 12.0,
+            nodes,
+            tasks_donated: 20,
+            best_cost: Some(best),
+            shape: None,
+        }
+    }
+
     fn rows() -> Vec<SweepRow> {
         vec![
-            SweepRow { instance: "a".into(), cores: 2, time_secs: 8.0, t_s: 10.0, t_r: 12.0, nodes: 100, tasks_donated: 20, best_cost: Some(5) },
-            SweepRow { instance: "a".into(), cores: 4, time_secs: 4.0, t_s: 11.0, t_r: 20.0, nodes: 100, tasks_donated: 44, best_cost: Some(5) },
-            SweepRow { instance: "b".into(), cores: 2, time_secs: 3.0, t_s: 5.0, t_r: 6.0, nodes: 50, tasks_donated: 10, best_cost: Some(3) },
+            row("a", 2, 8.0, 100, 5),
+            row("a", 4, 4.0, 100, 5),
+            row("b", 2, 3.0, 50, 3),
         ]
     }
 
@@ -283,5 +476,71 @@ mod tests {
         let s = fig10_series(&rows());
         assert_eq!(s[0].1[0].1, (10.0f64).log2());
         assert_eq!(s[0].1[0].2, (12.0f64).log2());
+    }
+
+    #[test]
+    fn tree_shape_records_and_derives() {
+        let mut ts = TreeShape::default();
+        // Root with 3 children, then 4 visits under subtree 0, 1 under 2.
+        ts.record(0, None, 3, false, false);
+        ts.record(1, Some(0), 2, false, false);
+        ts.record(2, Some(0), 0, false, true);
+        ts.record(2, Some(0), 0, true, false);
+        ts.record(3, Some(0), 0, false, true);
+        ts.record(1, Some(2), 0, true, false);
+        assert_eq!(ts.total_nodes(), 6);
+        assert_eq!(ts.max_depth(), 3);
+        assert_eq!(ts.nodes_at_depth, vec![1, 2, 2, 1]);
+        assert_eq!(ts.root_visits, 1);
+        // Subtree 1 never visited (donated/pruned): counted as zero.
+        assert_eq!(ts.top_subtrees, vec![4, 0, 1]);
+        assert!((ts.prune_rate() - 2.0 / 6.0).abs() < 1e-12);
+        // max 4 / mean (5/3)
+        assert!((ts.subtree_skew() - 4.0 / (5.0 / 3.0)).abs() < 1e-12);
+        // Half of 6 visits = 3, reached by depth 1 (1 + 2).
+        assert_eq!(ts.depth_of_mass(0.5), 1);
+        assert_eq!(ts.depth_of_mass(1.0), 3);
+        let s = ts.summary();
+        assert_eq!(s.total_nodes, 6);
+        assert_eq!(s.depth_of_mass_half, 1);
+    }
+
+    #[test]
+    fn tree_shape_merge_equals_single_collector() {
+        // Two workers splitting the same visits merge to the whole.
+        let mut all = TreeShape::default();
+        let mut a = TreeShape::default();
+        let mut b = TreeShape::default();
+        let visits = [
+            (0usize, None, 2u32, false, false),
+            (1, Some(0u32), 1, false, false),
+            (2, Some(0), 0, true, false),
+            (1, Some(1), 0, false, true),
+        ];
+        for (i, &(d, top, c, p, s)) in visits.iter().enumerate() {
+            all.record(d, top, c, p, s);
+            if i % 2 == 0 {
+                a.record(d, top, c, p, s);
+            } else {
+                b.record(d, top, c, p, s);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+    }
+
+    #[test]
+    fn tree_shape_degenerate_cases() {
+        let ts = TreeShape::default();
+        assert_eq!(ts.total_nodes(), 0);
+        assert_eq!(ts.prune_rate(), 0.0);
+        assert_eq!(ts.subtree_skew(), 1.0);
+        assert_eq!(ts.depth_of_mass(0.5), 0);
+        let table = ts.render_table().render();
+        assert!(table.contains("Depth"));
+        let mut one = TreeShape::default();
+        one.record(0, None, 0, false, true);
+        assert_eq!(one.subtree_skew(), 1.0, "no top subtrees recorded yet");
+        assert!(one.render_table().render().contains("1"));
     }
 }

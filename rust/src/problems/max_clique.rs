@@ -1,14 +1,214 @@
-//! MAX CLIQUE via VERTEX COVER on the complement graph.
+//! MAX CLIQUE as a first-class branch-and-bound problem, plus the classical
+//! complement-graph reduction.
+//!
+//! ## Branch and bound (Tomita-style, multiway)
+//!
+//! A node holds the current clique `Q` and a candidate set `P` (vertices
+//! adjacent to all of `Q` and not yet branched on at an ancestor).  The
+//! node's `evaluate` greedy-colors `P`: a proper coloring with `k` colors
+//! proves no clique in the subtree exceeds `|Q| + k`, the standard MCQ/MCR
+//! bound (Tomita & Seki; cf. McCreesh & Prosser, arXiv:1401.5921).  Children
+//! are the candidates themselves ordered by descending color (ties: id
+//! ascending) — child `k` moves branch vertex `b_k` into the clique and
+//! narrows the candidates to `(P \ {b_0..b_{k-1}}) ∩ N(b_k)`, so every
+//! maximum clique is enumerated exactly once and sibling subtrees shrink
+//! with `k`.  This is the first workload with *non-binary* branching, and
+//! its shallow-heavy, skewed trees are the donation stress test the
+//! tree-shape metrics (`metrics::TreeShape`) were built to observe.
+//!
+//! ## Cost model
+//!
+//! The engine minimizes, and treats `bound == 0` as "no bound", so clique
+//! size `|Q|` maps to cost `1 + n − |Q|` (the `+1` keeps every bound ≥ 1 and
+//! therefore active — same trick as the engine's toy tree).  A solution of
+//! cost `c` is a clique of size `n + 1 − c`; the coloring bound becomes
+//! `1 + n − (|Q| + k)`.
+//!
+//! ## Complement identity
 //!
 //! The DIMACS `.clq` benchmarks (the paper's p_hat family) are clique
-//! instances; the classical identity `ω(G) = n − τ(Ḡ)` (max clique = n −
-//! min vertex cover of the complement) lets the VERTEX COVER engine solve
-//! them directly — this is also how the paper's "minimum vertex cover of
-//! size 635 on 700 vertices" numbers arise.
+//! instances; `ω(G) = n − τ(Ḡ)` lets the VERTEX COVER engine solve them too
+//! ([`max_clique_via_vc`]) — the cross-check both the unit tests and the
+//! oracle suite pin against the B&B solver.
 
 use crate::engine::serial::solve_serial;
+use crate::engine::{NodeEval, Problem, SearchState};
 use crate::graph::Graph;
 use crate::problems::vertex_cover::VertexCover;
+use crate::util::BitSet;
+use crate::Cost;
+
+/// The MAX CLIQUE problem over an input graph.
+pub struct MaxClique {
+    name: String,
+    n: usize,
+    adj: Vec<BitSet>,
+}
+
+impl MaxClique {
+    pub fn new(g: &Graph) -> Self {
+        let n = g.num_vertices();
+        let mut adj = vec![BitSet::new(n); n];
+        for (u, v) in g.edges() {
+            adj[u as usize].insert(v as usize);
+            adj[v as usize].insert(u as usize);
+        }
+        MaxClique { name: g.name.clone(), n, adj }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Convert an engine cost (`1 + n − |Q|`) back to a clique size.
+    pub fn clique_size(&self, cost: Cost) -> usize {
+        self.n + 1 - cost as usize
+    }
+}
+
+/// Per-descend frame: the stack lengths `undo` truncates back to.
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    clique_len: usize,
+    branch_len: usize,
+    cands_len: usize,
+}
+
+/// Search state: clique under construction + per-depth candidate sets +
+/// per-node branch lists (pushed by `evaluate`, mirroring `VcState`'s
+/// branch-vertex stack discipline).
+pub struct CliqueState {
+    n: usize,
+    adj: Vec<BitSet>,
+    clique: Vec<u32>,
+    /// Candidate-set stack; `cands.last()` is `P` at the current node.
+    cands: Vec<BitSet>,
+    /// Branch list pushed by each non-leaf node's `evaluate`: candidates in
+    /// descending-color order (the DFS child order).
+    branch: Vec<Vec<u32>>,
+    frames: Vec<Frame>,
+    /// Reusable color-class scratch (cleared after each coloring).
+    classes: Vec<BitSet>,
+}
+
+impl CliqueState {
+    /// Greedy-color the current candidate set and push the branch list.
+    /// Returns the number of colors used (the subtree's clique-size slack).
+    fn color_and_push_branch(&mut self) -> usize {
+        let p = self.cands.last().expect("candidate stack non-empty");
+        let mut order: Vec<(u32, u32)> = Vec::with_capacity(p.len());
+        let mut used = 0usize;
+        for v in p.iter() {
+            let mut c = 0usize;
+            while c < used && self.classes[c].intersection_len(&self.adj[v]) != 0 {
+                c += 1;
+            }
+            if c == used {
+                if used == self.classes.len() {
+                    self.classes.push(BitSet::new(self.n));
+                }
+                used += 1;
+            }
+            self.classes[c].insert(v);
+            order.push((c as u32, v as u32));
+        }
+        for cls in &mut self.classes[..used] {
+            cls.clear();
+        }
+        // Children in descending color (MCQ expansion order); id ascending
+        // on ties keeps the tree deterministic (§II).
+        order.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        self.branch.push(order.into_iter().map(|(_, v)| v).collect());
+        used
+    }
+}
+
+impl SearchState for CliqueState {
+    type Sol = Vec<u32>;
+
+    fn evaluate(&mut self) -> NodeEval {
+        let p_len = self.cands.last().expect("candidate stack non-empty").len();
+        if p_len == 0 {
+            // No extension possible: the clique is complete along this path.
+            let cost = (1 + self.n - self.clique.len()) as Cost;
+            return NodeEval { children: 0, solution: Some(cost), bound: cost };
+        }
+        let colors = self.color_and_push_branch();
+        NodeEval {
+            children: p_len as u32,
+            solution: None,
+            bound: (1 + self.n - self.clique.len() - colors) as Cost,
+        }
+    }
+
+    fn apply(&mut self, k: u32) {
+        let list = self.branch.last().expect("apply after evaluate");
+        let bv = list[k as usize];
+        self.frames.push(Frame {
+            clique_len: self.clique.len(),
+            branch_len: self.branch.len(),
+            cands_len: self.cands.len(),
+        });
+        // Child candidates: (P \ {b_0..b_{k-1}}) ∩ N(b_k).  Earlier siblings
+        // are excluded so cliques containing them are only counted under
+        // their own branch; b_k drops out via N(b_k) (no self-loops).
+        let mut child = self.cands.last().expect("candidate stack non-empty").clone();
+        for &b in &list[..k as usize] {
+            child.remove(b as usize);
+        }
+        child.intersect_with(&self.adj[bv as usize]);
+        self.clique.push(bv);
+        self.cands.push(child);
+    }
+
+    fn undo(&mut self) {
+        let f = self.frames.pop().expect("undo without apply");
+        self.clique.truncate(f.clique_len);
+        self.branch.truncate(f.branch_len);
+        self.cands.truncate(f.cands_len);
+    }
+
+    fn solution(&self) -> Vec<u32> {
+        self.clique.clone()
+    }
+}
+
+impl Problem for MaxClique {
+    type State = CliqueState;
+
+    fn make_state(&self) -> CliqueState {
+        CliqueState {
+            n: self.n,
+            adj: self.adj.clone(),
+            clique: Vec::with_capacity(self.n),
+            cands: vec![BitSet::full(self.n)],
+            branch: Vec::with_capacity(32),
+            frames: Vec::with_capacity(32),
+            classes: Vec::new(),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("max-clique/{}", self.name)
+    }
+}
+
+/// `true` iff `vs` is pairwise adjacent in `g` (a clique witness check).
+pub fn is_clique(g: &Graph, vs: &[u32]) -> bool {
+    vs.iter().enumerate().all(|(i, &u)| vs[i + 1..].iter().all(|&v| g.has_edge(u, v)))
+}
+
+/// Maximum clique size and one witness via the branch-and-bound solver.
+/// Returns `None` iff the node budget ran out before the proof completed.
+pub fn max_clique_bb(g: &Graph, node_budget: u64) -> Option<(usize, Vec<u32>)> {
+    let p = MaxClique::new(g);
+    let r = solve_serial(&p, node_budget);
+    if r.budget_exhausted {
+        return None;
+    }
+    let clique = r.best_solution?;
+    Some((clique.len(), clique))
+}
 
 /// Maximum clique size and one witness clique, via VC on the complement.
 pub fn max_clique_via_vc(g: &Graph, node_budget: u64) -> Option<(usize, Vec<u32>)> {
@@ -29,47 +229,127 @@ pub fn max_clique_via_vc(g: &Graph, node_budget: u64) -> Option<(usize, Vec<u32>
 mod tests {
     use super::*;
     use crate::instances::generators;
-
-    fn is_clique(g: &Graph, vs: &[u32]) -> bool {
-        vs.iter().enumerate().all(|(i, &u)| vs[i + 1..].iter().all(|&v| g.has_edge(u, v)))
-    }
+    use crate::testing::oracle;
 
     #[test]
     fn triangle_is_its_own_clique() {
         let g = Graph::from_edges("tri", 3, &[(0, 1), (1, 2), (0, 2)]).unwrap();
-        let (size, clique) = max_clique_via_vc(&g, u64::MAX).unwrap();
-        assert_eq!(size, 3);
-        assert!(is_clique(&g, &clique));
+        for solver in [max_clique_bb, max_clique_via_vc] {
+            let (size, clique) = solver(&g, u64::MAX).unwrap();
+            assert_eq!(size, 3);
+            assert!(is_clique(&g, &clique));
+        }
     }
 
     #[test]
     fn path_has_clique_two() {
         let g = Graph::from_edges("p4", 4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
-        let (size, clique) = max_clique_via_vc(&g, u64::MAX).unwrap();
-        assert_eq!(size, 2);
-        assert!(is_clique(&g, &clique));
+        for solver in [max_clique_bb, max_clique_via_vc] {
+            let (size, clique) = solver(&g, u64::MAX).unwrap();
+            assert_eq!(size, 2);
+            assert!(is_clique(&g, &clique));
+        }
+    }
+
+    #[test]
+    fn edgeless_and_complete_extremes() {
+        let empty = Graph::from_edges("none", 5, &[]).unwrap();
+        assert_eq!(max_clique_bb(&empty, u64::MAX).unwrap().0, 1);
+        let mut edges = Vec::new();
+        for u in 0..6u32 {
+            for v in (u + 1)..6 {
+                edges.push((u, v));
+            }
+        }
+        let k6 = Graph::from_edges("k6", 6, &edges).unwrap();
+        let (size, clique) = max_clique_bb(&k6, u64::MAX).unwrap();
+        assert_eq!(size, 6);
+        assert!(is_clique(&k6, &clique));
     }
 
     #[test]
     fn planted_clique_found() {
-        // gnm + a planted K5 on vertices 0..5
-        let mut edges = generators::gnm(14, 20, 5).edges();
-        for u in 0..5u32 {
-            for v in (u + 1)..5 {
-                if !edges.contains(&(u, v)) {
-                    edges.push((u, v));
-                }
-            }
-        }
-        let g = Graph::from_edges("planted", 14, &edges).unwrap();
-        let (size, clique) = max_clique_via_vc(&g, u64::MAX).unwrap();
+        let g = generators::planted_clique(14, 20, 5, 5);
+        let (size, clique) = max_clique_bb(&g, u64::MAX).unwrap();
         assert!(size >= 5);
         assert!(is_clique(&g, &clique));
     }
 
     #[test]
+    fn turan_clique_equals_parts() {
+        // Complete multipartite T(n, r) has ω = r exactly.
+        let g = generators::turan_like(12, 4);
+        assert_eq!(max_clique_bb(&g, u64::MAX).unwrap().0, 4);
+    }
+
+    #[test]
+    fn bb_matches_oracle_and_complement_route() {
+        for seed in 0..8u64 {
+            let n = 10 + (seed as usize % 6);
+            let m = (n * (n - 1) / 2).min(2 * n + 2 * seed as usize);
+            let g = generators::gnm(n, m, seed);
+            let expected = oracle::max_clique(&g).0;
+            let (bb, witness) = max_clique_bb(&g, u64::MAX).unwrap();
+            let (via_vc, _) = max_clique_via_vc(&g, u64::MAX).unwrap();
+            assert_eq!(bb, expected, "seed={seed} n={n} m={m}");
+            assert_eq!(via_vc, expected, "seed={seed} n={n} m={m}");
+            assert_eq!(witness.len(), bb);
+            assert!(is_clique(&g, &witness), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn coloring_bound_prunes() {
+        // The coloring bound must cut work relative to pure enumeration on a
+        // dense instance (prune counter strictly positive).
+        let g = generators::gnm(18, 90, 4);
+        let p = MaxClique::new(&g);
+        let r = solve_serial(&p, u64::MAX);
+        assert!(r.stats.pruned > 0, "no subtree was ever cut: {:?}", r.stats);
+    }
+
+    #[test]
+    fn state_undo_restores_exactly() {
+        let g = generators::gnm(16, 60, 7);
+        let p = MaxClique::new(&g);
+        let mut s = p.make_state();
+        let ev = s.evaluate();
+        assert!(ev.children >= 2);
+        let cands0 = s.cands.last().unwrap().clone();
+        let clique0 = s.clique.len();
+        for k in 0..2u32 {
+            s.apply(k);
+            s.evaluate();
+            s.undo();
+            assert_eq!(s.cands.last().unwrap(), &cands0, "child {k}");
+            assert_eq!(s.clique.len(), clique0, "child {k}");
+            assert_eq!(s.cands.len(), 1, "child {k}");
+        }
+    }
+
+    #[test]
+    fn deterministic_tree() {
+        let g = generators::gnm(15, 50, 9);
+        let p = MaxClique::new(&g);
+        let a = solve_serial(&p, u64::MAX);
+        let b = solve_serial(&p, u64::MAX);
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.best_cost, b.best_cost);
+    }
+
+    #[test]
+    fn cost_maps_back_to_clique_size() {
+        let g = generators::gnm(12, 30, 3);
+        let p = MaxClique::new(&g);
+        let r = solve_serial(&p, u64::MAX);
+        let size = p.clique_size(r.best_cost.unwrap());
+        assert_eq!(size, r.best_solution.unwrap().len());
+    }
+
+    #[test]
     fn budget_exhaustion_returns_none() {
         let g = generators::gnm(20, 100, 1);
+        assert!(max_clique_bb(&g, 1).is_none());
         assert!(max_clique_via_vc(&g, 1).is_none());
     }
 }

@@ -9,8 +9,10 @@
 //!   set (unique-element) reduction; `ceil(uncovered/maxsize)` bound.
 //! * [`nqueens`] — N-QUEENS solution counting, the arbitrary-branching-
 //!   factor demonstration of §IV-C (one child per feasible column).
-//! * [`max_clique`] — MAX CLIQUE via VERTEX COVER on the complement graph
-//!   (the DIMACS `.clq` benchmarks are clique instances).
+//! * [`max_clique`] — MAX CLIQUE branch-and-bound with a greedy-coloring
+//!   bound and Tomita-style multiway branching over bitset candidate sets
+//!   (the DIMACS `.clq` benchmarks are clique instances); the complement
+//!   route `ω(G) = n − τ(Ḡ)` is kept as a cross-check.
 //! * [`vertex_cover_k`] — the parameterized decision variant (cover ≤ k)
 //!   with budget pruning and the high-degree kernelization rule [3], [20].
 
@@ -21,7 +23,7 @@ pub mod nqueens;
 pub mod max_clique;
 
 pub use dominating_set::DominatingSet;
-pub use max_clique::max_clique_via_vc;
+pub use max_clique::{is_clique, max_clique_bb, max_clique_via_vc, MaxClique};
 pub use nqueens::NQueens;
 pub use vertex_cover::{BoundKind, VertexCover};
 pub use vertex_cover_k::VertexCoverK;

@@ -550,7 +550,11 @@ where
             let p = DominatingSet::new(&g);
             Ok(exec::run(&p, init, best0, sol0, nodes0, eopts, control, on_checkpoint))
         }
-        other => bail!("unknown problem {other:?} (serve supports vc|ds)"),
+        "clique" => {
+            let p = crate::problems::MaxClique::new(&g);
+            Ok(exec::run(&p, init, best0, sol0, nodes0, eopts, control, on_checkpoint))
+        }
+        other => bail!("unknown problem {other:?} (serve supports vc|ds|clique)"),
     }
 }
 
@@ -672,8 +676,11 @@ fn with_job(
 }
 
 fn handle_submit(state: &Arc<ServerState>, spec: JobSpec) -> Response {
-    if !matches!(spec.problem.as_str(), "vc" | "ds") {
-        return Response::Err(format!("unknown problem {:?} (serve supports vc|ds)", spec.problem));
+    if !matches!(spec.problem.as_str(), "vc" | "ds" | "clique") {
+        return Response::Err(format!(
+            "unknown problem {:?} (serve supports vc|ds|clique)",
+            spec.problem
+        ));
     }
     let id = state.next_id.fetch_add(1, Ordering::SeqCst);
     // SPEC is journaled (and synced) before the id is acknowledged: an

@@ -78,6 +78,9 @@ pub struct SimReport {
     pub endgame_collapsed: bool,
     /// Sum over cores of ticks spent visiting nodes (utilization).
     pub busy_ticks_total: u64,
+    /// Whole-run tree shape, merged from the per-worker collectors in rank
+    /// order (deterministic).  `Some` iff `worker.collect_shape` was set.
+    pub tree_shape: Option<crate::metrics::TreeShape>,
 }
 
 impl SimReport {
@@ -245,13 +248,18 @@ pub fn simulate<P: Problem>(problem: &P, cfg: &SimConfig) -> SimReport {
     let mut best = COST_INF;
     let mut best_solution_rank = None;
     let mut per_worker = Vec::with_capacity(c);
-    for (r, w) in workers.iter().enumerate() {
+    let mut tree_shape: Option<crate::metrics::TreeShape> = None;
+    for (r, w) in workers.iter_mut().enumerate() {
         if w.best < best && w.best_solution.is_some() {
             best = w.best;
             best_solution_rank = Some(r);
         }
         best = best.min(w.best);
         per_worker.push(w.stats);
+        // Rank order keeps the merged shape bit-reproducible.
+        if let Some(sh) = w.take_tree_shape() {
+            tree_shape.get_or_insert_with(Default::default).merge(&sh);
+        }
     }
     let _ = best_solution_rank;
     SimReport {
@@ -261,6 +269,7 @@ pub fn simulate<P: Problem>(problem: &P, cfg: &SimConfig) -> SimReport {
         events: n_events,
         endgame_collapsed,
         busy_ticks_total,
+        tree_shape,
     }
 }
 
@@ -406,5 +415,39 @@ mod tests {
         let r = simulate(&p, &SimConfig { cores: 1, ..Default::default() });
         assert_eq!(r.total_nodes(), serial.stats.nodes);
         assert_eq!(r.best_cost, serial.best_cost);
+    }
+
+    #[test]
+    fn sim_tree_shape_is_deterministic_for_vc_and_clique() {
+        use crate::metrics::TreeShape;
+        use crate::problems::MaxClique;
+
+        let cfg = SimConfig {
+            cores: 4,
+            worker: WorkerConfig { collect_shape: true, ..Default::default() },
+            ..Default::default()
+        };
+        let g = generators::gnm(20, 70, 9);
+
+        let check = |name: &str, run: &dyn Fn() -> SimReport| {
+            let a = run();
+            let b = run();
+            let sa: TreeShape = a.tree_shape.expect("shape collected");
+            let sb: TreeShape = b.tree_shape.expect("shape collected");
+            // Bit-reproducible: identical runs yield the identical profile.
+            assert_eq!(sa.nodes_at_depth, sb.nodes_at_depth, "{name}");
+            assert_eq!(sa.pruned_at_depth, sb.pruned_at_depth, "{name}");
+            assert_eq!(sa.solutions_at_depth, sb.solutions_at_depth, "{name}");
+            assert_eq!(sa.top_subtrees, sb.top_subtrees, "{name}");
+            // Conservation: every visited node was recorded exactly once.
+            assert_eq!(sa.total_nodes(), a.total_nodes(), "{name}");
+            assert_eq!(sa.root_visits, 1, "{name}");
+        };
+        check("vc", &|| simulate(&VertexCover::new(&g), &cfg));
+        check("clique", &|| simulate(&MaxClique::new(&g), &cfg));
+
+        // Shape is off by default.
+        let plain = simulate(&VertexCover::new(&g), &SimConfig { cores: 4, ..Default::default() });
+        assert!(plain.tree_shape.is_none());
     }
 }

@@ -1,9 +1,14 @@
-//! `proptest_lite`: an in-house property-testing micro-framework (the
-//! offline crate set has no proptest; see DESIGN.md "Substitutions").
+//! Test-support machinery shared by unit and integration suites.
 //!
-//! Deterministic: cases derive from a fixed seed, so failures are
-//! reproducible; on failure the failing case index and inputs are printed.
+//! * [`proptest_lite`] — an in-house property-testing micro-framework (the
+//!   offline crate set has no proptest; see DESIGN.md "Substitutions").
+//!   Deterministic: cases derive from a fixed seed, so failures are
+//!   reproducible; on failure the failing case index and inputs are printed.
+//! * [`oracle`] — exhaustive bitmask oracles (max clique, min VC, min DS)
+//!   for graphs ≤ 16 vertices: the ground truth every solver is
+//!   cross-validated against.
 
+pub mod oracle;
 pub mod proptest_lite;
 
 pub use proptest_lite::{Gen, Runner};

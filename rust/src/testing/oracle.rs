@@ -1,0 +1,161 @@
+//! Exhaustive bitmask oracles for tiny graphs (≤ 16 vertices): ground truth
+//! for the cross-validation suite.  Independent of the engine, the problem
+//! plug-ins, *and* the older `brute_force_vc`/`brute_force_ds` helpers —
+//! every subset of vertices is enumerated as a `u32` mask, so a bug shared
+//! with the solvers under test cannot hide here.
+//!
+//! Witnesses are deterministic: the first optimum in ascending mask order.
+
+use crate::graph::Graph;
+
+const MAX_N: usize = 16;
+
+/// Per-vertex neighbourhood masks. Panics when the graph is too large to
+/// enumerate (the oracle is a test fixture, not a solver).
+fn adj_masks(g: &Graph) -> Vec<u32> {
+    let n = g.num_vertices();
+    assert!(n <= MAX_N, "oracle only enumerates graphs with ≤ {MAX_N} vertices, got {n}");
+    let mut adj = vec![0u32; n];
+    for (u, v) in g.edges() {
+        adj[u as usize] |= 1 << v;
+        adj[v as usize] |= 1 << u;
+    }
+    adj
+}
+
+fn mask_vertices(mask: u32) -> Vec<u32> {
+    (0..32).filter(|&v| mask & (1 << v) != 0).collect()
+}
+
+fn is_clique_mask(mask: u32, adj: &[u32]) -> bool {
+    let mut m = mask;
+    while m != 0 {
+        let v = m.trailing_zeros() as usize;
+        m &= m - 1;
+        if (mask & !(1u32 << v)) & !adj[v] != 0 {
+            return false;
+        }
+    }
+    true
+}
+
+/// Maximum clique size and the first witness in ascending mask order.
+pub fn max_clique(g: &Graph) -> (usize, Vec<u32>) {
+    let n = g.num_vertices();
+    let adj = adj_masks(g);
+    let mut best = 0u32;
+    for mask in 0u32..(1u32 << n) {
+        if mask.count_ones() > best.count_ones() && is_clique_mask(mask, &adj) {
+            best = mask;
+        }
+    }
+    (best.count_ones() as usize, mask_vertices(best))
+}
+
+/// Minimum vertex cover size and the first witness in ascending mask order.
+pub fn min_vertex_cover(g: &Graph) -> (usize, Vec<u32>) {
+    let n = g.num_vertices();
+    let edges = g.edges();
+    let mut best = if n == 0 { 0 } else { (1u32 << n) - 1 };
+    for mask in 0u32..(1u32 << n) {
+        if mask.count_ones() < best.count_ones()
+            && edges.iter().all(|&(u, v)| mask & (1 << u) != 0 || mask & (1 << v) != 0)
+        {
+            best = mask;
+        }
+    }
+    (best.count_ones() as usize, mask_vertices(best))
+}
+
+/// Minimum dominating set size and the first witness in ascending mask
+/// order.  Every vertex must be in the set or adjacent to a member.
+pub fn min_dominating_set(g: &Graph) -> (usize, Vec<u32>) {
+    let n = g.num_vertices();
+    let adj = adj_masks(g);
+    let mut best = if n == 0 { 0 } else { (1u32 << n) - 1 };
+    for mask in 0u32..(1u32 << n) {
+        if mask.count_ones() < best.count_ones()
+            && (0..n).all(|v| mask & (1 << v) != 0 || adj[v] & mask != 0)
+        {
+            best = mask;
+        }
+    }
+    (best.count_ones() as usize, mask_vertices(best))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instances::generators;
+    use crate::problems::dominating_set::brute_force_ds;
+    use crate::problems::vertex_cover::brute_force_vc;
+
+    #[test]
+    fn hand_checked_graphs() {
+        let tri = Graph::from_edges("tri", 3, &[(0, 1), (1, 2), (0, 2)]).unwrap();
+        assert_eq!(max_clique(&tri), (3, vec![0, 1, 2]));
+        assert_eq!(min_vertex_cover(&tri).0, 2);
+        assert_eq!(min_dominating_set(&tri).0, 1);
+
+        let p4 = Graph::from_edges("p4", 4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        assert_eq!(max_clique(&p4).0, 2);
+        assert_eq!(min_vertex_cover(&p4).0, 2);
+        assert_eq!(min_dominating_set(&p4).0, 2);
+
+        let star = Graph::from_edges("star", 5, &[(0, 1), (0, 2), (0, 3), (0, 4)]).unwrap();
+        assert_eq!(max_clique(&star).0, 2);
+        assert_eq!(min_vertex_cover(&star), (1, vec![0]));
+        assert_eq!(min_dominating_set(&star), (1, vec![0]));
+    }
+
+    #[test]
+    fn degenerate_graphs() {
+        let empty = Graph::from_edges("e0", 0, &[]).unwrap();
+        assert_eq!(max_clique(&empty).0, 0);
+        assert_eq!(min_vertex_cover(&empty).0, 0);
+        assert_eq!(min_dominating_set(&empty).0, 0);
+
+        let edgeless = Graph::from_edges("e4", 4, &[]).unwrap();
+        assert_eq!(max_clique(&edgeless).0, 1);
+        assert_eq!(min_vertex_cover(&edgeless).0, 0);
+        assert_eq!(min_dominating_set(&edgeless).0, 4);
+    }
+
+    #[test]
+    fn witnesses_are_valid_and_optimal_sized() {
+        let g = generators::gnm(12, 30, 11);
+        let (w, clique) = max_clique(&g);
+        assert_eq!(clique.len(), w);
+        assert!(crate::problems::is_clique(&g, &clique));
+        let (tau, cover) = min_vertex_cover(&g);
+        assert_eq!(cover.len(), tau);
+        assert!(g.is_vertex_cover(&cover));
+        let (gamma, ds) = min_dominating_set(&g);
+        assert_eq!(ds.len(), gamma);
+        assert!(g.is_dominating_set(&ds));
+    }
+
+    #[test]
+    fn agrees_with_legacy_brute_force_helpers() {
+        for seed in 0..6u64 {
+            let g = generators::gnm(11, 24, seed);
+            assert_eq!(min_vertex_cover(&g).0, brute_force_vc(&g), "seed={seed}");
+            assert_eq!(min_dominating_set(&g).0, brute_force_ds(&g), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn complement_identity_holds() {
+        // ω(G) = n − τ(Ḡ) on random tiny graphs — the oracle-level version
+        // of the identity the clique solvers rely on.
+        for seed in 0..6u64 {
+            let g = generators::gnm(10, 20, seed);
+            let comp = g.complement("comp".to_string());
+            assert_eq!(
+                max_clique(&g).0,
+                g.num_vertices() - min_vertex_cover(&comp).0,
+                "seed={seed}"
+            );
+        }
+    }
+}

@@ -80,6 +80,14 @@ impl BitSet {
         }
     }
 
+    /// In-place intersection (`self ∩ other`) — candidate-set narrowing in
+    /// the MAX-CLIQUE branch step.
+    pub fn intersect_with(&mut self, other: &BitSet) {
+        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+            *a &= b;
+        }
+    }
+
     /// In-place subtraction (`self \ other`).
     pub fn subtract(&mut self, other: &BitSet) {
         for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
@@ -192,6 +200,21 @@ mod tests {
         assert!(a.contains(1) && a.contains(2));
         a.subtract(&b);
         assert!(a.contains(1) && !a.contains(2));
+    }
+
+    #[test]
+    fn intersect_with_narrows() {
+        let mut a = BitSet::new(128);
+        let mut b = BitSet::new(128);
+        for i in [3usize, 64, 70, 100] {
+            a.insert(i);
+        }
+        for i in [64usize, 100, 101] {
+            b.insert(i);
+        }
+        a.intersect_with(&b);
+        let got: Vec<usize> = a.iter().collect();
+        assert_eq!(got, vec![64, 100]);
     }
 
     #[test]

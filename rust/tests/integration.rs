@@ -11,7 +11,8 @@ use pbt::engine::{Problem, StepResult, Stepper};
 use pbt::instances::{dimacs, generators, paper_suite_ds, paper_suite_vc};
 use pbt::problems::dominating_set::brute_force_ds;
 use pbt::problems::vertex_cover::brute_force_vc;
-use pbt::problems::{DominatingSet, NQueens, VertexCover};
+use pbt::problems::{is_clique, max_clique_bb, DominatingSet, MaxClique, NQueens, VertexCover};
+use pbt::testing::oracle;
 use pbt::runner::{self, RunConfig};
 use pbt::sim::{simulate, SimConfig};
 use pbt::{Cost, COST_INF};
@@ -218,6 +219,93 @@ fn max_clique_via_complement_on_suite() {
         }
     }
     assert_eq!(size, clique.len());
+}
+
+/// ISSUE 6 satellite: checkpoint/resume and multi-worker donation on a
+/// MAX-CLIQUE tree — the first workload with non-binary branching, so
+/// CONVERTINDEX replay and the two-row donation bookkeeping see child
+/// counts > 2 at every depth.  All routes must land on the exact serial
+/// optimum.
+#[test]
+fn clique_checkpoint_and_donation_reach_serial_optimum() {
+    use pbt::coordinator::Worker;
+    let g = generators::planted_clique(40, 560, 9, 61); // = `clique-planted` at scale 0
+    let p = MaxClique::new(&g);
+    let serial = solve_serial(&p, u64::MAX);
+    let expected = serial.best_cost;
+    assert!(expected.is_some());
+    assert!(serial.stats.nodes > 300, "instance too small to interrupt mid-search");
+
+    // (a) Forced mid-search checkpoint + resume: the leaver's partial work
+    // plus the replacement's run-out must find the exact optimum.
+    let mut w = Worker::new(&p, 0, 2, WorkerConfig::default());
+    w.step_batch(200);
+    let cp = w.leave().expect("mid-search leave must yield a checkpoint");
+    let mut replacement = Stepper::from_checkpoint(&p, &cp).unwrap();
+    let mut best = COST_INF;
+    loop {
+        match replacement.step(best) {
+            StepResult::Progress { improved } => {
+                if let Some((c, _)) = improved {
+                    best = c;
+                }
+            }
+            StepResult::Exhausted => break,
+        }
+    }
+    assert_eq!(Some(w.best.min(best)), expected, "checkpoint+resume lost the optimum");
+
+    // (b) Donation across 2+ workers, real threads and virtual cores.
+    for workers in [2usize, 4] {
+        let r = runner::solve(&p, &RunConfig { workers, ..Default::default() });
+        assert_eq!(r.best_cost, expected, "threads={workers}");
+        if let Some(sol) = &r.best_solution {
+            assert!(is_clique(&g, sol), "threads={workers}: witness not a clique");
+        }
+    }
+    for cores in [2usize, 8, 32] {
+        let r = simulate(&p, &SimConfig { cores, ..Default::default() });
+        assert_eq!(r.best_cost, expected, "cores={cores}");
+    }
+}
+
+/// Embedded `.clq` fixture with a known clique number: K5 on vertices 1–5
+/// plus a triangle hanging off vertex 5 and one isolated vertex (n comes
+/// from the `p` line, not the max endpoint).  Guards the DIMACS parser and
+/// the identity ω(G) = n − τ(Ḡ) on real benchmark syntax.
+#[test]
+fn dimacs_clq_fixture_known_omega() {
+    const FIXTURE: &str = "\
+c tiny known-omega fixture: omega = 5
+p edge 8 13
+e 1 2
+e 1 3
+e 1 4
+e 1 5
+e 2 3
+e 2 4
+e 2 5
+e 3 4
+e 3 5
+e 4 5
+e 5 6
+e 5 7
+e 6 7
+";
+    let g = dimacs::parse_dimacs("fixture.clq", FIXTURE).unwrap();
+    assert_eq!(g.num_vertices(), 8);
+    assert_eq!(g.num_edges(), 13);
+
+    let (bb, witness) = max_clique_bb(&g, u64::MAX).unwrap();
+    assert_eq!(bb, 5);
+    assert!(is_clique(&g, &witness) && witness.len() == 5);
+    let (via_vc, _) = pbt::problems::max_clique_via_vc(&g, u64::MAX).unwrap();
+    assert_eq!(via_vc, 5, "complement route violates ω(G) = n − τ(Ḡ)");
+    assert_eq!(oracle::max_clique(&g).0, 5);
+    // And through the engine problem end-to-end.
+    let p = MaxClique::new(&g);
+    let r = solve_serial(&p, u64::MAX);
+    assert_eq!(p.clique_size(r.best_cost.unwrap()), 5);
 }
 
 #[test]

@@ -18,13 +18,14 @@
 
 use pbt::engine::serial::solve_serial;
 use pbt::engine::{NodeEval, Problem, SearchState, StepResult, Stepper};
-use pbt::graph::HybridGraph;
+use pbt::graph::{Graph, HybridGraph};
 use pbt::index::{binary, CurrentIndex, NodeIndex};
-use pbt::instances::generators;
+use pbt::instances::{generators, scenario_matrix_tiny};
 use pbt::problems::vertex_cover::{brute_force_vc, VertexCover};
+use pbt::problems::{is_clique, max_clique_bb, max_clique_via_vc, DominatingSet, MaxClique};
 use pbt::runner::{self, RunConfig};
 use pbt::sim::{simulate, SimConfig};
-use pbt::testing::{Gen, Runner};
+use pbt::testing::{oracle, Gen, Runner};
 use pbt::{prop_assert, Cost, COST_INF};
 
 /// A random-shape deterministic tree: child counts derived by hashing the
@@ -611,7 +612,104 @@ fn prop_checkpoint_resume_conserves_work() {
     });
 }
 
-/// Satellite of the `pbt serve` durability path: checkpoints cross process
+/// Shared cross-validation harness: on a ≤16-vertex graph every solver
+/// route must agree with the bitmask oracle (`testing::oracle`), and every
+/// witness must satisfy its own feasibility predicate.  One harness covers
+/// MAX CLIQUE (B&B, the `MaxClique` engine problem, and the
+/// complement-VC route — guarding ω(G) = n − τ(Ḡ)), VERTEX COVER and
+/// DOMINATING SET.
+fn cross_validate_small(graph: &Graph, ctx: &str) -> Result<(), String> {
+    prop_assert!(graph.num_vertices() <= 16, "{ctx}: oracle is capped at 16 vertices");
+
+    // MAX CLIQUE: oracle == standalone B&B == engine run == via-VC.
+    let (omega, oracle_witness) = oracle::max_clique(graph);
+    prop_assert!(is_clique(graph, &oracle_witness), "{ctx}: oracle witness not a clique");
+    let (bb_omega, bb_witness) =
+        max_clique_bb(graph, u64::MAX).expect("unbudgeted B&B always finishes");
+    prop_assert!(bb_omega == omega, "{ctx}: B&B ω {bb_omega} != oracle {omega}");
+    prop_assert!(
+        bb_witness.len() == omega && is_clique(graph, &bb_witness),
+        "{ctx}: B&B witness {bb_witness:?} is not a max clique"
+    );
+    let (via_vc, vc_witness) =
+        max_clique_via_vc(graph, u64::MAX).expect("unbudgeted VC route always finishes");
+    prop_assert!(via_vc == omega, "{ctx}: complement-VC route {via_vc} != oracle {omega}");
+    prop_assert!(is_clique(graph, &vc_witness), "{ctx}: VC-route witness not a clique");
+    let p = MaxClique::new(graph);
+    let serial = solve_serial(&p, u64::MAX);
+    let cost = serial.best_cost.expect("clique tree always holds a solution");
+    prop_assert!(
+        p.clique_size(cost) == omega,
+        "{ctx}: engine ω {} != oracle {omega}",
+        p.clique_size(cost)
+    );
+    let engine_witness = serial.best_solution.expect("engine returns a witness");
+    prop_assert!(
+        engine_witness.len() == omega && is_clique(graph, &engine_witness),
+        "{ctx}: engine witness {engine_witness:?} is not a max clique"
+    );
+
+    // VERTEX COVER: oracle == engine == the older brute force.
+    let (tau, cover) = oracle::min_vertex_cover(graph);
+    prop_assert!(graph.is_vertex_cover(&cover), "{ctx}: oracle cover infeasible");
+    prop_assert!(
+        brute_force_vc(graph) as usize == tau,
+        "{ctx}: brute_force_vc {} != oracle τ {tau}",
+        brute_force_vc(graph)
+    );
+    let vc = solve_serial(&VertexCover::new(graph), u64::MAX);
+    prop_assert!(vc.best_cost == Some(tau as Cost), "{ctx}: VC {:?} != τ {tau}", vc.best_cost);
+    if let Some(w) = &vc.best_solution {
+        prop_assert!(
+            w.len() == tau && graph.is_vertex_cover(w),
+            "{ctx}: VC witness {w:?} is not a min cover"
+        );
+    }
+
+    // DOMINATING SET: oracle == engine.
+    let (gamma, ds) = oracle::min_dominating_set(graph);
+    prop_assert!(graph.is_dominating_set(&ds), "{ctx}: oracle dominating set infeasible");
+    let dsr = solve_serial(&DominatingSet::new(graph), u64::MAX);
+    prop_assert!(
+        dsr.best_cost == Some(gamma as Cost),
+        "{ctx}: DS {:?} != γ {gamma}",
+        dsr.best_cost
+    );
+    if let Some(w) = &dsr.best_solution {
+        prop_assert!(
+            w.len() == gamma && graph.is_dominating_set(w),
+            "{ctx}: DS witness {w:?} is not a min dominating set"
+        );
+    }
+    Ok(())
+}
+
+/// ISSUE 6 satellite: the tiny scenario matrix (planted clique, Turán-like,
+/// skewed-degree, G(n,m) — all ≤16 vertices) through the shared oracle
+/// harness.  Deterministic: the matrix is seeded.
+#[test]
+fn scenario_matrix_tiny_cross_validates_against_oracle() {
+    let instances = scenario_matrix_tiny();
+    assert!(instances.len() >= 4, "matrix lost a family");
+    for inst in &instances {
+        cross_validate_small(&inst.graph, &inst.graph.name).unwrap();
+    }
+}
+
+/// Random ≤16-vertex graphs through the same harness — edge densities from
+/// empty to near-complete, so the clique tree's multiway branching sees
+/// both wide and deep shapes.
+#[test]
+fn prop_solvers_agree_with_oracle_on_random_graphs() {
+    Runner::new(25, 0x0C11_9E6).run(|g| {
+        let n = g.usize_in(1, 17);
+        let max_m = n * (n - 1) / 2;
+        let m = if max_m == 0 { 0 } else { g.usize_in(0, max_m + 1) };
+        let seed = g.seed();
+        let graph = generators::gnm(n, m, seed);
+        cross_validate_small(&graph, &format!("gnm n={n} m={m} seed={seed}"))
+    });
+}
 /// restarts via the journal, so the restore side must treat bytes as
 /// hostile.  Arbitrarily truncated or bit-flipped checkpoints must never
 /// panic: `CurrentIndex::from_checkpoint` rejects framing damage with a
