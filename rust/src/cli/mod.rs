@@ -100,10 +100,14 @@ COMMANDS:
     cluster     multi-process PARALLEL-RB over TCP (see docs/WIRE_PROTOCOL.md)
                   cluster listen --bind HOST:PORT --peers C  [solve flags]
                   cluster join   --connect HOST:PORT [--advertise HOST]  [solve flags]
+                                 [--leave-after-slices N]
                   cluster run    --peers C                   [solve flags]
                 (listen = rendezvous + rank 0; join = one extra rank;
                  run = spawn C-1 local join processes and listen — the
-                 one-command localhost demo)
+                 one-command localhost demo.  Pointing join at a `pbt serve`
+                 daemon turns the process into a pool rank executing job
+                 slices for the scheduler, docs/SCHEDULER.md;
+                 --leave-after-slices makes it leave gracefully after N)
     serve       durable multi-job solve daemon (see docs/SERVER.md)
                   [--bind HOST:PORT]  [--journal DIR]  [--max-active N]
                   [--workers N]  [--slice NODES]  [--checkpoint-ms T]

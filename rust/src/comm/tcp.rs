@@ -46,10 +46,14 @@ use std::time::{Duration, Instant};
 
 /// Handshake frame tags (distinct from the [`wire`] message tags, which
 /// start at `0x01`; handshake frames never share a stream phase with data
-/// frames, but distinct tags keep captures unambiguous).
-const HS_HELLO: u8 = 0x10;
+/// frames, but distinct tags keep captures unambiguous).  `HS_HELLO` and
+/// `HS_POOL` are crate-visible: the serve daemon recognizes a cluster
+/// `HELLO` on its client port and answers `POOL{rank}` to adopt the
+/// joiner as a pool rank (see `server`).
+pub(crate) const HS_HELLO: u8 = 0x10;
 const HS_ASSIGN: u8 = 0x11;
 const HS_DIAL: u8 = 0x12;
+pub(crate) const HS_POOL: u8 = 0x13;
 
 /// Protocol magic sent in every `HELLO` ("PBT2": pbt wire protocol v2 —
 /// task indices travel as LEB128 varints; a v1 peer's fixed-width indices
@@ -121,6 +125,40 @@ fn pull_u64(bytes: &[u8], pos: &mut usize) -> io::Result<u64> {
     let v = u64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
     *pos += 8;
     Ok(v)
+}
+
+/// Is this handshake frame a cluster `HELLO` (tag + `PBT2` magic)?  Used
+/// by the serve daemon to tell a pool joiner apart from a PBTS client on
+/// the same port (the two protocols share blob framing, so the first
+/// frame's payload is the discriminator).
+pub(crate) fn is_pool_hello(frame: &[u8]) -> bool {
+    frame.len() >= 1 + 4 && frame[0] == HS_HELLO && &frame[1..5] == MAGIC
+}
+
+/// The daemon's answer adopting a joiner as pool rank `rank`.
+pub(crate) fn pool_assign_frame(rank: u64) -> Vec<u8> {
+    let mut out = vec![HS_POOL];
+    out.extend_from_slice(&rank.to_le_bytes());
+    out
+}
+
+/// One adopted pool connection: a cluster joiner that dialed a `pbt
+/// serve` daemon instead of a rendezvous and was answered `POOL{rank}`.
+/// The daemon side parks these in an `exec::RemotePool`; the joiner side
+/// runs `exec::remote::serve_slices` over its half.
+#[derive(Debug)]
+pub struct PoolConn {
+    pub stream: TcpStream,
+    /// Daemon-assigned pool rank (observability only; pool ranks are
+    /// stateless and never talk to each other).
+    pub rank: u64,
+}
+
+/// What [`TcpTransport::join_or_pool`] found at the far end: a cluster
+/// rendezvous (full mesh transport) or a serve daemon (pool connection).
+pub enum Joined {
+    Mesh(Box<TcpTransport>),
+    Pool(PoolConn),
 }
 
 fn connect_with_timeout(addr: &str, timeout: Duration) -> io::Result<TcpStream> {
@@ -275,6 +313,27 @@ impl TcpTransport {
         advertise_host: Option<&str>,
         cfg: TcpConfig,
     ) -> io::Result<TcpTransport> {
+        match Self::join_or_pool(rendezvous_addr, advertise_host, cfg)? {
+            Joined::Mesh(t) => Ok(*t),
+            Joined::Pool(_) => Err(proto_err(
+                "rendezvous answered with a pool assignment (that address is a \
+                 pbt serve daemon, not a cluster rendezvous)",
+            )),
+        }
+    }
+
+    /// Like [`join_advertised`](Self::join_advertised), but accepts either
+    /// kind of far end: a cluster rendezvous (`ASSIGN` → full mesh, as
+    /// before) or a `pbt serve` daemon, which answers the same `HELLO`
+    /// with `POOL{rank}` and adopts this process as a stateless pool rank
+    /// executing job slices (`exec::remote::serve_slices`).  This is what
+    /// lets one `pbt cluster join --connect <addr>` command join either a
+    /// one-shot cluster run or a live serve pool.
+    pub fn join_or_pool(
+        rendezvous_addr: &str,
+        advertise_host: Option<&str>,
+        cfg: TcpConfig,
+    ) -> io::Result<Joined> {
         let deadline = Instant::now() + cfg.handshake_timeout;
 
         let mut rendezvous = connect_with_timeout(rendezvous_addr, cfg.connect_timeout)?;
@@ -301,8 +360,18 @@ impl TcpTransport {
         write_hs(&mut rendezvous, &hello)?;
 
         let assign = read_hs(&mut rendezvous)?;
-        if assign.first() != Some(&HS_ASSIGN) {
-            return Err(proto_err("expected ASSIGN from rendezvous"));
+        match assign.first() {
+            Some(&HS_ASSIGN) => {}
+            Some(&HS_POOL) => {
+                // The far end is a serve daemon adopting us as a pool
+                // rank: no mesh, no peers — just this one connection.
+                let mut pos = 1;
+                let rank = pull_u64(&assign, &mut pos)?;
+                rendezvous.set_read_timeout(None)?;
+                drop(mesh_listener); // pool ranks accept nothing
+                return Ok(Joined::Pool(PoolConn { stream: rendezvous, rank }));
+            }
+            _ => return Err(proto_err("expected ASSIGN or POOL from rendezvous")),
         }
         let mut pos = 1;
         let rank = pull_u64(&assign, &mut pos)? as usize;
@@ -363,7 +432,7 @@ impl TcpTransport {
                 Err(e) => return Err(e),
             }
         }
-        Self::from_mesh(rank, c, peers)
+        Ok(Joined::Mesh(Box::new(Self::from_mesh(rank, c, peers)?)))
     }
 
     /// Wrap a completed mesh: spawn the reader threads and the inbox.

@@ -20,6 +20,14 @@
 //! All integers are little-endian.  Tags: `0x01` StatusUpdate, `0x02`
 //! TaskRequest, `0x03` TaskResponse, `0x04` Notification.  Core states:
 //! `0` Active, `1` Inactive, `2` Dead.
+//!
+//! The pool-slice protocol (`exec::Scheduler` placing job slices on
+//! remote ranks) shares this codec's framing and primitives with its own
+//! tags: `0x05` [`SliceRequest`], `0x06` [`SliceResult`], `0x07` pool
+//! leave ([`pool_leave_frame`]).  These travel as blob frames
+//! ([`write_blob_frame`]) on a parked `pbt serve` pool connection, never
+//! on the rank-to-rank mesh, so the tag spaces cannot collide in
+//! practice — but they are kept disjoint anyway.
 
 use super::{CoreState, Message};
 use crate::index::NodeIndex;
@@ -41,6 +49,14 @@ pub const TAG_TASK_REQUEST: u8 = 0x02;
 pub const TAG_TASK_RESPONSE: u8 = 0x03;
 /// Tag byte for [`Message::Notification`].
 pub const TAG_NOTIFICATION: u8 = 0x04;
+/// Tag byte for a [`SliceRequest`] (scheduler → pool rank).
+pub const TAG_SLICE_REQUEST: u8 = 0x05;
+/// Tag byte for a [`SliceResult`] (pool rank → scheduler).
+pub const TAG_SLICE_RESULT: u8 = 0x06;
+/// Tag byte for a pool leave notice (§VII): sent by a rank *in place of*
+/// a [`SliceResult`], declaring the request's checkpoint untouched so the
+/// scheduler re-absorbs it exactly-once.
+pub const TAG_POOL_LEAVE: u8 = 0x07;
 
 /// Decode failure: the payload does not describe a valid [`Message`].
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -53,6 +69,8 @@ pub enum WireError {
     BadState(u8),
     /// A task index failed [`NodeIndex::decode`].
     BadIndex,
+    /// A length-prefixed string field was not valid UTF-8.
+    BadString,
     /// Bytes remained after the last field (frames carry exactly one
     /// message).
     TrailingBytes(usize),
@@ -67,6 +85,7 @@ impl std::fmt::Display for WireError {
             WireError::BadTag(t) => write!(f, "unknown message tag {t:#04x}"),
             WireError::BadState(s) => write!(f, "unknown core-state byte {s}"),
             WireError::BadIndex => write!(f, "corrupt task index"),
+            WireError::BadString => write!(f, "string field is not valid UTF-8"),
             WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes after message"),
             WireError::OversizedFrame(n) => {
                 write!(f, "frame of {n} bytes exceeds limit {MAX_FRAME_BYTES}")
@@ -233,6 +252,182 @@ pub fn decode(bytes: &[u8]) -> Result<Message, WireError> {
         return Err(WireError::TrailingBytes(bytes.len() - pos));
     }
     Ok(msg)
+}
+
+// --------------------------------------------------- pool-slice protocol
+
+fn push_lp_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    push_u32_le(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+fn take_lp_bytes(bytes: &[u8], pos: &mut usize) -> Result<Vec<u8>, WireError> {
+    let n = take_u32(bytes, pos)? as usize;
+    Ok(take(bytes, pos, n)?.to_vec())
+}
+
+fn take_lp_str(bytes: &[u8], pos: &mut usize) -> Result<String, WireError> {
+    String::from_utf8(take_lp_bytes(bytes, pos)?).map_err(|_| WireError::BadString)
+}
+
+fn done(bytes: &[u8], pos: usize) -> Result<(), WireError> {
+    if pos != bytes.len() {
+        return Err(WireError::TrailingBytes(bytes.len() - pos));
+    }
+    Ok(())
+}
+
+/// One slice of a running job, shipped to a remote pool rank (`SLICE`,
+/// tag `0x05`).  The rank is stateless: the request carries everything
+/// needed to re-instantiate the problem (`problem`/`instance`/`scale`/
+/// `bound` — instances are named generators, so a spec string is the
+/// whole input) and the subtree checkpoint to run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SliceRequest {
+    /// Dispatch sequence number; the matching [`SliceResult`] must echo
+    /// it (staleness guard).
+    pub seq: u64,
+    /// Daemon job id (observability; one connection runs one job at a
+    /// time, so it is not a demultiplexing key).
+    pub job: u64,
+    /// Problem family (`vc` | `ds` | `clique`).
+    pub problem: String,
+    /// Instance spec string (`instances::resolve_spec` input).
+    pub instance: String,
+    pub scale: u32,
+    /// Bound name for `vc` (`none` | `matching` | anything else = default).
+    pub bound: String,
+    /// Node-visit budget for this slice.
+    pub budget: u32,
+    /// Scheduler's incumbent at dispatch time (pruning power).
+    pub best: u64,
+    /// How many donated subtrees the scheduler could use right now.
+    pub donate_hint: u32,
+    /// The subtree checkpoint to restore and run.
+    pub checkpoint: Vec<u8>,
+}
+
+impl SliceRequest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.checkpoint.len());
+        out.push(TAG_SLICE_REQUEST);
+        push_u64_le(&mut out, self.seq);
+        push_u64_le(&mut out, self.job);
+        push_lp_bytes(&mut out, self.problem.as_bytes());
+        push_lp_bytes(&mut out, self.instance.as_bytes());
+        push_u32_le(&mut out, self.scale);
+        push_lp_bytes(&mut out, self.bound.as_bytes());
+        push_u32_le(&mut out, self.budget);
+        push_u64_le(&mut out, self.best);
+        push_u32_le(&mut out, self.donate_hint);
+        push_lp_bytes(&mut out, &self.checkpoint);
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<SliceRequest, WireError> {
+        let mut pos = 0usize;
+        let tag = take(bytes, &mut pos, 1)?[0];
+        if tag != TAG_SLICE_REQUEST {
+            return Err(WireError::BadTag(tag));
+        }
+        let req = SliceRequest {
+            seq: take_u64(bytes, &mut pos)?,
+            job: take_u64(bytes, &mut pos)?,
+            problem: take_lp_str(bytes, &mut pos)?,
+            instance: take_lp_str(bytes, &mut pos)?,
+            scale: take_u32(bytes, &mut pos)?,
+            bound: take_lp_str(bytes, &mut pos)?,
+            budget: take_u32(bytes, &mut pos)?,
+            best: take_u64(bytes, &mut pos)?,
+            donate_hint: take_u32(bytes, &mut pos)?,
+            checkpoint: take_lp_bytes(bytes, &mut pos)?,
+        };
+        done(bytes, pos)?;
+        Ok(req)
+    }
+}
+
+/// What a pool rank returned for one [`SliceRequest`] (`RESULT`, tag
+/// `0x06`).  The continuation (the rank's remaining subtree after the
+/// budget ran out) and the donated subtrees re-enter the scheduler's
+/// frontier atomically with this result, so the durable cover never has a
+/// gap.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SliceResult {
+    /// Echo of [`SliceRequest::seq`].
+    pub seq: u64,
+    /// Nodes visited in this slice (counts exactly the stepped nodes —
+    /// checkpoint replay is free, preserving node conservation).
+    pub nodes: u64,
+    /// Best cost found *in this slice*, or `COST_INF` if no improvement
+    /// on the request's incumbent.
+    pub best: u64,
+    /// Solution payload for `best` (empty iff `best` is `COST_INF`).
+    pub solution: Vec<u32>,
+    /// The rank's unfinished remainder (`None` = subtree exhausted).
+    pub continuation: Option<Vec<u8>>,
+    /// Donated subtree checkpoints (≤ the request's `donate_hint`),
+    /// disjoint from the continuation.
+    pub donated: Vec<Vec<u8>>,
+}
+
+impl SliceResult {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            32 + self.solution.len() * 4
+                + self.continuation.as_ref().map_or(0, Vec::len)
+                + self.donated.iter().map(|d| d.len() + 4).sum::<usize>(),
+        );
+        out.push(TAG_SLICE_RESULT);
+        push_u64_le(&mut out, self.seq);
+        push_u64_le(&mut out, self.nodes);
+        push_u64_le(&mut out, self.best);
+        push_u32_le(&mut out, self.solution.len() as u32);
+        for v in &self.solution {
+            push_u32_le(&mut out, *v);
+        }
+        match &self.continuation {
+            Some(cp) => {
+                out.push(1);
+                push_lp_bytes(&mut out, cp);
+            }
+            None => out.push(0),
+        }
+        push_u32_le(&mut out, self.donated.len() as u32);
+        for d in &self.donated {
+            push_lp_bytes(&mut out, d);
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<SliceResult, WireError> {
+        let mut pos = 0usize;
+        let tag = take(bytes, &mut pos, 1)?[0];
+        if tag != TAG_SLICE_RESULT {
+            return Err(WireError::BadTag(tag));
+        }
+        let seq = take_u64(bytes, &mut pos)?;
+        let nodes = take_u64(bytes, &mut pos)?;
+        let best = take_u64(bytes, &mut pos)?;
+        let solution = take_u32_vec(bytes, &mut pos).ok_or(WireError::Truncated)?;
+        let continuation = match take(bytes, &mut pos, 1)?[0] {
+            0 => None,
+            1 => Some(take_lp_bytes(bytes, &mut pos)?),
+            other => return Err(WireError::BadState(other)),
+        };
+        let count = take_u32(bytes, &mut pos)? as usize;
+        let mut donated = Vec::with_capacity(count.min(1024));
+        for _ in 0..count {
+            donated.push(take_lp_bytes(bytes, &mut pos)?);
+        }
+        done(bytes, pos)?;
+        Ok(SliceResult { seq, nodes, best, solution, continuation, donated })
+    }
+}
+
+/// The one-byte pool leave notice (`LEAVE`, tag `0x07`).
+pub fn pool_leave_frame() -> Vec<u8> {
+    vec![TAG_POOL_LEAVE]
 }
 
 /// Write one raw length-prefixed blob frame (u32 LE length + payload).
@@ -433,5 +628,115 @@ mod tests {
         buf.extend_from_slice(&(u32::MAX).to_le_bytes());
         let mut cursor = std::io::Cursor::new(buf);
         assert!(read_frame(&mut cursor).is_err());
+    }
+
+    fn slice_request_samples() -> Vec<SliceRequest> {
+        vec![
+            SliceRequest {
+                seq: 0,
+                job: 1,
+                problem: "vc".into(),
+                instance: "phat1".into(),
+                scale: 0,
+                bound: "none".into(),
+                budget: 1,
+                best: u64::MAX,
+                donate_hint: 0,
+                checkpoint: vec![],
+            },
+            SliceRequest {
+                seq: u64::MAX,
+                job: 42,
+                problem: "clique".into(),
+                instance: "turan:14:4".into(),
+                scale: 3,
+                bound: "".into(),
+                budget: 10_000,
+                best: 17,
+                donate_hint: 4,
+                checkpoint: vec![0xAB; 97],
+            },
+        ]
+    }
+
+    fn slice_result_samples() -> Vec<SliceResult> {
+        vec![
+            SliceResult {
+                seq: 0,
+                nodes: 0,
+                best: u64::MAX,
+                solution: vec![],
+                continuation: None,
+                donated: vec![],
+            },
+            SliceResult {
+                seq: 7,
+                nodes: 4096,
+                best: 12,
+                solution: vec![1, 5, 9, 33],
+                continuation: Some(vec![3; 40]),
+                donated: vec![vec![1, 2, 3], vec![], vec![9; 17]],
+            },
+        ]
+    }
+
+    #[test]
+    fn slice_frames_roundtrip() {
+        for req in slice_request_samples() {
+            assert_eq!(SliceRequest::decode(&req.encode()), Ok(req.clone()), "{req:?}");
+        }
+        for res in slice_result_samples() {
+            assert_eq!(SliceResult::decode(&res.encode()), Ok(res.clone()), "{res:?}");
+        }
+    }
+
+    #[test]
+    fn slice_frames_reject_every_strict_prefix_and_corruption() {
+        for bytes in slice_request_samples().iter().map(SliceRequest::encode) {
+            for cut in 0..bytes.len() {
+                assert!(SliceRequest::decode(&bytes[..cut]).is_err(), "prefix {cut}");
+            }
+            let mut b = bytes.clone();
+            b.push(0);
+            assert_eq!(SliceRequest::decode(&b), Err(WireError::TrailingBytes(1)));
+            let mut b = bytes.clone();
+            b[0] = TAG_SLICE_RESULT;
+            assert_eq!(SliceRequest::decode(&b), Err(WireError::BadTag(TAG_SLICE_RESULT)));
+        }
+        for bytes in slice_result_samples().iter().map(SliceResult::encode) {
+            for cut in 0..bytes.len() {
+                assert!(SliceResult::decode(&bytes[..cut]).is_err(), "prefix {cut}");
+            }
+            let mut b = bytes.clone();
+            b.push(0);
+            assert_eq!(SliceResult::decode(&b), Err(WireError::TrailingBytes(1)));
+            let mut b = bytes.clone();
+            b[0] = 0xEE;
+            assert_eq!(SliceResult::decode(&b), Err(WireError::BadTag(0xEE)));
+        }
+        // Non-UTF-8 problem string.
+        let mut b = slice_request_samples()[0].encode();
+        // problem field starts after tag(1) + seq(8) + job(8) + len(4).
+        b[21] = 0xFF;
+        assert_eq!(SliceRequest::decode(&b), Err(WireError::BadString));
+        // Bad continuation flag byte.
+        let res = SliceResult {
+            seq: 1,
+            nodes: 2,
+            best: u64::MAX,
+            solution: vec![],
+            continuation: None,
+            donated: vec![],
+        };
+        let mut b = res.encode();
+        let flag_at = 1 + 8 + 8 + 8 + 4; // tag, seq, nodes, best, empty sol vec
+        b[flag_at] = 9;
+        assert_eq!(SliceResult::decode(&b), Err(WireError::BadState(9)));
+    }
+
+    #[test]
+    fn pool_leave_frame_is_the_tag_byte() {
+        assert_eq!(pool_leave_frame(), vec![TAG_POOL_LEAVE]);
+        assert_eq!(SliceResult::decode(&pool_leave_frame()), Err(WireError::BadTag(TAG_POOL_LEAVE)));
     }
 }

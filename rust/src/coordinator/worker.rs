@@ -523,10 +523,13 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
     /// fresh subtree checkpoint).  Unlike [`leave`](Self::leave), the
     /// worker keeps running; the exported blobs describe a *superset* of
     /// the work remaining the instant the drain happened — the
-    /// at-least-once contract a resume journal wants.  This is the drain
-    /// primitive for Worker-protocol runners (cluster, sim); the `pbt
-    /// serve` executor runs plain [`Stepper`]s and snapshots them
-    /// directly (`server::exec`), same contract, no Worker in the loop.
+    /// at-least-once contract a resume journal wants.  This is THE
+    /// documented way out of a Worker-protocol runner (cluster, sim):
+    /// drain with it at any checkpoint cadence, and on departure use
+    /// [`leave`](Self::leave), which returns the same complete set while
+    /// also announcing the death.  The `pbt serve` scheduler runs plain
+    /// [`Stepper`]s and snapshots them directly (`crate::exec`), same
+    /// contract, no Worker in the loop.
     ///
     /// [`Stepper`]: crate::engine::Stepper
     pub fn export_unfinished(&self) -> Vec<Vec<u8>> {
@@ -542,26 +545,33 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
         out
     }
 
-    /// Join-leave (§VII): leave the computation now. Returns a checkpoint
-    /// of the unfinished subtree (if any) that a replacement core restores
-    /// with [`Stepper::from_checkpoint`].  Note this drops any pending
-    /// multi-task response indices — use
-    /// [`export_unfinished`](Self::export_unfinished) first when those
-    /// must survive too.
-    pub fn leave(&mut self) -> Option<Vec<u8>> {
-        let cp = match self.stepper.take() {
-            Some(mut s) => {
-                let st = s.stats;
-                self.stats.search.merge(&st);
-                self.absorb_shape(&mut s);
-                (!s.is_exhausted()).then(|| s.checkpoint_bytes())
+    /// Join-leave (§VII): leave the computation now. Returns checkpoints
+    /// of *every* unfinished subtree this worker holds — the active
+    /// stepper's remainder plus any still-pending donated indices (each
+    /// as a fresh subtree checkpoint, same cover as
+    /// [`export_unfinished`](Self::export_unfinished)) — that replacement
+    /// cores restore with [`Stepper::from_checkpoint`].  Earlier
+    /// revisions returned only the stepper checkpoint and silently
+    /// dropped pending donated indices; that drain path is gone — a
+    /// leave loses nothing, and callers that only want a periodic
+    /// non-destructive drain should use `export_unfinished` instead.
+    pub fn leave(&mut self) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        if let Some(mut s) = self.stepper.take() {
+            let st = s.stats;
+            self.stats.search.merge(&st);
+            self.absorb_shape(&mut s);
+            if !s.is_exhausted() {
+                out.push(s.checkpoint_bytes());
             }
-            None => None,
-        };
+        }
+        for idx in self.pending.drain(..) {
+            out.push(crate::index::CurrentIndex::new(idx).to_checkpoint());
+        }
         self.phase = Phase::Dead;
         self.statuses.set(self.rank, CoreState::Dead);
         self.push_msg(Dest::All, Message::StatusUpdate { from: self.rank, state: CoreState::Dead });
-        cp
+        out
     }
 
     /// Advance the search by up to `n` node visits (PARALLEL-RB-SOLVER's
@@ -789,13 +799,14 @@ mod tests {
         w.step_batch(37); // partway through the root subtree
         let visited_before = w.stats.search.nodes
             + 0; // stats merged on leave below
-        let cp = w.leave().expect("unfinished work must checkpoint");
+        let cps = w.leave();
+        assert_eq!(cps.len(), 1, "one unfinished subtree, no pending indices");
         assert_eq!(w.phase(), Phase::Dead);
         let visited = w.stats.search.nodes;
         assert!(visited >= 37 || visited_before > 0);
 
         // A replacement resumes and finishes the rest, exactly once each.
-        let mut resumed = Stepper::from_checkpoint(&p, &cp).unwrap();
+        let mut resumed = Stepper::from_checkpoint(&p, &cps[0]).unwrap();
         let mut best = COST_INF;
         loop {
             match resumed.step(best) {

@@ -1,0 +1,341 @@
+//! The rank side of the pool-slice protocol: a stateless slice server.
+//!
+//! A process that dials a `pbt serve` daemon with a cluster `HELLO` and
+//! is answered `POOL{rank}` (see [`TcpTransport::join_or_pool`]) becomes
+//! a **pool rank**: it sits in [`serve_slices`], reading `SLICE` frames
+//! ([`SliceRequest`]) and answering each with a `RESULT` frame
+//! ([`SliceResult`]) — or a one-byte `LEAVE` notice in place of a result,
+//! which tells the scheduler the request's checkpoint was never executed
+//! (§VII graceful leave, exactly-once re-absorption).
+//!
+//! Statelessness is the design point: every request carries the full
+//! problem spec (instances are named generators, so a spec string is the
+//! whole input) plus the subtree checkpoint, so a rank holds no job state
+//! between slices, can serve different jobs on consecutive requests, and
+//! its death costs at most the one in-flight slice (which the scheduler's
+//! slot snapshot re-covers).  [`SpecExec`] caches the resolved instance
+//! graph keyed by spec, so consecutive slices of one job pay the
+//! generator cost once.
+//!
+//! [`TcpTransport::join_or_pool`]: crate::comm::tcp::TcpTransport::join_or_pool
+
+use super::index_checkpoint;
+use crate::comm::wire::{self, SliceRequest, SliceResult};
+use crate::engine::{Problem, SearchState, StepResult, Stepper};
+use crate::graph::Graph;
+use crate::instances;
+use crate::problems::{BoundKind, DominatingSet, MaxClique, VertexCover};
+use crate::COST_INF;
+use std::io::{ErrorKind, Read, Write};
+
+/// Executes one slice request.  The object-safe seam between the wire
+/// loop ([`serve_slices`]) and problem instantiation ([`SpecExec`] in
+/// production, fixed-problem fakes in tests).
+pub trait SliceExec {
+    /// Run the request's checkpoint for its node budget.  `Err` means the
+    /// request could not be executed at all (unknown problem, unresolvable
+    /// instance, corrupt checkpoint) — the serve loop answers `LEAVE` so
+    /// the scheduler re-absorbs the checkpoint rather than losing it.
+    fn run_slice(&mut self, req: &SliceRequest) -> Result<SliceResult, String>;
+}
+
+/// The production [`SliceExec`]: resolves the request's instance spec to
+/// a graph (cached by `(problem, instance, scale, bound)` key) and
+/// dispatches to the named problem family, mirroring the daemon's own
+/// `run_problem` dispatch.
+#[derive(Default)]
+pub struct SpecExec {
+    key: Option<(String, String, u32, String)>,
+    graph: Option<Graph>,
+}
+
+impl SpecExec {
+    fn ensure(&mut self, req: &SliceRequest) -> Result<&Graph, String> {
+        let key =
+            (req.problem.clone(), req.instance.clone(), req.scale, req.bound.clone());
+        if self.key.as_ref() != Some(&key) {
+            let g = instances::resolve_spec(&req.instance, req.scale as usize)
+                .map_err(|e| format!("{e:#}"))?;
+            self.graph = Some(g);
+            self.key = Some(key);
+        }
+        Ok(self.graph.as_ref().expect("graph cached by ensure"))
+    }
+}
+
+impl SliceExec for SpecExec {
+    fn run_slice(&mut self, req: &SliceRequest) -> Result<SliceResult, String> {
+        let bound = match req.bound.as_str() {
+            "none" => BoundKind::None,
+            "matching" => BoundKind::Matching,
+            _ => BoundKind::EdgesOverMaxDeg,
+        };
+        let problem = req.problem.clone();
+        let g = self.ensure(req)?;
+        match problem.as_str() {
+            "vc" => run_slice_on(&VertexCover::with_bound(g, bound), req),
+            "ds" => run_slice_on(&DominatingSet::new(g), req),
+            "clique" => run_slice_on(&MaxClique::new(g), req),
+            other => Err(format!("unknown problem {other:?} (pool ranks support vc|ds|clique)")),
+        }
+    }
+}
+
+/// Restore the request's checkpoint and step it for the budget: the same
+/// slice semantics as a local slot's `drive` loop, one slice at a time.
+/// Donations are split off *before* the continuation checkpoint is taken,
+/// so continuation and donated blobs are disjoint subtrees — together
+/// with the visited count they land in the scheduler atomically, keeping
+/// node conservation exact.
+pub(crate) fn run_slice_on<P>(problem: &P, req: &SliceRequest) -> Result<SliceResult, String>
+where
+    P: Problem,
+    P::State: SearchState<Sol = Vec<u32>>,
+{
+    let mut stepper =
+        Stepper::from_checkpoint(problem, &req.checkpoint).map_err(|e| format!("{e:#}"))?;
+    let mut best = req.best;
+    let mut found: Option<(u64, Vec<u32>)> = None;
+    let budget = req.budget.max(1);
+    let mut visited = 0u32;
+    while visited < budget {
+        match stepper.step(best) {
+            StepResult::Progress { improved } => {
+                visited += 1;
+                if let Some((cost, sol)) = improved {
+                    best = cost;
+                    found = Some((cost, sol));
+                }
+            }
+            StepResult::Exhausted => break,
+        }
+    }
+    let mut donated = Vec::new();
+    if !stepper.is_exhausted() {
+        for _ in 0..req.donate_hint {
+            match stepper.donate() {
+                Some(idx) => donated.push(index_checkpoint(idx)),
+                None => break,
+            }
+        }
+    }
+    let continuation = (!stepper.is_exhausted()).then(|| stepper.checkpoint_bytes());
+    let (best, solution) = match found {
+        Some((cost, sol)) => (cost, sol),
+        None => (COST_INF, Vec::new()),
+    };
+    Ok(SliceResult { seq: req.seq, nodes: visited as u64, best, solution, continuation, donated })
+}
+
+/// What one [`serve_slices`] session did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeSummary {
+    /// Slices executed and answered.
+    pub slices: u64,
+    /// Nodes visited across them.
+    pub nodes: u64,
+    /// True iff the session ended with a graceful `LEAVE` notice (as
+    /// opposed to the daemon closing the connection).
+    pub left: bool,
+}
+
+/// Serve slice requests on `stream` until the daemon closes the
+/// connection (clean retirement, e.g. daemon shutdown) or `leave_after`
+/// slices have been executed (the next request is answered with a
+/// `LEAVE` notice instead — its checkpoint is re-absorbed by the
+/// scheduler untouched, so a graceful leave loses zero work).
+pub fn serve_slices<S, E>(
+    stream: &mut S,
+    exec: &mut E,
+    leave_after: Option<u64>,
+) -> std::io::Result<ServeSummary>
+where
+    S: Read + Write,
+    E: SliceExec,
+{
+    let mut sum = ServeSummary::default();
+    loop {
+        let frame = match wire::read_blob_frame(stream, wire::MAX_FRAME_BYTES) {
+            Ok(f) => f,
+            Err(e) => {
+                return match e.kind() {
+                    // The daemon dropping the connection is the normal end
+                    // of a pool session (job pool torn down, daemon
+                    // shutdown): retire cleanly.
+                    ErrorKind::UnexpectedEof
+                    | ErrorKind::ConnectionReset
+                    | ErrorKind::ConnectionAborted
+                    | ErrorKind::BrokenPipe => Ok(sum),
+                    _ => Err(e),
+                };
+            }
+        };
+        let req = SliceRequest::decode(&frame).map_err(|e| {
+            std::io::Error::new(ErrorKind::InvalidData, format!("bad SLICE frame: {e}"))
+        })?;
+        if leave_after.is_some_and(|n| sum.slices >= n) {
+            wire::write_blob_frame(stream, &wire::pool_leave_frame())?;
+            sum.left = true;
+            return Ok(sum);
+        }
+        let res = match exec.run_slice(&req) {
+            Ok(r) => r,
+            Err(msg) => {
+                // Can't execute this slice (spec unknown to this build,
+                // corrupt checkpoint): decline it so the scheduler keeps
+                // the checkpoint, and retire.
+                eprintln!("pbt pool rank: slice for job {} declined: {msg}", req.job);
+                wire::write_blob_frame(stream, &wire::pool_leave_frame())?;
+                sum.left = true;
+                return Ok(sum);
+            }
+        };
+        wire::write_blob_frame(stream, &res.encode())?;
+        sum.slices += 1;
+        sum.nodes += res.nodes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::tcp::PoolConn;
+    use crate::engine::serial::solve_serial;
+    use crate::engine::toy::ToyTree;
+    use crate::exec::{
+        root_frontier, run, ExecControl, ExecProfile, RemoteJob, RemotePool,
+    };
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::Arc;
+
+    /// A [`SliceExec`] pinned to one ToyTree (the wire spec is ignored) —
+    /// ToyTree is `cfg(test)` so the production [`SpecExec`] cannot name
+    /// it, but slice semantics are problem-generic.
+    struct ToyExec {
+        tree: ToyTree,
+    }
+
+    impl SliceExec for ToyExec {
+        fn run_slice(&mut self, req: &SliceRequest) -> Result<SliceResult, String> {
+            run_slice_on(&self.tree, req)
+        }
+    }
+
+    fn toy_rjob(pool: &Arc<RemotePool>) -> RemoteJob {
+        RemoteJob {
+            job: 1,
+            problem: "toy".into(),
+            instance: "toy".into(),
+            scale: 0,
+            bound: "none".into(),
+            pool: Arc::clone(pool),
+        }
+    }
+
+    /// 1 local thread + 1 pool rank solve a ToyTree: exact optimum, exact
+    /// serial node count (ToyTree never prunes, replay never counts — so
+    /// any slice placement must conserve nodes exactly), and the remote
+    /// slot demonstrably executed slices.
+    #[test]
+    fn remote_rank_executes_slices_with_exact_node_conservation() {
+        let p = ToyTree { height: 12 };
+        let serial = solve_serial(&p, u64::MAX);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let joiner = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut exec = ToyExec { tree: ToyTree { height: 12 } };
+            serve_slices(&mut s, &mut exec, None).unwrap()
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let pool = RemotePool::new();
+        pool.park_joined(PoolConn { stream, rank: 1 });
+        let rjob = toy_rjob(&pool);
+        // Slow slices (pace 1ms) so the remote slot reliably gets work
+        // before the local thread finishes the tree.
+        let profile = ExecProfile::default()
+            .with_workers(1)
+            .with_slice_nodes(64)
+            .with_pace_ms(1)
+            .with_checkpoint_ms(5);
+        let out = run(
+            &p,
+            root_frontier(),
+            u64::MAX,
+            None,
+            0,
+            &profile,
+            &ExecControl::default(),
+            Some(&rjob),
+            |_| {},
+        );
+        assert!(out.finished);
+        assert_eq!(out.best, serial.best_cost);
+        assert_eq!(out.nodes, serial.stats.nodes, "exact node conservation across the wire");
+        assert_eq!(out.pool.local_slots, 1);
+        assert_eq!(out.pool.remote_slots, 1);
+        assert!(out.pool.slices_remote >= 1, "the rank actually ran slices");
+        assert_eq!(out.pool.left, 0);
+        assert_eq!(out.pool.lost, 0);
+        // The healthy connection was parked back for the next job...
+        assert_eq!(pool.idle_count(), 1);
+        // ...and daemon-lifetime totals absorbed the run.
+        let cum = pool.cumulative();
+        assert_eq!(cum.remote_slots, 1, "adopt-time count, not double-counted");
+        assert_eq!(cum.slices_remote, out.pool.slices_remote);
+        // Dropping the pool closes the parked conn; the rank retires
+        // cleanly with a matching slice/node account.
+        drop(rjob);
+        drop(pool);
+        let sum = joiner.join().unwrap();
+        assert!(!sum.left);
+        assert!(sum.slices >= 1);
+        assert_eq!(sum.slices, out.pool.slices_remote);
+    }
+
+    /// A rank that answers its first request with `LEAVE`: the declined
+    /// checkpoint is re-absorbed untouched, the job still completes at
+    /// the serial optimum with the exact serial node count (graceful
+    /// leave is exactly-once), and the leave is counted.
+    #[test]
+    fn graceful_leave_reabsorbs_the_inflight_checkpoint_exactly_once() {
+        let p = ToyTree { height: 11 };
+        let serial = solve_serial(&p, u64::MAX);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let joiner = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut exec = ToyExec { tree: ToyTree { height: 11 } };
+            serve_slices(&mut s, &mut exec, Some(0)).unwrap()
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let pool = RemotePool::new();
+        pool.park_joined(PoolConn { stream, rank: 1 });
+        let rjob = toy_rjob(&pool);
+        let profile = ExecProfile::default()
+            .with_workers(1)
+            .with_slice_nodes(64)
+            .with_pace_ms(1)
+            .with_checkpoint_ms(5);
+        let out = run(
+            &p,
+            root_frontier(),
+            u64::MAX,
+            None,
+            0,
+            &profile,
+            &ExecControl::default(),
+            Some(&rjob),
+            |_| {},
+        );
+        assert!(out.finished);
+        assert_eq!(out.best, serial.best_cost);
+        assert_eq!(out.nodes, serial.stats.nodes, "leave lost no work and re-ran none");
+        assert_eq!(out.pool.left, 1, "the leave was accounted");
+        assert_eq!(out.pool.slices_remote, 0);
+        assert_eq!(pool.idle_count(), 0, "a left rank's conn is not re-parked");
+        let sum = joiner.join().unwrap();
+        assert!(sum.left);
+        assert_eq!(sum.slices, 0);
+    }
+}

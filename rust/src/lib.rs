@@ -40,6 +40,7 @@
 //! | §VI | experiments: Tables I/II, Figs. 9/10, `T_S`/`T_R` | [`experiments`], [`metrics`], `benches/` |
 //! | §VI (measurement) | perf-gated benchmark suite, `BENCH_*.json` | [`bench`] (`pbt bench`, spec: `docs/BENCHMARKS.md`) |
 //! | §VII | join-leave, checkpointing, **multi-machine runs** | [`coordinator`] (`Worker::leave`), [`comm::tcp`], [`runner::cluster`] |
+//! | §VII (join-leave, first-class) | placement-aware scheduler: local/remote slots, live join/leave | [`exec`] ([`exec::Scheduler`], spec: `docs/SCHEDULER.md`) |
 //! | §VII (durability) | checkpointed **solve service**: job queue, journaled resume | [`server`] (`pbt serve`, spec: `docs/SERVER.md`) |
 //!
 //! Execution strategies, all driving the identical worker state machine:
@@ -72,6 +73,7 @@ pub mod engine;
 pub mod topology;
 pub mod comm;
 pub mod coordinator;
+pub mod exec;
 pub mod runner;
 pub mod server;
 pub mod problems;

@@ -76,8 +76,10 @@ fn run_config(args: &Args) -> Result<(RunConfig, PbtConfig)> {
         Some(path) => PbtConfig::from_file(path)?,
         None => PbtConfig::default(),
     };
+    // One profile for every execution path (docs/SCHEDULER.md): config
+    // file -> ExecProfile -> CLI overrides -> the runner's RunConfig.
     let workers = args.get_usize("workers", base.workers)?;
-    let mut cfg = RunConfig { workers, worker: base.worker_config(), timeout: None };
+    let mut cfg = pbt::exec::ExecProfile::from(&base).with_workers(workers).run_config();
     cfg.worker.poll_interval = args.get_u64("poll-interval", cfg.worker.poll_interval as u64)? as u32;
     Ok((cfg, base))
 }
@@ -255,9 +257,36 @@ fn run_cluster_mode<P: Problem>(
             let connect = args.get_str("connect", &base.cluster.connect);
             let advertise = args.get_str("advertise", &base.cluster.advertise);
             let advertise = (!advertise.is_empty()).then_some(advertise);
-            let report =
-                cluster::join(problem, &connect, advertise.as_deref(), tcp, wcfg, timeout)?;
-            print_cluster_report(&report);
+            let leave_after = match args.get_u64("leave-after-slices", 0)? {
+                0 => None,
+                n => Some(n),
+            };
+            // One dial serves both worlds: a cluster rendezvous answers
+            // ASSIGN (mesh rank), a `pbt serve` daemon answers POOL (this
+            // process becomes a stateless slice server for the scheduler).
+            use pbt::comm::tcp::{Joined, TcpTransport};
+            match TcpTransport::join_or_pool(&connect, advertise.as_deref(), tcp)? {
+                Joined::Mesh(transport) => {
+                    let report = cluster::run(problem, &transport, wcfg, timeout);
+                    print_cluster_report(&report);
+                }
+                Joined::Pool(mut conn) => {
+                    eprintln!(
+                        "pool rank {}: {connect} is a pbt serve daemon — serving job slices",
+                        conn.rank
+                    );
+                    let mut exec = pbt::exec::remote::SpecExec::default();
+                    let sum =
+                        pbt::exec::remote::serve_slices(&mut conn.stream, &mut exec, leave_after)?;
+                    println!(
+                        "pool rank {}: {} slice(s), {} node(s){}",
+                        conn.rank,
+                        sum.slices,
+                        sum.nodes,
+                        if sum.left { "   (left gracefully)" } else { "   (retired by daemon)" },
+                    );
+                }
+            }
             Ok(())
         }
         "run" => {
@@ -339,6 +368,7 @@ fn print_cluster_report<S>(r: &pbt::runner::cluster::ClusterReport<S>) {
         if r.best_solution.is_some() { "   (holds a solution payload)" } else { "" },
         if r.timed_out { "   TIMED OUT" } else { "" },
     );
+    println!("{}", r.pool_stats().render_line());
     if r.peers_lost() > 0 {
         eprintln!(
             "warning: rank {}: {} peer connection(s) died mid-run — result is \
@@ -506,6 +536,7 @@ fn cmd_server_stats(args: &Args) -> Result<()> {
         s.active,
         s.queued,
     );
+    println!("{}", s.pool.render_line());
     println!("{}", s.metrics.render_table().render());
     Ok(())
 }

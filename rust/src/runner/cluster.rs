@@ -13,6 +13,7 @@ use crate::comm::tcp::{ClusterListener, TcpConfig, TcpTransport};
 use crate::comm::Transport;
 use crate::coordinator::{Worker, WorkerConfig, WorkerStats};
 use crate::engine::{Problem, SearchState};
+use crate::exec::PoolStats;
 use crate::util::Stopwatch;
 use crate::{Cost, COST_INF};
 use std::time::Duration;
@@ -57,6 +58,29 @@ impl<S> ClusterReport<S> {
     /// their socket closes and are not counted.
     pub fn peers_lost(&self) -> u64 {
         self.stats.comm.peers_lost
+    }
+
+    /// This rank's view of the cluster in the shared [`PoolStats`] shape —
+    /// the same counters `pbt server-stats` renders for the serve
+    /// scheduler, so the two execution paths report workers identically.
+    /// From any rank, the local process is one local slot and the other
+    /// `c - 1` ranks are remote slots; all `c` joined at mesh-up (the
+    /// scheduler counts local and remote joins alike).  Lost peers come
+    /// from [`peers_lost`](Self::peers_lost).  Tasks this rank donated out
+    /// are the dispatched slices; tasks it received are completed remote
+    /// slices (they ran on behalf of a peer's subtree).
+    pub fn pool_stats(&self) -> PoolStats {
+        let remote = self.c.saturating_sub(1) as u64;
+        PoolStats {
+            local_slots: 1,
+            remote_slots: remote,
+            joined: remote + 1,
+            left: 0,
+            lost: self.peers_lost(),
+            slices_dispatched: self.stats.comm.tasks_donated,
+            slices_completed: self.stats.comm.tasks_received,
+            slices_remote: self.stats.comm.tasks_received,
+        }
     }
 }
 

@@ -20,6 +20,7 @@ use crate::comm::local::LocalTransport;
 use crate::comm::{CommStats, Dest, Transport};
 use crate::coordinator::{Phase, Worker, WorkerConfig, WorkerStats};
 use crate::engine::{serial, Problem, SearchState, SearchStats};
+use crate::exec::PoolStats;
 use crate::util::Stopwatch;
 use crate::{Cost, COST_INF};
 use std::time::Duration;
@@ -86,6 +87,26 @@ impl<S> RunReport<S> {
             s.merge(&w.search);
         }
         s
+    }
+
+    /// This run's slot accounting in the shared [`PoolStats`] shape, so
+    /// `pbt solve`, `pbt cluster run` and `pbt server-stats` all render one
+    /// line the same way.  The thread runner is all-local: every worker
+    /// thread is a joined local slot, and each donated/received task maps
+    /// to a dispatched/completed slice.
+    pub fn pool_stats(&self) -> PoolStats {
+        let comm = self.total_comm();
+        let slots = self.per_worker.len() as u64;
+        PoolStats {
+            local_slots: slots,
+            remote_slots: 0,
+            joined: slots,
+            left: 0,
+            lost: 0,
+            slices_dispatched: comm.tasks_donated,
+            slices_completed: comm.tasks_received,
+            slices_remote: 0,
+        }
     }
 }
 
@@ -254,5 +275,13 @@ mod tests {
         assert!(comm.tasks_requested >= comm.tasks_received);
         // Paper Fig. 10: T_R >= T_S.
         assert!(r.avg_tasks_requested() >= r.avg_tasks_received());
+        // The shared pool view counts every thread as a joined local slot
+        // and balances dispatched against completed slices.
+        let pool = r.pool_stats();
+        assert_eq!(pool.local_slots, 4);
+        assert_eq!(pool.joined, 4);
+        assert_eq!(pool.remote_slots, 0);
+        assert_eq!(pool.slices_dispatched, pool.slices_completed);
+        assert_eq!(pool.lost, 0);
     }
 }

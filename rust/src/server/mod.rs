@@ -20,23 +20,30 @@
 //!
 //! * [`proto`] — versioned length-framed client protocol (`PBTS`).
 //! * [`journal`] — CRC-guarded append-only job journals.
-//! * [`exec`] — the checkpointed slice executor (one per running job).
+//! * [`exec`](crate::exec) — the placement-aware scheduler (one per
+//!   running job), re-exported here; its [`RemotePool`] holds the pool
+//!   ranks that joined this daemon (`pbt cluster join` against the serve
+//!   address) and every running job leases them as remote slots.
 //! * [`client`] — the client used by `pbt submit|status|result|cancel|
 //!   server-stats`.
 //! * this module — the daemon: scheduler, lifecycle, request handlers.
 
 pub mod client;
-pub mod exec;
 pub mod journal;
 pub mod proto;
 
+/// The execution layer, re-exported at its historical `server::exec` path
+/// (it grew out of this module; `crate::exec` is the canonical home).
+pub use crate::exec;
+
+use crate::comm::tcp;
 use crate::config::ServerConfig;
+use crate::exec::{ExecControl, ExecProfile, RemoteJob, RemotePool, StopKind};
 use crate::instances;
 use crate::metrics::ServerMetrics;
 use crate::problems::{BoundKind, DominatingSet, VertexCover};
 use crate::{Cost, COST_INF};
 use anyhow::{bail, Context, Result};
-use exec::{ExecControl, ExecOptions, StopKind};
 use journal::{DoneRecord, FrontierRecord, Journal};
 use proto::{JobOutcome, JobSpec, JobState, JobStatus, Request, Response, ServerStats};
 use std::collections::BTreeMap;
@@ -174,6 +181,9 @@ struct ServerState {
     active: AtomicUsize,
     shutdown: AtomicBool,
     started: Instant,
+    /// Parked pool-rank connections (cluster joiners adopted on the
+    /// client port); running jobs lease them as remote slots.
+    pool: Arc<RemotePool>,
 }
 
 /// Run the daemon until a `Shutdown` request arrives.  `on_bound` receives
@@ -190,6 +200,7 @@ pub fn serve(opts: ServeOptions, on_bound: impl FnOnce(&str)) -> Result<()> {
         active: AtomicUsize::new(0),
         shutdown: AtomicBool::new(false),
         started: Instant::now(),
+        pool: RemotePool::new(),
         opts,
     });
     adopt_journals(&state)?;
@@ -406,15 +417,22 @@ fn run_job(
             return;
         }
     };
-    let eopts = ExecOptions {
-        workers: if spec.workers == 0 {
+    let profile = ExecProfile::default()
+        .with_workers(if spec.workers == 0 {
             state.opts.default_workers
         } else {
             spec.workers as usize
-        },
-        slice_nodes: if spec.slice == 0 { state.opts.slice_nodes } else { spec.slice },
-        pace_ms: spec.pace_ms as u64,
-        checkpoint_ms: state.opts.checkpoint_ms,
+        })
+        .with_slice_nodes(if spec.slice == 0 { state.opts.slice_nodes } else { spec.slice })
+        .with_pace_ms(spec.pace_ms as u64)
+        .with_checkpoint_ms(state.opts.checkpoint_ms);
+    let rjob = RemoteJob {
+        job: id,
+        problem: spec.problem.clone(),
+        instance: spec.instance.clone(),
+        scale: spec.scale,
+        bound: spec.bound.clone(),
+        pool: Arc::clone(&state.pool),
     };
     let (init, best0, sol0, nodes0) = match resume {
         Some(f) => {
@@ -439,7 +457,8 @@ fn run_job(
             progress.nodes.store(rec.nodes_total - nodes0, Ordering::SeqCst);
             progress.best.store(rec.best, Ordering::SeqCst);
         };
-        match run_problem(&spec, init, best0, sol0, nodes0, &eopts, &control, on_checkpoint) {
+        match run_problem(&spec, init, best0, sol0, nodes0, &profile, &control, &rjob, on_checkpoint)
+        {
             Ok(out) => out,
             Err(e) => {
                 fail_job(state, id, format!("{e:#}"), Some(&mut jrn));
@@ -518,9 +537,10 @@ fn run_job(
     }
 }
 
-/// Instantiate the problem named by the spec and run the executor on it.
-/// Monomorphic dispatch: each problem family gets its own executor
-/// instantiation over the same generic engine.
+/// Instantiate the problem named by the spec and run the scheduler on it.
+/// Monomorphic dispatch: each problem family gets its own scheduler
+/// instantiation over the same generic engine.  `rjob` lets the run lease
+/// this daemon's pool ranks as remote slots alongside its local threads.
 #[allow(clippy::too_many_arguments)]
 fn run_problem<F>(
     spec: &JobSpec,
@@ -528,14 +548,16 @@ fn run_problem<F>(
     best0: Cost,
     sol0: Option<Vec<u32>>,
     nodes0: u64,
-    eopts: &ExecOptions,
+    profile: &ExecProfile,
     control: &ExecControl,
+    rjob: &RemoteJob,
     on_checkpoint: F,
 ) -> Result<exec::ExecOutcome>
 where
     F: FnMut(&FrontierRecord),
 {
     let g = instances::resolve_spec(&spec.instance, spec.scale as usize)?;
+    let remote = Some(rjob);
     match spec.problem.as_str() {
         "vc" => {
             let bound = match spec.bound.as_str() {
@@ -544,15 +566,15 @@ where
                 _ => BoundKind::EdgesOverMaxDeg,
             };
             let p = VertexCover::with_bound(&g, bound);
-            Ok(exec::run(&p, init, best0, sol0, nodes0, eopts, control, on_checkpoint))
+            Ok(exec::run(&p, init, best0, sol0, nodes0, profile, control, remote, on_checkpoint))
         }
         "ds" => {
             let p = DominatingSet::new(&g);
-            Ok(exec::run(&p, init, best0, sol0, nodes0, eopts, control, on_checkpoint))
+            Ok(exec::run(&p, init, best0, sol0, nodes0, profile, control, remote, on_checkpoint))
         }
         "clique" => {
             let p = crate::problems::MaxClique::new(&g);
-            Ok(exec::run(&p, init, best0, sol0, nodes0, eopts, control, on_checkpoint))
+            Ok(exec::run(&p, init, best0, sol0, nodes0, profile, control, remote, on_checkpoint))
         }
         other => bail!("unknown problem {other:?} (serve supports vc|ds|clique)"),
     }
@@ -617,8 +639,21 @@ fn handle_connection(state: &Arc<ServerState>, mut stream: TcpStream) -> Result<
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
 
-    // Handshake: a non-pbt client is answered with ERR and dropped.
+    // Handshake.  A cluster joiner's HELLO (PBT2 magic) on this port is a
+    // pool join: assign a rank, answer POOL, and park the connection —
+    // running jobs lease it as a remote slot (§VII join, on a live job).
+    // PBTS clients and cluster joiners share blob framing, so the first
+    // frame's payload is the discriminator.
     let hello_bytes = proto::read_msg(&mut stream)?;
+    if tcp::is_pool_hello(&hello_bytes) {
+        let rank = state.pool.assign_rank();
+        crate::comm::wire::write_blob_frame(&mut stream, &tcp::pool_assign_frame(rank))?;
+        eprintln!("pbt serve: pool rank {rank} joined");
+        state.pool.park_joined(tcp::PoolConn { stream, rank });
+        return Ok(());
+    }
+    // Anything else that fails the client handshake is answered with ERR
+    // and dropped.
     if proto::Hello::decode(&hello_bytes).is_err() {
         let rsp = Response::Err("not a pbt serve client (magic/proto mismatch)".into());
         let _ = proto::write_msg(&mut stream, &rsp.encode());
@@ -779,5 +814,6 @@ fn handle_stats(state: &Arc<ServerState>) -> Response {
         active,
         queued,
         metrics: *state.metrics.lock().expect("metrics lock"),
+        pool: state.pool.cumulative(),
     })
 }

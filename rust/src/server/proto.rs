@@ -19,6 +19,7 @@
 //! clients: there is no per-connection session state to reap.
 
 use crate::comm::wire;
+use crate::exec::PoolStats;
 use crate::metrics::ServerMetrics;
 use std::io::{Read, Write};
 
@@ -27,8 +28,9 @@ pub const MAGIC: &[u8; 4] = b"PBTS";
 
 /// Bumped on incompatible frame-layout changes; a daemon refuses a client
 /// speaking a different protocol version (crate-version skew is only a
-/// warning, layout skew is not survivable).
-pub const PROTO_VERSION: u32 = 1;
+/// warning, layout skew is not survivable).  v2: `Stats` responses carry
+/// the pool-slot counters ([`PoolStats`]) after the metrics block.
+pub const PROTO_VERSION: u32 = 2;
 
 /// Ceiling for one protocol frame (a result payload is one `u32` per
 /// solution vertex — far below this; anything larger is not a pbt peer).
@@ -303,6 +305,9 @@ pub struct ServerStats {
     pub active: u32,
     pub queued: u32,
     pub metrics: ServerMetrics,
+    /// Daemon-lifetime pool accounting (local threads + remote ranks,
+    /// counted identically — the same shape `pbt cluster run` reports).
+    pub pool: PoolStats,
 }
 
 /// Handshake opener (client → daemon).
@@ -515,6 +520,19 @@ impl Response {
                 ] {
                     push_u64(&mut out, v);
                 }
+                let p = &s.pool;
+                for v in [
+                    p.local_slots,
+                    p.remote_slots,
+                    p.joined,
+                    p.left,
+                    p.lost,
+                    p.slices_dispatched,
+                    p.slices_completed,
+                    p.slices_remote,
+                ] {
+                    push_u64(&mut out, v);
+                }
             }
             Response::Err(msg) => {
                 out.push(TAG_ERR);
@@ -571,6 +589,10 @@ impl Response {
                 for v in &mut vals {
                     *v = take_u64(b, &mut pos)?;
                 }
+                let mut pvals = [0u64; 8];
+                for v in &mut pvals {
+                    *v = take_u64(b, &mut pos)?;
+                }
                 Response::Stats(ServerStats {
                     version,
                     git_rev,
@@ -587,6 +609,16 @@ impl Response {
                         checkpoints_written: vals[5],
                         checkpoint_bytes: vals[6],
                         nodes_explored: vals[7],
+                    },
+                    pool: PoolStats {
+                        local_slots: pvals[0],
+                        remote_slots: pvals[1],
+                        joined: pvals[2],
+                        left: pvals[3],
+                        lost: pvals[4],
+                        slices_dispatched: pvals[5],
+                        slices_completed: pvals[6],
+                        slices_remote: pvals[7],
                     },
                 })
             }
@@ -709,6 +741,16 @@ mod tests {
                     checkpoint_bytes: 4096,
                     nodes_explored: 123456,
                     ..Default::default()
+                },
+                pool: PoolStats {
+                    local_slots: 4,
+                    remote_slots: 1,
+                    joined: 5,
+                    left: 1,
+                    lost: 0,
+                    slices_dispatched: 64,
+                    slices_completed: 63,
+                    slices_remote: 20,
                 },
             }),
             Response::Err("no such job".into()),

@@ -97,10 +97,11 @@ fn join_leave_failure_injection() {
 
     let mut w = Worker::new(&p, 0, 2, WorkerConfig::default());
     w.step_batch(500);
-    let cp = w.leave().expect("work remains");
+    let cps = w.leave();
+    assert_eq!(cps.len(), 1, "one stepper subtree, no pending donations");
     let visited = w.stats.search.nodes;
 
-    let mut replacement = Stepper::from_checkpoint(&p, &cp).unwrap();
+    let mut replacement = Stepper::from_checkpoint(&p, &cps[0]).unwrap();
     let mut best = COST_INF;
     loop {
         match replacement.step(best) {
@@ -240,8 +241,9 @@ fn clique_checkpoint_and_donation_reach_serial_optimum() {
     // plus the replacement's run-out must find the exact optimum.
     let mut w = Worker::new(&p, 0, 2, WorkerConfig::default());
     w.step_batch(200);
-    let cp = w.leave().expect("mid-search leave must yield a checkpoint");
-    let mut replacement = Stepper::from_checkpoint(&p, &cp).unwrap();
+    let cps = w.leave();
+    assert_eq!(cps.len(), 1, "mid-search leave must yield exactly one checkpoint");
+    let mut replacement = Stepper::from_checkpoint(&p, &cps[0]).unwrap();
     let mut best = COST_INF;
     loop {
         match replacement.step(best) {

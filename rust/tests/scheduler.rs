@@ -1,0 +1,199 @@
+//! Integration tests for the placement-aware scheduler (`pbt::exec`),
+//! end-to-end over real sockets: a `pbt serve` job executed by one local
+//! thread plus one remote pool rank must reach the exact serial optimum
+//! with exact node conservation (bound "none" disables pruning, so the
+//! enumeration tree is worker-schedule-independent), and a rank that
+//! leaves mid-job must lose no frontier work — its in-flight checkpoint
+//! is re-absorbed exactly once.
+
+use pbt::comm::tcp::{Joined, TcpConfig, TcpTransport};
+use pbt::engine::serial::solve_serial_with_shape;
+use pbt::exec::remote::{serve_slices, ServeSummary, SpecExec};
+use pbt::instances::resolve_spec;
+use pbt::problems::{BoundKind, VertexCover};
+use pbt::server::client::Client;
+use pbt::server::proto::{JobSpec, JobState};
+use pbt::server::{serve, ServeOptions};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("pbt-scheduler-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Pick a VC instance whose *unpruned* (bound "none") enumeration tree is
+/// big enough to slice across two slots but small enough for CI.  The
+/// serial TreeShape totals are the conservation oracle.
+fn pick_instance() -> (&'static str, u64, u64) {
+    let candidates = ["gnm:16:50:3", "gnm:18:60:3", "gnm:20:80:5", "gnm:24:100:3"];
+    for spec in candidates {
+        let g = resolve_spec(spec, 0).unwrap();
+        let r = solve_serial_with_shape(&VertexCover::with_bound(&g, BoundKind::None), u64::MAX);
+        let shape = r.tree_shape.expect("shape collection enabled");
+        let nodes = shape.total_nodes();
+        assert_eq!(nodes, r.stats.nodes, "TreeShape totals agree with SearchStats");
+        if (2_000..=120_000).contains(&nodes) {
+            return (spec, nodes, r.best_cost.expect("a cover exists"));
+        }
+    }
+    panic!("no candidate instance grows a testable enumeration tree");
+}
+
+/// In-process daemon on an ephemeral port with exactly one local worker
+/// slot per job, so remote ranks visibly share the work.
+fn spawn_daemon(journal: PathBuf, slice_nodes: u32) -> (String, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let opts = ServeOptions {
+            bind: "127.0.0.1:0".into(),
+            journal_dir: journal,
+            max_active: 1,
+            default_workers: 1,
+            slice_nodes,
+            checkpoint_ms: 10,
+        };
+        serve(opts, move |addr| tx.send(addr.to_string()).unwrap()).expect("daemon runs");
+    });
+    let addr = rx.recv_timeout(Duration::from_secs(30)).expect("daemon bound");
+    (addr, handle)
+}
+
+/// Dial the daemon's client port with a cluster HELLO (the
+/// `pbt cluster join` path) and serve job slices until retired.
+fn join_pool(
+    addr: String,
+    leave_after: Option<u64>,
+) -> std::thread::JoinHandle<std::io::Result<ServeSummary>> {
+    std::thread::spawn(move || {
+        match TcpTransport::join_or_pool(&addr, None, TcpConfig::default())
+            .expect("dialing the daemon")
+        {
+            Joined::Pool(mut conn) => {
+                // Backstop: a wedged daemon must fail the test, not hang it.
+                conn.stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+                serve_slices(&mut conn.stream, &mut SpecExec::default(), leave_after)
+            }
+            Joined::Mesh(_) => panic!("a serve daemon must answer POOL, not ASSIGN"),
+        }
+    })
+}
+
+/// Block until the daemon's cumulative pool stats report a joined rank.
+fn wait_for_join(addr: &str) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let s = Client::connect(addr).unwrap().stats().unwrap();
+        if s.pool.remote_slots >= 1 {
+            return;
+        }
+        assert!(Instant::now() < deadline, "pool rank never joined: {:?}", s.pool);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// ISSUE acceptance: one local thread + one joined remote rank solve a
+/// `pbt serve` job to the exact serial optimum, with at least one slice
+/// executed remotely and exact node conservation.
+#[test]
+fn local_thread_plus_remote_rank_reach_exact_serial_optimum() {
+    let (spec, serial_nodes, expected) = pick_instance();
+    let slice = u32::try_from((serial_nodes / 60).clamp(50, 300)).unwrap();
+    let dir = tmp_dir("remote");
+    let (addr, handle) = spawn_daemon(dir.clone(), slice);
+
+    let joiner = join_pool(addr.clone(), None);
+    wait_for_join(&addr);
+
+    let id = Client::connect(&addr)
+        .unwrap()
+        .submit(&JobSpec {
+            problem: "vc".into(),
+            instance: spec.into(),
+            scale: 0,
+            bound: "none".into(),
+            workers: 1,
+            priority: 0,
+            slice,
+            pace_ms: 5,
+        })
+        .unwrap();
+    let out = Client::connect(&addr).unwrap().result(id, 240_000).unwrap();
+    assert_eq!(out.state, JobState::Done);
+    assert_eq!(out.best, Some(expected), "optimum over local + remote slots");
+    let g = resolve_spec(spec, 0).unwrap();
+    assert!(g.is_vertex_cover(&out.solution), "payload is a real cover");
+    // Exact node conservation across the wire: with pruning disabled the
+    // two slots together explore the serial enumeration tree exactly.
+    assert_eq!(out.nodes, serial_nodes, "every node visited exactly once");
+    assert_eq!(out.nodes_total, serial_nodes);
+
+    let stats = Client::connect(&addr).unwrap().stats().unwrap();
+    assert!(stats.pool.remote_slots >= 1, "rank counted: {:?}", stats.pool);
+    assert!(stats.pool.slices_remote >= 1, "remote executed work: {:?}", stats.pool);
+    assert!(stats.pool.joined >= 2, "local slot + remote rank both joined: {:?}", stats.pool);
+    assert_eq!(stats.pool.lost, 0, "no connection died: {:?}", stats.pool);
+    let remote_slices = stats.pool.slices_remote;
+
+    // Daemon shutdown closes the parked connection; the rank retires
+    // cleanly, having answered exactly the slices the daemon counted.
+    Client::connect(&addr).unwrap().shutdown().unwrap();
+    handle.join().unwrap();
+    let sum = joiner.join().unwrap().expect("clean retirement on daemon close");
+    assert!(!sum.left, "daemon-close retirement, not a LEAVE");
+    assert_eq!(sum.slices, remote_slices, "both sides agree on the slice count");
+    assert!(sum.nodes > 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// ISSUE acceptance: a rank that leaves mid-job loses no frontier work —
+/// the slice it refuses travels back into the queue untouched and the
+/// job still explores the serial tree exactly once.
+#[test]
+fn rank_leave_mid_job_loses_no_frontier_work() {
+    let (spec, serial_nodes, expected) = pick_instance();
+    let slice = u32::try_from((serial_nodes / 60).clamp(50, 300)).unwrap();
+    let dir = tmp_dir("leave");
+    let (addr, handle) = spawn_daemon(dir.clone(), slice);
+
+    // Execute one slice, then answer the second request with LEAVE.
+    let joiner = join_pool(addr.clone(), Some(1));
+    wait_for_join(&addr);
+
+    let id = Client::connect(&addr)
+        .unwrap()
+        .submit(&JobSpec {
+            problem: "vc".into(),
+            instance: spec.into(),
+            scale: 0,
+            bound: "none".into(),
+            workers: 1,
+            priority: 0,
+            slice,
+            pace_ms: 5,
+        })
+        .unwrap();
+    let out = Client::connect(&addr).unwrap().result(id, 240_000).unwrap();
+    assert_eq!(out.state, JobState::Done);
+    assert_eq!(out.best, Some(expected), "optimum survives the departure");
+    // The departed rank's unexecuted checkpoint was re-absorbed exactly
+    // once: no node lost, none explored twice.
+    assert_eq!(out.nodes, serial_nodes, "queue ∪ slots stayed a durable cover");
+
+    let sum = joiner.join().unwrap().expect("graceful LEAVE session");
+    assert!(sum.left, "the rank left on its own");
+    assert_eq!(sum.slices, 1, "executed exactly one slice before leaving");
+
+    let stats = Client::connect(&addr).unwrap().stats().unwrap();
+    assert_eq!(stats.pool.left, 1, "departure accounted as a leave: {:?}", stats.pool);
+    assert_eq!(stats.pool.lost, 0, "a graceful leave is not a loss: {:?}", stats.pool);
+    assert!(stats.pool.slices_remote >= 1, "its one slice was counted: {:?}", stats.pool);
+
+    Client::connect(&addr).unwrap().shutdown().unwrap();
+    handle.join().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
