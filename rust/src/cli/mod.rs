@@ -100,17 +100,22 @@ COMMANDS:
     cluster     multi-process PARALLEL-RB over TCP (see docs/WIRE_PROTOCOL.md)
                   cluster listen --bind HOST:PORT --peers C  [solve flags]
                   cluster join   --connect HOST:PORT [--advertise HOST]  [solve flags]
-                                 [--leave-after-slices N]
+                                 [--leave-after-slices N]  [--reconnect]
+                                 [--reconnect-base-ms T] [--reconnect-cap-ms T]
+                                 [--reconnect-max N]
                   cluster run    --peers C                   [solve flags]
                 (listen = rendezvous + rank 0; join = one extra rank;
                  run = spawn C-1 local join processes and listen — the
                  one-command localhost demo.  Pointing join at a `pbt serve`
                  daemon turns the process into a pool rank executing job
                  slices for the scheduler, docs/SCHEDULER.md;
-                 --leave-after-slices makes it leave gracefully after N)
+                 --leave-after-slices makes it leave gracefully after N;
+                 --reconnect makes a pool rank re-dial a lost daemon with
+                 capped exponential backoff, up to --reconnect-max tries)
     serve       durable multi-job solve daemon (see docs/SERVER.md)
                   [--bind HOST:PORT]  [--journal DIR]  [--max-active N]
                   [--workers N]  [--slice NODES]  [--checkpoint-ms T]
+                  [--remote-window N]  (SLICEs in flight per pool rank)
                 (prints `SERVING <addr>`; kill -9 + restart with the same
                  --journal resumes every in-flight job from its checkpoint)
     submit      queue a job on a running daemon; prints `JOB <id>`

@@ -1,0 +1,129 @@
+//! Capped exponential backoff with deterministic jitter, for supervised
+//! reconnect loops (`pbt cluster join --reconnect`; ROADMAP item 3 names
+//! the same shape for the comm core at large).
+//!
+//! The delay for attempt *n* is `base · 2^(n−1)` clamped to `cap`, then
+//! scaled by a jitter factor in [0.75, 1.0] derived from a splitmix64
+//! hash of `(seed, n)` — downward-only, so the cap is a hard ceiling,
+//! deterministic, so tests are exact, and seed-dependent, so a fleet of
+//! ranks reconnecting after one daemon restart fans out instead of
+//! stampeding in lockstep.  No `rand` dependency (vendored-only build).
+
+use std::time::Duration;
+
+/// Exponent clamp: beyond `base · 2^20` the cap has long since taken
+/// over, and larger shifts would overflow small bases.
+const MAX_SHIFT: u32 = 20;
+
+/// One reconnect schedule.  [`Backoff::next_delay`] advances the attempt
+/// counter; [`Backoff::reset`] rewinds it after a successful session so
+/// the next failure starts the ramp from `base` again.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    seed: u64,
+    attempt: u64,
+}
+
+impl Backoff {
+    /// `base` = first delay, `cap` = ceiling; `seed` decorrelates the
+    /// jitter across processes (ranks pass something unique, e.g. pid).
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff { base: base.max(Duration::from_millis(1)), cap, seed, attempt: 0 }
+    }
+
+    /// Delay before the next attempt (advances the schedule).
+    pub fn next_delay(&mut self) -> Duration {
+        self.attempt += 1;
+        let shift = (self.attempt - 1).min(MAX_SHIFT as u64) as u32;
+        let exp = self.base.saturating_mul(1u32 << shift.min(MAX_SHIFT)).min(self.cap);
+        // Jitter in [75%, 100%] of the capped value, deterministic per
+        // (seed, attempt).
+        let pct = 75 + mix(self.seed ^ self.attempt) % 26;
+        exp.mul_f64(pct as f64 / 100.0)
+    }
+
+    /// Attempts taken since construction or the last [`Backoff::reset`].
+    pub fn attempts(&self) -> u64 {
+        self.attempt
+    }
+
+    /// Rewind after a successful session: the next failure ramps from
+    /// `base` again.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+/// splitmix64 finalizer — a tiny, well-mixed hash for jitter.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn ramps_exponentially_to_the_cap_and_never_exceeds_it() {
+        let mut b = Backoff::new(ms(100), ms(2000), 42);
+        let mut prev_ceiling = 0u128;
+        for attempt in 1..=12u32 {
+            let d = b.next_delay();
+            // The jittered delay sits in [75%, 100%] of the capped
+            // exponential for this attempt.
+            let ceiling = ms(100)
+                .saturating_mul(1u32 << (attempt - 1).min(20))
+                .min(ms(2000))
+                .as_millis();
+            assert!(d.as_millis() <= ceiling, "attempt {attempt}: {d:?} over {ceiling}ms");
+            assert!(
+                d.as_millis() * 4 >= ceiling * 3,
+                "attempt {attempt}: {d:?} under 75% of {ceiling}ms"
+            );
+            assert!(ceiling >= prev_ceiling, "ceiling is monotone");
+            prev_ceiling = ceiling;
+        }
+        // Deep into the schedule the cap rules: 2000ms ceiling, ≥1500ms.
+        assert_eq!(prev_ceiling, 2000);
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_decorrelated_across_seeds() {
+        let mut a1 = Backoff::new(ms(50), ms(1000), 7);
+        let mut a2 = Backoff::new(ms(50), ms(1000), 7);
+        let mut b = Backoff::new(ms(50), ms(1000), 8);
+        let s1: Vec<_> = (0..8).map(|_| a1.next_delay()).collect();
+        let s2: Vec<_> = (0..8).map(|_| a2.next_delay()).collect();
+        let s3: Vec<_> = (0..8).map(|_| b.next_delay()).collect();
+        assert_eq!(s1, s2, "same seed, same schedule");
+        assert_ne!(s1, s3, "different seeds desynchronize the fleet");
+    }
+
+    #[test]
+    fn reset_rewinds_the_ramp() {
+        let mut b = Backoff::new(ms(100), ms(10_000), 3);
+        let first = b.next_delay();
+        for _ in 0..5 {
+            b.next_delay();
+        }
+        assert_eq!(b.attempts(), 6);
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        assert_eq!(b.next_delay(), first, "post-reset schedule restarts from base");
+    }
+
+    #[test]
+    fn degenerate_base_is_clamped_not_zero() {
+        let mut b = Backoff::new(Duration::ZERO, ms(100), 1);
+        assert!(b.next_delay() > Duration::ZERO);
+    }
+}

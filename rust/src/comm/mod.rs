@@ -12,6 +12,7 @@
 //! The byte-level message format is specified in `docs/WIRE_PROTOCOL.md`
 //! and implemented (with exhaustive round-trip tests) in [`wire`].
 
+pub mod backoff;
 pub mod local;
 pub mod tcp;
 pub mod wire;

@@ -142,6 +142,49 @@ pub(crate) fn pool_assign_frame(rank: u64) -> Vec<u8> {
     out
 }
 
+/// Marker prefix on the advertised-addr string of a pool `HELLO` sent by
+/// a *re*-connecting rank (`pbt cluster join --reconnect` after a lost
+/// session).  The pool flow never dials the advertised address (ranks
+/// accept nothing), so the string is a free side channel; daemons predating
+/// the marker simply adopt the rank as a fresh join — wire-compatible.
+const POOL_RECONNECT_PREFIX: &str = "reconnect!";
+
+/// Does this pool `HELLO` carry the reconnect marker?  (The daemon counts
+/// these as `reconnects` rather than fresh `joined`.)
+pub(crate) fn pool_hello_is_reconnect(frame: &[u8]) -> bool {
+    if !is_pool_hello(frame) {
+        return false;
+    }
+    let mut pos = 1 + MAGIC.len();
+    matches!(pull_str(frame, &mut pos), Ok(s) if s.starts_with(POOL_RECONNECT_PREFIX))
+}
+
+/// Re-dial a serve daemon as a returning pool rank: a plain pool `HELLO`
+/// with the reconnect marker, expecting a `POOL{rank}` adoption.  Unlike
+/// [`TcpTransport::join_or_pool`] this never binds a mesh listener (pool
+/// ranks accept nothing) and treats a mesh `ASSIGN` answer as an error —
+/// it is only called after a first session already proved the far end is
+/// a daemon.
+pub fn pool_reconnect(addr: &str, cfg: TcpConfig) -> io::Result<PoolConn> {
+    let mut stream = connect_with_timeout(addr, cfg.connect_timeout)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(cfg.handshake_timeout))?;
+    let mut hello = vec![HS_HELLO];
+    hello.extend_from_slice(MAGIC);
+    // Pool ranks are never dialed back, so the advertised address is
+    // vestigial — the marker plus a null address keeps the frame shape.
+    push_str(&mut hello, &format!("{POOL_RECONNECT_PREFIX}0.0.0.0:0"));
+    write_hs(&mut stream, &hello)?;
+    let assign = read_hs(&mut stream)?;
+    if assign.first() != Some(&HS_POOL) {
+        return Err(proto_err("expected POOL adoption on reconnect"));
+    }
+    let mut pos = 1;
+    let rank = pull_u64(&assign, &mut pos)?;
+    stream.set_read_timeout(None)?;
+    Ok(PoolConn { stream, rank })
+}
+
 /// One adopted pool connection: a cluster joiner that dialed a `pbt
 /// serve` daemon instead of a rendezvous and was answered `POOL{rank}`.
 /// The daemon side parks these in an `exec::RemotePool`; the joiner side
@@ -644,6 +687,51 @@ mod tests {
         let t = Instant::now();
         assert_eq!(mesh[0].recv_timeout(Duration::from_millis(20)), None);
         assert!(t.elapsed() >= Duration::from_millis(19));
+    }
+
+    #[test]
+    fn reconnect_hello_marker_roundtrips_and_plain_hello_is_unmarked() {
+        // A marked reconnect HELLO over a real socket: the fake daemon
+        // must classify it and adopt with an arbitrary rank.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let daemon = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let hello = read_hs(&mut s).unwrap();
+            assert!(is_pool_hello(&hello), "reconnect HELLO is still a pool HELLO");
+            assert!(pool_hello_is_reconnect(&hello));
+            write_hs(&mut s, &pool_assign_frame(5)).unwrap();
+            // Hold the stream open until the client has read the answer.
+            let _ = read_hs(&mut s);
+        });
+        let conn = pool_reconnect(&addr, TcpConfig::default()).unwrap();
+        assert_eq!(conn.rank, 5);
+        drop(conn);
+        daemon.join().unwrap();
+
+        // A first-contact HELLO (what join_or_pool sends) is unmarked.
+        let mut plain = vec![HS_HELLO];
+        plain.extend_from_slice(MAGIC);
+        push_str(&mut plain, "10.0.0.9:4242");
+        assert!(is_pool_hello(&plain));
+        assert!(!pool_hello_is_reconnect(&plain));
+        // Garbage never classifies as a reconnect.
+        assert!(!pool_hello_is_reconnect(&[HS_HELLO]));
+        assert!(!pool_hello_is_reconnect(b"PBTSnonsense"));
+    }
+
+    #[test]
+    fn pool_reconnect_rejects_a_mesh_assign_answer() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let daemon = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let _ = read_hs(&mut s).unwrap();
+            // A rendezvous would answer ASSIGN — nonsense for a reconnect.
+            write_hs(&mut s, &[HS_ASSIGN]).unwrap();
+        });
+        assert!(pool_reconnect(&addr, TcpConfig::default()).is_err());
+        daemon.join().unwrap();
     }
 
     #[test]

@@ -285,7 +285,13 @@ fn done(bytes: &[u8], pos: usize) -> Result<(), WireError> {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SliceRequest {
     /// Dispatch sequence number; the matching [`SliceResult`] must echo
-    /// it (staleness guard).
+    /// it (staleness guard).  With a pipelined dispatcher several seqs
+    /// are outstanding per connection at once (`ExecProfile::
+    /// remote_window` credits); ranks answer strictly in request order,
+    /// so the scheduler matches each result against the *oldest*
+    /// outstanding seq.  The byte layout is unchanged from the original
+    /// one-in-flight protocol — pipelining is purely a dispatcher-side
+    /// windowing of the same frames, so old and new peers interoperate.
     pub seq: u64,
     /// Daemon job id (observability; one connection runs one job at a
     /// time, so it is not a demultiplexing key).

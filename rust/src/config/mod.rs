@@ -190,6 +190,10 @@ pub struct ServerConfig {
     pub slice_nodes: u32,
     /// Milliseconds between journal checkpoint drains per running job.
     pub checkpoint_ms: u64,
+    /// `SLICE` frames kept in flight per remote pool rank (credit
+    /// window).  1 = synchronous round-trips; 2–4 overlaps wire latency
+    /// with rank compute.
+    pub remote_window: usize,
 }
 
 impl Default for ServerConfig {
@@ -202,6 +206,7 @@ impl Default for ServerConfig {
             workers: 2,
             slice_nodes: 10_000,
             checkpoint_ms: 500,
+            remote_window: 2,
         }
     }
 }
@@ -326,6 +331,9 @@ impl PbtConfig {
         if let Some(v) = geti("server", "checkpoint_ms") {
             cfg.server.checkpoint_ms = v as u64;
         }
+        if let Some(v) = geti("server", "remote_window") {
+            cfg.server.remote_window = (v as usize).max(1);
+        }
         Ok(cfg)
     }
 
@@ -398,7 +406,8 @@ mod tests {
     fn server_section_parses() {
         let cfg = PbtConfig::from_text(
             "[server]\nbind = \"0.0.0.0:9000\"\njournal_dir = \"/var/lib/pbt\"\n\
-             max_active = 4\nworkers = 8\nslice_nodes = 2000\ncheckpoint_ms = 100\n",
+             max_active = 4\nworkers = 8\nslice_nodes = 2000\ncheckpoint_ms = 100\n\
+             remote_window = 4\n",
         )
         .unwrap();
         assert_eq!(cfg.server.bind, "0.0.0.0:9000");
@@ -407,6 +416,7 @@ mod tests {
         assert_eq!(cfg.server.workers, 8);
         assert_eq!(cfg.server.slice_nodes, 2000);
         assert_eq!(cfg.server.checkpoint_ms, 100);
+        assert_eq!(cfg.server.remote_window, 4);
         // Untouched keys keep defaults.
         assert_eq!(cfg.server.connect, ServerConfig::default().connect);
         assert_eq!(PbtConfig::from_text("").unwrap().server, ServerConfig::default());

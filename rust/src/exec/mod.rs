@@ -18,7 +18,7 @@
 //!   `RESULT` frames — the rank itself runs [`remote::serve_slices`] and
 //!   is fully stateless between slices.
 //!
-//! At every slice boundary a slot refreshes its snapshot and, when peers
+//! At every slice boundary a slot refreshes its in-flight entry and, when peers
 //! are idle, donates heaviest-first subtrees ([`Stepper::donate`]) into
 //! the queue, so load balancing inside a job is the paper's donation
 //! scheme at slice granularity — across machines included.
@@ -26,16 +26,19 @@
 //! ## The durability invariant
 //!
 //! At any instant, every unfinished subtree is covered by `queue ∪ slots`:
-//! a pop installs the popped blob as the slot's snapshot *in the same
-//! critical section*, and snapshot refreshes happen *before* the
-//! donations they exclude are pushed.  Slot snapshots are allowed to be
-//! **stale** (up to one slice old) — a stale checkpoint describes a
+//! a pop installs the popped blob in the slot's in-flight map *in the
+//! same critical section*, and in-flight refreshes happen *before* the
+//! donations they exclude are pushed.  In-flight checkpoints are allowed
+//! to be **stale** (up to one slice old) — a stale checkpoint describes a
 //! superset of the remaining work, so a crash-resume re-explores at most
-//! a slice's worth of nodes per slot and loses nothing.  Remote slots
-//! keep the invariant the same way: the snapshot is the checkpoint last
-//! *sent*, so a rank that dies or leaves mid-slice just has its
-//! checkpoint requeued (at-least-once; a graceful leave between slices is
-//! exactly-once).
+//! a slice's worth of nodes per entry and loses nothing.  A local slot
+//! holds at most one in-flight entry; a remote slot holds up to
+//! [`ExecProfile::remote_window`] seq-keyed entries (the pipelined credit
+//! window), one per `SLICE` frame on the wire, each the checkpoint as
+//! last *sent*.  A rank that dies mid-window has its whole in-flight map
+//! requeued (at-least-once, bounded by the window); a graceful leave
+//! answers `LEAVE` in place of the oldest result with nothing after it
+//! executed, so the same whole-window requeue is exactly-once.
 //!
 //! Ranks join and leave a **live** job: the daemon parks handshaken pool
 //! connections in a [`RemotePool`], and a running job's drain loop leases
@@ -78,6 +81,12 @@ const MAX_DONATE_PER_SLICE: usize = 4;
 /// not a pacing knob.
 const SLICE_READ_TIMEOUT: Duration = Duration::from_secs(300);
 
+/// Socket-level deadline for one poll of the dispatcher's frame reader.
+/// Short so stop requests interrupt a blocked read promptly (a cancel
+/// used to stall for the full [`SLICE_READ_TIMEOUT`]); the overall wait
+/// for one RESULT is still bounded by [`SLICE_READ_TIMEOUT`].
+const POLL_READ_TIMEOUT: Duration = Duration::from_millis(100);
+
 /// A subtree checkpoint blob — the durable currency of the whole system
 /// ([`Stepper::checkpoint_bytes`] / [`Stepper::from_checkpoint`]).
 ///
@@ -100,6 +109,10 @@ pub struct ExecProfile {
     pub pace_ms: u64,
     /// Interval between `on_checkpoint` drains.
     pub checkpoint_ms: u64,
+    /// `SLICE` frames kept in flight per remote rank (credit window;
+    /// scheduler remote leg only).  1 = synchronous round-trips; the
+    /// default of 2 overlaps wire latency with rank compute.
+    pub remote_window: usize,
     /// Worker-protocol tunables (poll interval, donation batch, victim
     /// strategy) for the runner/cluster front-ends.
     pub worker: WorkerConfig,
@@ -114,6 +127,7 @@ impl Default for ExecProfile {
             slice_nodes: 10_000,
             pace_ms: 0,
             checkpoint_ms: 500,
+            remote_window: 2,
             worker: WorkerConfig::default(),
             timeout: None,
         }
@@ -138,6 +152,11 @@ impl ExecProfile {
 
     pub fn with_checkpoint_ms(mut self, checkpoint_ms: u64) -> Self {
         self.checkpoint_ms = checkpoint_ms.max(1);
+        self
+    }
+
+    pub fn with_remote_window(mut self, remote_window: usize) -> Self {
+        self.remote_window = remote_window.max(1);
         self
     }
 
@@ -169,6 +188,7 @@ impl From<&PbtConfig> for ExecProfile {
             slice_nodes: c.server.slice_nodes.max(1),
             pace_ms: 0,
             checkpoint_ms: c.server.checkpoint_ms.max(1),
+            remote_window: c.server.remote_window.max(1),
             worker: c.worker_config(),
             timeout: None,
         }
@@ -182,6 +202,7 @@ impl From<&ServerConfig> for ExecProfile {
             slice_nodes: c.slice_nodes.max(1),
             pace_ms: 0,
             checkpoint_ms: c.checkpoint_ms.max(1),
+            remote_window: c.remote_window.max(1),
             worker: WorkerConfig::default(),
             timeout: None,
         }
@@ -237,7 +258,10 @@ pub struct PoolStats {
     pub left: u64,
     /// Slot deaths (timeout / broken wire) whose checkpoints were requeued.
     pub lost: u64,
-    /// Slices handed to a slot.
+    /// Pool ranks that re-joined after losing their connection (the
+    /// supervised `pbt cluster join --reconnect` loop).
+    pub reconnects: u64,
+    /// Slices handed to a slot (counted when the slice *starts*).
     pub slices_dispatched: u64,
     /// Slices a slot finished.
     pub slices_completed: u64,
@@ -253,24 +277,35 @@ impl PoolStats {
         self.joined += o.joined;
         self.left += o.left;
         self.lost += o.lost;
+        self.reconnects += o.reconnects;
         self.slices_dispatched += o.slices_dispatched;
         self.slices_completed += o.slices_completed;
         self.slices_remote += o.slices_remote;
+    }
+
+    /// Slices handed out but not yet finished — the live in-flight gauge.
+    /// Dispatch is counted at slice start on both placements, so this is
+    /// meaningful mid-run; slices abandoned to a lost rank stay in the
+    /// gauge until their requeued checkpoints are re-dispatched elsewhere.
+    pub fn in_flight(&self) -> u64 {
+        self.slices_dispatched.saturating_sub(self.slices_completed)
     }
 
     /// The one-line rendering both CLI surfaces print.
     pub fn render_line(&self) -> String {
         format!(
             "pool: {} local + {} remote slot(s)   joined: {}   left: {}   lost: {}   \
-             slices: {}/{} done ({} remote)",
+             reconnects: {}   slices: {}/{} done ({} remote, {} in flight)",
             self.local_slots,
             self.remote_slots,
             self.joined,
             self.left,
             self.lost,
+            self.reconnects,
             self.slices_completed,
             self.slices_dispatched,
             self.slices_remote,
+            self.in_flight(),
         )
     }
 }
@@ -326,15 +361,18 @@ enum Departure {
 
 struct SlotState {
     placement: WorkerSlot,
-    /// Snapshot of the subtree this slot is running (possibly one slice
-    /// stale — a superset of the truth, never less).
-    snapshot: Option<Checkpoint>,
+    /// Checkpoints this slot is covering, keyed by dispatch seq: the
+    /// subtree(s) it is running (each possibly one slice stale — a
+    /// superset of the truth, never less).  A local thread holds at most
+    /// one entry; a remote dispatcher holds up to
+    /// [`ExecProfile::remote_window`] pipelined entries.
+    inflight: BTreeMap<u64, Checkpoint>,
 }
 
 struct Frontier {
     /// Checkpoints nobody is running.
     queue: VecDeque<Checkpoint>,
-    /// Live slots by id; snapshots participate in the durable cover.
+    /// Live slots by id; in-flight checkpoints participate in the durable cover.
     slots: BTreeMap<SlotId, SlotState>,
     /// Unfinished subtrees overall (queue + running).  0 = job complete.
     live: u64,
@@ -344,8 +382,9 @@ struct Frontier {
 
 /// What a slot's queue pop observed.
 enum Pop {
-    /// A checkpoint, already installed as the slot's snapshot.
-    Got(Checkpoint),
+    /// A checkpoint, already installed in the slot's in-flight map under
+    /// the returned dispatch seq.
+    Got(u64, Checkpoint),
     /// Queue empty but peers still run — wait for a donation.
     Starved,
     /// Frontier empty overall: the job is complete.
@@ -411,7 +450,7 @@ impl Scheduler {
     pub fn drain(&self) -> Vec<Checkpoint> {
         let f = lock(&self.frontier);
         let mut out: Vec<Checkpoint> = f.queue.iter().cloned().collect();
-        out.extend(f.slots.values().filter_map(|s| s.snapshot.clone()));
+        out.extend(f.slots.values().flat_map(|s| s.inflight.values().cloned()));
         out
     }
 
@@ -421,7 +460,7 @@ impl Scheduler {
         let mut f = lock(&self.frontier);
         let id = SlotId(f.next_slot);
         f.next_slot += 1;
-        f.slots.insert(id, SlotState { placement, snapshot: None });
+        f.slots.insert(id, SlotState { placement, inflight: BTreeMap::new() });
         f.stats.joined += 1;
         match placement {
             WorkerSlot::Local { .. } => f.stats.local_slots += 1,
@@ -446,8 +485,9 @@ impl Scheduler {
         let mut f = lock(&self.frontier);
         let mut returned = Vec::new();
         if let Some(s) = f.slots.remove(&slot) {
-            if let Some(cp) = s.snapshot {
-                // The subtree stays live; it just moves slot -> queue.
+            // Every in-flight subtree stays live; the whole window moves
+            // slot -> queue, oldest dispatch first.
+            for cp in s.inflight.into_values() {
                 returned.push(cp.clone());
                 f.queue.push_back(cp);
             }
@@ -460,31 +500,20 @@ impl Scheduler {
         returned
     }
 
-    /// Like [`remove_slot`](Self::remove_slot), but the in-flight
-    /// checkpoint is known to the caller rather than read from the slot
-    /// snapshot (remote dispatchers own it between send and receive).
-    fn abandon(&self, slot: SlotId, inflight: Checkpoint, why: Departure) {
-        let mut f = lock(&self.frontier);
-        f.slots.remove(&slot);
-        f.queue.push_back(inflight);
-        match why {
-            Departure::Retired => {}
-            Departure::Left => f.stats.left += 1,
-            Departure::Lost => f.stats.lost += 1,
-        }
-    }
-
-    /// Pop + install as the slot's snapshot in one critical section, so
-    /// the blob is never outside the frontier cover.
+    /// Pop + install in the slot's in-flight map in one critical section,
+    /// so the blob is never outside the frontier cover.  The returned seq
+    /// is the map key (and the SLICE seq on the remote leg).
     fn pop(&self, slot: SlotId) -> Pop {
         let mut f = lock(&self.frontier);
         match f.queue.pop_front() {
             Some(b) => {
+                let seq = self.seq.fetch_add(1, Ordering::SeqCst);
                 f.slots
                     .get_mut(&slot)
                     .expect("popping slot is in the pool")
-                    .snapshot = Some(b.clone());
-                Pop::Got(b)
+                    .inflight
+                    .insert(seq, b.clone());
+                Pop::Got(seq, b)
             }
             None => {
                 if f.live == 0 {
@@ -573,6 +602,19 @@ impl RemotePool {
         lock(&self.idle).push(conn);
     }
 
+    /// Park a joiner whose HELLO announced a supervised re-join
+    /// (`pbt cluster join --reconnect` healing a lost link): a fresh
+    /// join *and* a heal, so both counters move.
+    pub fn park_rejoined(&self, conn: PoolConn) {
+        {
+            let mut s = lock(&self.stats);
+            s.joined += 1;
+            s.remote_slots += 1;
+            s.reconnects += 1;
+        }
+        lock(&self.idle).push(conn);
+    }
+
     /// Park a healthy connection back after a job released it.
     fn park(&self, conn: PoolConn) {
         lock(&self.idle).push(conn);
@@ -596,6 +638,7 @@ impl RemotePool {
         s.joined += run.local_slots;
         s.left += run.left;
         s.lost += run.lost;
+        s.reconnects += run.reconnects;
         s.slices_dispatched += run.slices_dispatched;
         s.slices_completed += run.slices_completed;
         s.slices_remote += run.slices_remote;
@@ -756,15 +799,15 @@ fn worker_loop<P>(
                 return;
             }
             Pop::Starved => shared.starve_wait(),
-            Pop::Got(blob) => match Stepper::from_checkpoint(problem, &blob) {
-                Ok(mut stepper) => drive(&mut stepper, me, shared, profile, control),
+            Pop::Got(key, blob) => match Stepper::from_checkpoint(problem, &blob) {
+                Ok(mut stepper) => drive(&mut stepper, me, key, shared, profile, control),
                 Err(_) => {
                     // CRC-guarded journals make this unreachable in
                     // practice; a corrupt blob is dropped rather than
                     // wedging the job.
                     let mut f = lock(&shared.frontier);
                     if let Some(s) = f.slots.get_mut(&me) {
-                        s.snapshot = None;
+                        s.inflight.remove(&key);
                     }
                     f.live -= 1;
                 }
@@ -774,9 +817,11 @@ fn worker_loop<P>(
 }
 
 /// Run one restored stepper to exhaustion (or stop), slice by slice.
+/// `key` is the slot's in-flight map entry installed by the pop.
 fn drive<P>(
     stepper: &mut Stepper<P>,
     me: SlotId,
+    key: u64,
     shared: &Scheduler,
     profile: &ExecProfile,
     control: &ExecControl,
@@ -786,6 +831,12 @@ fn drive<P>(
 {
     let slice = profile.slice_nodes.max(1);
     loop {
+        // Dispatch is counted when the slice *starts*, so that
+        // `dispatched - completed` gauges in-flight work on local slots
+        // exactly like on remote ones.
+        {
+            lock(&shared.frontier).stats.slices_dispatched += 1;
+        }
         let mut visited = 0u32;
         while visited < slice {
             match stepper.step(shared.best.load(Ordering::Relaxed)) {
@@ -799,27 +850,24 @@ fn drive<P>(
             }
         }
         shared.nodes.fetch_add(visited as u64, Ordering::SeqCst);
-        shared.seq.fetch_add(1, Ordering::SeqCst);
         if stepper.is_exhausted() {
             let mut f = lock(&shared.frontier);
             if let Some(s) = f.slots.get_mut(&me) {
-                s.snapshot = None;
+                s.inflight.remove(&key);
             }
             f.live -= 1;
-            f.stats.slices_dispatched += 1;
             f.stats.slices_completed += 1;
             return;
         }
-        // Slice boundary: refresh our snapshot FIRST, then donate — the
-        // refreshed slot still contains every subtree donated below, so
-        // the frontier cover holds throughout (duplicates are safe,
+        // Slice boundary: refresh our in-flight entry FIRST, then donate —
+        // the refreshed entry still contains every subtree donated below,
+        // so the frontier cover holds throughout (duplicates are safe,
         // losses are not).
         {
             let mut f = lock(&shared.frontier);
             if let Some(s) = f.slots.get_mut(&me) {
-                s.snapshot = Some(stepper.checkpoint_bytes());
+                s.inflight.insert(key, stepper.checkpoint_bytes());
             }
-            f.stats.slices_dispatched += 1;
             f.stats.slices_completed += 1;
             let hungry = shared.idle.load(Ordering::SeqCst).min(MAX_DONATE_PER_SLICE);
             let deficit = hungry.saturating_sub(f.queue.len());
@@ -840,7 +888,7 @@ fn drive<P>(
                 let cp = stepper.checkpoint_bytes();
                 let mut f = lock(&shared.frontier);
                 if let Some(s) = f.slots.get_mut(&me) {
-                    s.snapshot = None;
+                    s.inflight.remove(&key);
                 }
                 f.queue.push_back(cp);
                 return;
@@ -852,9 +900,120 @@ fn drive<P>(
 
 // -------------------------------------------------------- remote slots
 
-/// Drive one leased pool connection as a remote slot: ship `SLICE`
-/// frames, absorb `RESULT` frames, keep the slot snapshot equal to the
-/// checkpoint last sent (the at-least-once cover for a dying rank).
+/// Accumulating length-prefixed frame reader that survives short read
+/// deadlines: bytes already received are kept across `WouldBlock`/timeout
+/// polls, so the dispatcher can re-check stop requests between polls
+/// without losing frame prefix bytes (`wire::read_blob_frame` is
+/// `read_exact`-based and cannot resume a half-read frame).
+struct FrameReader {
+    buf: Vec<u8>,
+    /// Payload length once the 4-byte header is complete.
+    need: Option<usize>,
+}
+
+/// One poll of a [`FrameReader`].
+enum ReadPoll {
+    /// A whole frame payload.
+    Frame(Vec<u8>),
+    /// The socket deadline passed with the frame still incomplete.
+    Pending,
+    /// EOF, I/O error, or an oversized/empty frame: the conn is unusable.
+    Dead,
+}
+
+impl FrameReader {
+    fn new() -> FrameReader {
+        FrameReader { buf: Vec::new(), need: None }
+    }
+
+    fn poll(&mut self, stream: &mut std::net::TcpStream, max: usize) -> ReadPoll {
+        use std::io::Read;
+        let mut chunk = [0u8; 4096];
+        loop {
+            let want = match self.need {
+                None => wire::FRAME_HEADER_BYTES - self.buf.len(),
+                Some(n) => n - self.buf.len(),
+            };
+            if want > 0 {
+                match stream.read(&mut chunk[..want.min(chunk.len())]) {
+                    Ok(0) => return ReadPoll::Dead,
+                    Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                    {
+                        return ReadPoll::Pending
+                    }
+                    Err(_) => return ReadPoll::Dead,
+                }
+            }
+            match self.need {
+                None if self.buf.len() == wire::FRAME_HEADER_BYTES => {
+                    let len =
+                        u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]])
+                            as usize;
+                    self.buf.clear();
+                    if len == 0 || len > max {
+                        return ReadPoll::Dead;
+                    }
+                    self.need = Some(len);
+                }
+                Some(n) if self.buf.len() == n => {
+                    self.need = None;
+                    return ReadPoll::Frame(std::mem::take(&mut self.buf));
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Encode and ship one `SLICE`; the checkpoint must already sit in the
+/// slot's in-flight map under `seq` (cover before wire).  Counts the
+/// dispatch.
+fn send_slice(
+    conn: &mut PoolConn,
+    shared: &Scheduler,
+    profile: &ExecProfile,
+    rjob: &RemoteJob,
+    seq: u64,
+    blob: &Checkpoint,
+) -> std::io::Result<()> {
+    {
+        lock(&shared.frontier).stats.slices_dispatched += 1;
+    }
+    let hungry = shared.idle.load(Ordering::SeqCst).min(MAX_DONATE_PER_SLICE) as u32;
+    let req = SliceRequest {
+        seq,
+        job: rjob.job,
+        problem: rjob.problem.clone(),
+        instance: rjob.instance.clone(),
+        scale: rjob.scale,
+        bound: rjob.bound.clone(),
+        budget: profile.slice_nodes.max(1),
+        best: shared.best.load(Ordering::Relaxed),
+        donate_hint: hungry,
+        checkpoint: blob.clone(),
+    };
+    wire::write_blob_frame(&mut conn.stream, &req.encode())
+}
+
+/// Requeue the slot's entire in-flight window and sever the socket: a
+/// slow-but-alive rank sees EOF/reset and retires instead of wedging on
+/// a RESULT write nobody will read.
+fn sever(shared: &Scheduler, me: SlotId, conn: &PoolConn, why: Departure) {
+    shared.remove_slot(me, why);
+    let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Drive one leased pool connection as a remote slot: keep up to
+/// [`ExecProfile::remote_window`] seq-tagged `SLICE` frames in flight
+/// (wire latency overlaps rank compute), absorb `RESULT` frames oldest
+/// first, and keep every in-flight checkpoint in the slot's map (the
+/// at-least-once cover for a dying rank).
 fn dispatcher_loop(
     mut conn: PoolConn,
     shared: &Scheduler,
@@ -863,107 +1022,134 @@ fn dispatcher_loop(
     rjob: &RemoteJob,
 ) {
     let me = shared.join(WorkerSlot::Remote { rank: conn.rank });
-    let _ = conn.stream.set_read_timeout(Some(SLICE_READ_TIMEOUT));
-    // The continuation checkpoint we are mid-way through (None = pop next).
-    let mut current: Option<Checkpoint> = None;
+    let _ = conn.stream.set_read_timeout(Some(POLL_READ_TIMEOUT));
+    let window = profile.remote_window.max(1);
+    // Outstanding SLICE seqs, send order.  The authoritative checkpoint
+    // copies live in the slot's in-flight map; `serve_slices` executes
+    // strictly in request order, so results must match front-to-back.
+    let mut outstanding: VecDeque<u64> = VecDeque::new();
+    let mut reader = FrameReader::new();
     loop {
         if control.current() != StopKind::None {
-            // Park: in-flight work back to the queue, healthy conn back to
-            // the pool for the next job.
-            match current.take() {
-                Some(cp) => shared.abandon(me, cp, Departure::Retired),
-                None => {
-                    shared.remove_slot(me, Departure::Retired);
-                }
+            // Park between conversations only: with no SLICE outstanding
+            // the conn is reusable by the next job; otherwise requeue the
+            // window (at-least-once, bounded by `window`) and sever.
+            shared.remove_slot(me, Departure::Retired);
+            if outstanding.is_empty() {
+                rjob.pool.park(conn);
+            } else {
+                let _ = conn.stream.shutdown(std::net::Shutdown::Both);
             }
-            rjob.pool.park(conn);
             return;
         }
-        let blob = match current.take() {
-            Some(b) => b,
-            None => match shared.pop(me) {
-                Pop::Got(b) => b,
+        // Fill the credit window while queued work and credits last.
+        let mut job_done = false;
+        while outstanding.len() < window {
+            match shared.pop(me) {
+                Pop::Got(seq, blob) => {
+                    if send_slice(&mut conn, shared, profile, rjob, seq, &blob).is_err() {
+                        sever(shared, me, &conn, Departure::Lost);
+                        return;
+                    }
+                    outstanding.push_back(seq);
+                }
+                Pop::Starved => break,
                 Pop::JobDone => {
-                    shared.remove_slot(me, Departure::Retired);
-                    rjob.pool.park(conn);
+                    job_done = true;
+                    break;
+                }
+            }
+        }
+        if outstanding.is_empty() {
+            if job_done {
+                shared.remove_slot(me, Departure::Retired);
+                rjob.pool.park(conn);
+                return;
+            }
+            shared.starve_wait();
+            continue;
+        }
+        // Absorb the oldest outstanding RESULT.  The socket deadline is
+        // short ([`POLL_READ_TIMEOUT`]) so stop requests interrupt the
+        // read promptly; [`SLICE_READ_TIMEOUT`] still bounds the wait.
+        let deadline = Instant::now() + SLICE_READ_TIMEOUT;
+        let frame = loop {
+            if control.current() != StopKind::None {
+                // Mid-conversation stop: unanswered SLICEs mean the conn
+                // cannot be parked for the next job.
+                sever(shared, me, &conn, Departure::Retired);
+                return;
+            }
+            match reader.poll(&mut conn.stream, wire::MAX_FRAME_BYTES) {
+                ReadPoll::Frame(f) => break f,
+                ReadPoll::Pending => {
+                    if Instant::now() >= deadline {
+                        sever(shared, me, &conn, Departure::Lost);
+                        return;
+                    }
+                }
+                ReadPoll::Dead => {
+                    sever(shared, me, &conn, Departure::Lost);
                     return;
                 }
-                Pop::Starved => {
-                    shared.starve_wait();
-                    continue;
-                }
-            },
-        };
-        let seq = shared.seq.fetch_add(1, Ordering::SeqCst);
-        {
-            lock(&shared.frontier).stats.slices_dispatched += 1;
-        }
-        let hungry =
-            shared.idle.load(Ordering::SeqCst).min(MAX_DONATE_PER_SLICE) as u32;
-        let req = SliceRequest {
-            seq,
-            job: rjob.job,
-            problem: rjob.problem.clone(),
-            instance: rjob.instance.clone(),
-            scale: rjob.scale,
-            bound: rjob.bound.clone(),
-            budget: profile.slice_nodes.max(1),
-            best: shared.best.load(Ordering::Relaxed),
-            donate_hint: hungry,
-            checkpoint: blob.clone(),
-        };
-        if wire::write_blob_frame(&mut conn.stream, &req.encode()).is_err() {
-            shared.abandon(me, blob, Departure::Lost);
-            return; // conn dropped, rank is gone
-        }
-        let frame = match wire::read_blob_frame(&mut conn.stream, wire::MAX_FRAME_BYTES) {
-            Ok(f) => f,
-            Err(_) => {
-                shared.abandon(me, blob, Departure::Lost);
-                return;
             }
         };
         if frame.first() == Some(&wire::TAG_POOL_LEAVE) {
-            // Graceful §VII leave: the rank declined this slice, so the
-            // checkpoint goes back untouched — exactly-once re-absorption.
-            shared.abandon(me, blob, Departure::Left);
+            // Graceful §VII leave: the rank answers LEAVE *instead of* the
+            // oldest result and executes nothing afterwards, so every
+            // outstanding checkpoint goes back untouched — exactly-once
+            // re-absorption for the whole window.
+            shared.remove_slot(me, Departure::Left);
             return;
         }
         let res = match SliceResult::decode(&frame) {
-            Ok(r) if r.seq == seq => r,
+            Ok(r) if outstanding.front() == Some(&r.seq) => r,
             _ => {
-                // Garbage or a stale result: sever rather than risk
+                // Garbage or out-of-order: sever rather than risk
                 // crediting the wrong slice.
-                shared.abandon(me, blob, Departure::Lost);
+                sever(shared, me, &conn, Departure::Lost);
                 return;
             }
         };
+        outstanding.pop_front();
         shared.nodes.fetch_add(res.nodes, Ordering::SeqCst);
         if res.best != COST_INF {
             shared.record_best(res.best, res.solution);
         }
-        {
+        let continuation = {
             let mut f = lock(&shared.frontier);
-            // Donations join the queue while our slot still covers them
-            // (the snapshot is the pre-slice superset) — then the snapshot
+            // Donations join the queue while our in-flight entry still
+            // covers them (it is the pre-slice superset) — then the entry
             // advances to the continuation, which excludes them.
             for d in res.donated {
                 f.queue.push_back(d);
                 f.live += 1;
             }
             let slot = f.slots.get_mut(&me).expect("dispatcher slot is in the pool");
-            match res.continuation {
+            slot.inflight.remove(&res.seq);
+            let next = match res.continuation {
                 Some(cp) => {
-                    slot.snapshot = Some(cp.clone());
-                    current = Some(cp);
+                    // Still alive: re-cover it under a fresh seq before
+                    // the lock drops, then pipeline it straight back out.
+                    let seq = shared.seq.fetch_add(1, Ordering::SeqCst);
+                    slot.inflight.insert(seq, cp.clone());
+                    Some((seq, cp))
                 }
                 None => {
-                    slot.snapshot = None;
                     f.live -= 1;
+                    None
                 }
-            }
+            };
             f.stats.slices_completed += 1;
             f.stats.slices_remote += 1;
+            next
+        };
+        if let Some((seq, cp)) = continuation {
+            if send_slice(&mut conn, shared, profile, rjob, seq, &cp).is_err() {
+                sever(shared, me, &conn, Departure::Lost);
+                return;
+            }
+            outstanding.push_back(seq);
         }
         pace(profile, control);
     }
@@ -1188,7 +1374,7 @@ mod tests {
         // now living in the slot snapshot.
         let slot = s.join(WorkerSlot::Remote { rank: 7 });
         let claimed = match s.pop(slot) {
-            Pop::Got(b) => b,
+            Pop::Got(_, b) => b,
             _ => panic!("queue has work"),
         };
         assert_eq!(claimed, root[0]);
@@ -1214,6 +1400,7 @@ mod tests {
     fn exec_profile_from_configs_keeps_toml_keys_working() {
         let cfg = PbtConfig::from_text(
             r#"
+            [run]
             workers = 3
             poll_interval = 9
 
@@ -1221,6 +1408,7 @@ mod tests {
             workers = 5
             slice_nodes = 123
             checkpoint_ms = 77
+            remote_window = 3
             "#,
         )
         .unwrap();
@@ -1237,5 +1425,51 @@ mod tests {
         assert_eq!(sprof.workers, 5);
         assert_eq!(sprof.slice_nodes, 123);
         assert_eq!(sprof.checkpoint_ms, 77);
+        assert_eq!(sprof.remote_window, 3);
+        // The [run] profile never saw a remote_window key: default holds.
+        assert_eq!(prof.remote_window, ExecProfile::default().remote_window);
+    }
+
+    #[test]
+    fn frame_reader_survives_timeout_polls_and_detects_eof() {
+        use std::io::Write;
+        use std::net::{TcpListener, TcpStream};
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // One 6-byte frame dribbled in three writes with gaps longer
+            // than the reader's socket deadline, then hang up.
+            s.write_all(&6u32.to_le_bytes()).unwrap();
+            std::thread::sleep(Duration::from_millis(60));
+            s.write_all(&[1, 2, 3]).unwrap();
+            std::thread::sleep(Duration::from_millis(60));
+            s.write_all(&[4, 5, 6]).unwrap();
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+        let mut reader = FrameReader::new();
+        let mut pendings = 0u32;
+        let frame = loop {
+            match reader.poll(&mut stream, wire::MAX_FRAME_BYTES) {
+                ReadPoll::Frame(f) => break f,
+                ReadPoll::Pending => pendings += 1,
+                ReadPoll::Dead => panic!("healthy dribbled frame read as dead"),
+            }
+            assert!(pendings < 1000, "reader never completed the frame");
+        };
+        assert_eq!(frame, vec![1, 2, 3, 4, 5, 6]);
+        assert!(pendings >= 2, "the short deadline must actually fire between writes");
+        writer.join().unwrap();
+        // After the writer hangs up the reader reports Dead (possibly
+        // after draining Pending polls).
+        loop {
+            match reader.poll(&mut stream, wire::MAX_FRAME_BYTES) {
+                ReadPoll::Dead => break,
+                ReadPoll::Pending => continue,
+                ReadPoll::Frame(_) => panic!("no second frame was sent"),
+            }
+        }
     }
 }

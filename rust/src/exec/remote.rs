@@ -12,10 +12,12 @@
 //! problem spec (instances are named generators, so a spec string is the
 //! whole input) plus the subtree checkpoint, so a rank holds no job state
 //! between slices, can serve different jobs on consecutive requests, and
-//! its death costs at most the one in-flight slice (which the scheduler's
-//! slot snapshot re-covers).  [`SpecExec`] caches the resolved instance
-//! graph keyed by spec, so consecutive slices of one job pay the
-//! generator cost once.
+//! its death costs at most the dispatcher's in-flight window of slices
+//! (which the scheduler's slot in-flight map re-covers).  [`SpecExec`]
+//! caches the resolved instance graph keyed by `(instance, scale)` — the
+//! only inputs the graph depends on — so consecutive slices pay the
+//! generator cost once even when jobs alternate problem families or
+//! bounds over the same instance.
 //!
 //! [`TcpTransport::join_or_pool`]: crate::comm::tcp::TcpTransport::join_or_pool
 
@@ -40,19 +42,20 @@ pub trait SliceExec {
 }
 
 /// The production [`SliceExec`]: resolves the request's instance spec to
-/// a graph (cached by `(problem, instance, scale, bound)` key) and
-/// dispatches to the named problem family, mirroring the daemon's own
-/// `run_problem` dispatch.
+/// a graph (cached by `(instance, scale)` — problem family and bound do
+/// not change the resolved graph, so a rank alternating between `vc` and
+/// `clique` jobs on one instance keeps the cache hot) and dispatches to
+/// the named problem family, mirroring the daemon's own `run_problem`
+/// dispatch.
 #[derive(Default)]
 pub struct SpecExec {
-    key: Option<(String, String, u32, String)>,
+    key: Option<(String, u32)>,
     graph: Option<Graph>,
 }
 
 impl SpecExec {
     fn ensure(&mut self, req: &SliceRequest) -> Result<&Graph, String> {
-        let key =
-            (req.problem.clone(), req.instance.clone(), req.scale, req.bound.clone());
+        let key = (req.instance.clone(), req.scale);
         if self.key.as_ref() != Some(&key) {
             let g = instances::resolve_spec(&req.instance, req.scale as usize)
                 .map_err(|e| format!("{e:#}"))?;
@@ -337,5 +340,216 @@ mod tests {
         let sum = joiner.join().unwrap();
         assert!(sum.left);
         assert_eq!(sum.slices, 0);
+    }
+
+    /// The acceptance property for slice pipelining: with a credit window
+    /// of 3 SLICEs in flight, a 1-local + 1-rank job on a never-pruning
+    /// tree still explores exactly the serial node count (every in-flight
+    /// checkpoint stays covered by the slot's seq→checkpoint map), and
+    /// the dispatch/completion gauges balance when the job ends.
+    #[test]
+    fn pipelined_window_keeps_exact_node_conservation() {
+        let p = ToyTree { height: 12 };
+        let serial = solve_serial(&p, u64::MAX);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let joiner = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut exec = ToyExec { tree: ToyTree { height: 12 } };
+            serve_slices(&mut s, &mut exec, None).unwrap()
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let pool = RemotePool::new();
+        pool.park_joined(PoolConn { stream, rank: 1 });
+        let rjob = toy_rjob(&pool);
+        let profile = ExecProfile::default()
+            .with_workers(1)
+            .with_slice_nodes(64)
+            .with_pace_ms(1)
+            .with_checkpoint_ms(5)
+            .with_remote_window(3);
+        let out = run(
+            &p,
+            root_frontier(),
+            u64::MAX,
+            None,
+            0,
+            &profile,
+            &ExecControl::default(),
+            Some(&rjob),
+            |_| {},
+        );
+        assert!(out.finished);
+        assert_eq!(out.best, serial.best_cost);
+        assert_eq!(out.nodes, serial.stats.nodes, "pipelining must not double-run subtrees");
+        assert!(out.pool.slices_remote >= 1, "the rank actually ran slices");
+        assert_eq!(out.pool.lost, 0);
+        assert_eq!(out.pool.left, 0);
+        assert_eq!(
+            out.pool.in_flight(),
+            0,
+            "all dispatched slices accounted: {} dispatched vs {} completed",
+            out.pool.slices_dispatched,
+            out.pool.slices_completed
+        );
+        assert_eq!(pool.idle_count(), 1, "healthy conn parked back");
+        let sum = joiner.join().unwrap();
+        assert_eq!(sum.slices, out.pool.slices_remote);
+    }
+
+    /// Rank death mid-slice: the rank swallows a SLICE and dies without
+    /// answering.  The dispatcher must declare the slot lost, requeue the
+    /// in-flight window, and the job must still reach the serial optimum
+    /// with *exactly* the serial node count (the dead rank executed
+    /// nothing, so nothing may be double-counted).
+    #[test]
+    fn rank_death_mid_slice_requeues_the_inflight_window() {
+        let p = ToyTree { height: 12 };
+        let serial = solve_serial(&p, u64::MAX);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let joiner = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // Swallow exactly one SLICE, then die with it unanswered.
+            wire::read_blob_frame(&mut s, wire::MAX_FRAME_BYTES).unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let pool = RemotePool::new();
+        pool.park_joined(PoolConn { stream, rank: 1 });
+        let rjob = toy_rjob(&pool);
+        let profile = ExecProfile::default()
+            .with_workers(1)
+            .with_slice_nodes(64)
+            .with_pace_ms(1)
+            .with_checkpoint_ms(5)
+            .with_remote_window(2);
+        let out = run(
+            &p,
+            root_frontier(),
+            u64::MAX,
+            None,
+            0,
+            &profile,
+            &ExecControl::default(),
+            Some(&rjob),
+            |_| {},
+        );
+        joiner.join().unwrap();
+        assert!(out.finished);
+        assert_eq!(out.best, serial.best_cost);
+        assert_eq!(out.pool.lost, 1, "the dead rank was declared lost");
+        assert_eq!(
+            out.nodes, serial.stats.nodes,
+            "requeued checkpoints re-ran locally with no double-count"
+        );
+        assert_eq!(out.pool.slices_remote, 0, "the dead rank completed nothing");
+        assert_eq!(pool.idle_count(), 0, "a lost rank's conn is not re-parked");
+    }
+
+    /// A result whose seq is not the oldest outstanding SLICE severs the
+    /// connection with an explicit shutdown, so a confused-but-alive rank
+    /// sees EOF promptly (instead of wedging on a RESULT write nobody
+    /// reads) and its `serve_slices` loop retires cleanly.
+    #[test]
+    fn seq_mismatch_severs_the_socket_and_the_rank_retires_promptly() {
+        let p = ToyTree { height: 12 };
+        let serial = solve_serial(&p, u64::MAX);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let joiner = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // Answer the first SLICE with a wrong-seq RESULT (claiming 3
+            // nodes that must never be credited)...
+            let frame = wire::read_blob_frame(&mut s, wire::MAX_FRAME_BYTES).unwrap();
+            let req = SliceRequest::decode(&frame).unwrap();
+            let bogus = SliceResult {
+                seq: req.seq.wrapping_add(1000),
+                nodes: 3,
+                best: COST_INF,
+                solution: Vec::new(),
+                continuation: None,
+                donated: Vec::new(),
+            };
+            wire::write_blob_frame(&mut s, &bogus.encode()).unwrap();
+            // ...then keep serving like a healthy rank would.  The backstop
+            // timeout only trips if the dispatcher failed to sever.
+            s.set_read_timeout(Some(std::time::Duration::from_secs(120))).unwrap();
+            let mut exec = ToyExec { tree: ToyTree { height: 12 } };
+            let sum = serve_slices(&mut s, &mut exec, None);
+            tx.send(sum).unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let pool = RemotePool::new();
+        pool.park_joined(PoolConn { stream, rank: 1 });
+        let rjob = toy_rjob(&pool);
+        // Window 1: exactly one SLICE is ever outstanding, so after the
+        // sever the rank's next read sees EOF, not a buffered request.
+        let profile = ExecProfile::default()
+            .with_workers(1)
+            .with_slice_nodes(64)
+            .with_pace_ms(1)
+            .with_checkpoint_ms(5)
+            .with_remote_window(1);
+        let out = run(
+            &p,
+            root_frontier(),
+            u64::MAX,
+            None,
+            0,
+            &profile,
+            &ExecControl::default(),
+            Some(&rjob),
+            |_| {},
+        );
+        assert!(out.finished);
+        assert_eq!(out.best, serial.best_cost);
+        assert_eq!(out.pool.lost, 1, "a mismatched seq severs the slot");
+        assert_eq!(out.nodes, serial.stats.nodes, "the bogus result's nodes were not credited");
+        // The rank's serve loop must observe the severed socket well before
+        // its 120 s read backstop: the explicit shutdown is what turns a
+        // would-be wedge into a prompt clean retirement.
+        let sum = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("serve_slices retired promptly after the sever")
+            .unwrap();
+        assert_eq!(sum.slices, 0, "nothing after the bogus result executed");
+        joiner.join().unwrap();
+    }
+
+    /// Regression for the graph-cache key: the resolved graph depends only
+    /// on `(instance, scale)`, so jobs alternating problem family or bound
+    /// over one instance must hit the cache.  Resolving a `.clq` file and
+    /// then deleting it makes any spurious re-resolve loudly visible.
+    #[test]
+    fn spec_cache_survives_problem_and_bound_switches() {
+        let path = std::env::temp_dir()
+            .join(format!("pbt_cache_key_{}.clq", std::process::id()));
+        std::fs::write(&path, "p edge 4 5\ne 1 2\ne 1 3\ne 2 3\ne 3 4\ne 2 4\n").unwrap();
+        let spec = path.to_str().unwrap().to_string();
+        let root = root_frontier().pop().unwrap();
+        let req = |problem: &str, bound: &str, scale: u32| SliceRequest {
+            seq: 0,
+            job: 1,
+            problem: problem.into(),
+            instance: spec.clone(),
+            scale,
+            bound: bound.into(),
+            budget: 64,
+            best: COST_INF,
+            donate_hint: 0,
+            checkpoint: root.clone(),
+        };
+        let mut exec = SpecExec::default();
+        exec.run_slice(&req("vc", "edges", 0)).expect("the file resolves while present");
+        std::fs::remove_file(&path).unwrap();
+        // Different problem family and bound, same (instance, scale): the
+        // old (problem, instance, scale, bound) key re-ran the resolver
+        // here, which would now fail with the file gone.
+        exec.run_slice(&req("clique", "none", 0)).expect("cache hit across a problem switch");
+        exec.run_slice(&req("vc", "none", 0)).expect("cache hit across a bound switch");
+        // A different scale is a genuinely different key: re-resolve (and
+        // with the file deleted, a loud failure) is correct.
+        assert!(exec.run_slice(&req("vc", "edges", 1)).is_err(), "scale stays part of the key");
     }
 }

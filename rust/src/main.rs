@@ -271,20 +271,79 @@ fn run_cluster_mode<P: Problem>(
                     print_cluster_report(&report);
                 }
                 Joined::Pool(mut conn) => {
+                    let reconnect = args.get_bool("reconnect", false)?;
+                    let base_ms = args.get_u64("reconnect-base-ms", 200)?.max(1);
+                    let cap_ms = args.get_u64("reconnect-cap-ms", 5000)?.max(base_ms);
+                    let max_attempts = args.get_u64("reconnect-max", 0)?; // 0 = unbounded
                     eprintln!(
                         "pool rank {}: {connect} is a pbt serve daemon — serving job slices",
                         conn.rank
                     );
+                    // The graph cache outlives sessions: a reconnected rank
+                    // resumes with its instances warm.
                     let mut exec = pbt::exec::remote::SpecExec::default();
-                    let sum =
-                        pbt::exec::remote::serve_slices(&mut conn.stream, &mut exec, leave_after)?;
-                    println!(
-                        "pool rank {}: {} slice(s), {} node(s){}",
-                        conn.rank,
-                        sum.slices,
-                        sum.nodes,
-                        if sum.left { "   (left gracefully)" } else { "   (retired by daemon)" },
+                    let mut backoff = pbt::comm::backoff::Backoff::new(
+                        std::time::Duration::from_millis(base_ms),
+                        std::time::Duration::from_millis(cap_ms),
+                        std::process::id() as u64,
                     );
+                    loop {
+                        match pbt::exec::remote::serve_slices(
+                            &mut conn.stream,
+                            &mut exec,
+                            leave_after,
+                        ) {
+                            Ok(sum) => {
+                                println!(
+                                    "pool rank {}: {} slice(s), {} node(s){}",
+                                    conn.rank,
+                                    sum.slices,
+                                    sum.nodes,
+                                    if sum.left {
+                                        "   (left gracefully)"
+                                    } else {
+                                        "   (retired by daemon)"
+                                    },
+                                );
+                                if sum.left || !reconnect {
+                                    break;
+                                }
+                            }
+                            // A session killed mid-slice (daemon crash,
+                            // flaky link) is an error without --reconnect
+                            // and a heal trigger with it.
+                            Err(e) if !reconnect => return Err(e.into()),
+                            Err(e) => {
+                                eprintln!("pool rank {}: session lost: {e}", conn.rank)
+                            }
+                        }
+                        // The daemon hung up (restart, crash, severed link):
+                        // supervised re-dial with capped backoff + jitter.
+                        // Its cost to the job is at most the in-flight
+                        // window, requeued as `lost` on the daemon side.
+                        backoff.reset();
+                        conn = loop {
+                            if max_attempts > 0 && backoff.attempts() >= max_attempts {
+                                eprintln!(
+                                    "pool rank: giving up after {} reconnect attempt(s)",
+                                    backoff.attempts()
+                                );
+                                return Ok(());
+                            }
+                            let delay = backoff.next_delay();
+                            std::thread::sleep(delay);
+                            match pbt::comm::tcp::pool_reconnect(&connect, tcp) {
+                                Ok(c) => {
+                                    eprintln!("pool rank {}: reconnected to {connect}", c.rank);
+                                    break c;
+                                }
+                                Err(e) => eprintln!(
+                                    "pool rank: reconnect attempt {} failed: {e}",
+                                    backoff.attempts()
+                                ),
+                            }
+                        };
+                    }
                 }
             }
             Ok(())
@@ -401,6 +460,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.default_workers = args.get_usize("workers", opts.default_workers)?.max(1);
     opts.slice_nodes = flag_u32(args, "slice", opts.slice_nodes)?.max(1);
     opts.checkpoint_ms = args.get_u64("checkpoint-ms", opts.checkpoint_ms)?.max(1);
+    opts.remote_window = args.get_usize("remote-window", opts.remote_window)?.max(1);
     eprintln!(
         "== pbt serve v{} (rev {}): journal {}, {} active job slot(s)",
         pbt::server::VERSION,

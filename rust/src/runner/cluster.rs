@@ -77,6 +77,7 @@ impl<S> ClusterReport<S> {
             joined: remote + 1,
             left: 0,
             lost: self.peers_lost(),
+            reconnects: 0,
             slices_dispatched: self.stats.comm.tasks_donated,
             slices_completed: self.stats.comm.tasks_received,
             slices_remote: self.stats.comm.tasks_received,

@@ -103,6 +103,7 @@ impl<S> RunReport<S> {
             joined: slots,
             left: 0,
             lost: 0,
+            reconnects: 0,
             slices_dispatched: comm.tasks_donated,
             slices_completed: comm.tasks_received,
             slices_remote: 0,

@@ -79,6 +79,8 @@ pub struct ServeOptions {
     pub slice_nodes: u32,
     /// Journal drain interval per running job.
     pub checkpoint_ms: u64,
+    /// `SLICE` frames in flight per remote pool rank (credit window).
+    pub remote_window: usize,
 }
 
 impl From<&ServerConfig> for ServeOptions {
@@ -90,6 +92,7 @@ impl From<&ServerConfig> for ServeOptions {
             default_workers: c.workers.max(1),
             slice_nodes: c.slice_nodes.max(1),
             checkpoint_ms: c.checkpoint_ms.max(1),
+            remote_window: c.remote_window.max(1),
         }
     }
 }
@@ -425,7 +428,8 @@ fn run_job(
         })
         .with_slice_nodes(if spec.slice == 0 { state.opts.slice_nodes } else { spec.slice })
         .with_pace_ms(spec.pace_ms as u64)
-        .with_checkpoint_ms(state.opts.checkpoint_ms);
+        .with_checkpoint_ms(state.opts.checkpoint_ms)
+        .with_remote_window(state.opts.remote_window);
     let rjob = RemoteJob {
         job: id,
         problem: spec.problem.clone(),
@@ -648,8 +652,16 @@ fn handle_connection(state: &Arc<ServerState>, mut stream: TcpStream) -> Result<
     if tcp::is_pool_hello(&hello_bytes) {
         let rank = state.pool.assign_rank();
         crate::comm::wire::write_blob_frame(&mut stream, &tcp::pool_assign_frame(rank))?;
-        eprintln!("pbt serve: pool rank {rank} joined");
-        state.pool.park_joined(tcp::PoolConn { stream, rank });
+        if tcp::pool_hello_is_reconnect(&hello_bytes) {
+            // A supervised `--reconnect` rank returning after a lost
+            // session: a join like any other, plus the `reconnects` heal
+            // counter.
+            eprintln!("pbt serve: pool rank {rank} reconnected");
+            state.pool.park_rejoined(tcp::PoolConn { stream, rank });
+        } else {
+            eprintln!("pbt serve: pool rank {rank} joined");
+            state.pool.park_joined(tcp::PoolConn { stream, rank });
+        }
         return Ok(());
     }
     // Anything else that fails the client handshake is answered with ERR

@@ -29,8 +29,10 @@ pub const MAGIC: &[u8; 4] = b"PBTS";
 /// Bumped on incompatible frame-layout changes; a daemon refuses a client
 /// speaking a different protocol version (crate-version skew is only a
 /// warning, layout skew is not survivable).  v2: `Stats` responses carry
-/// the pool-slot counters ([`PoolStats`]) after the metrics block.
-pub const PROTO_VERSION: u32 = 2;
+/// the pool-slot counters ([`PoolStats`]) after the metrics block.  v3:
+/// the pool block grows a ninth counter, `reconnects` (supervised pool
+/// ranks that healed a lost connection).
+pub const PROTO_VERSION: u32 = 3;
 
 /// Ceiling for one protocol frame (a result payload is one `u32` per
 /// solution vertex — far below this; anything larger is not a pbt peer).
@@ -527,6 +529,7 @@ impl Response {
                     p.joined,
                     p.left,
                     p.lost,
+                    p.reconnects,
                     p.slices_dispatched,
                     p.slices_completed,
                     p.slices_remote,
@@ -589,7 +592,7 @@ impl Response {
                 for v in &mut vals {
                     *v = take_u64(b, &mut pos)?;
                 }
-                let mut pvals = [0u64; 8];
+                let mut pvals = [0u64; 9];
                 for v in &mut pvals {
                     *v = take_u64(b, &mut pos)?;
                 }
@@ -616,9 +619,10 @@ impl Response {
                         joined: pvals[2],
                         left: pvals[3],
                         lost: pvals[4],
-                        slices_dispatched: pvals[5],
-                        slices_completed: pvals[6],
-                        slices_remote: pvals[7],
+                        reconnects: pvals[5],
+                        slices_dispatched: pvals[6],
+                        slices_completed: pvals[7],
+                        slices_remote: pvals[8],
                     },
                 })
             }
@@ -748,6 +752,7 @@ mod tests {
                     joined: 5,
                     left: 1,
                     lost: 0,
+                    reconnects: 2,
                     slices_dispatched: 64,
                     slices_completed: 63,
                     slices_remote: 20,

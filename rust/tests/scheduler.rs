@@ -56,6 +56,7 @@ fn spawn_daemon(journal: PathBuf, slice_nodes: u32) -> (String, std::thread::Joi
             default_workers: 1,
             slice_nodes,
             checkpoint_ms: 10,
+            remote_window: 2,
         };
         serve(opts, move |addr| tx.send(addr.to_string()).unwrap()).expect("daemon runs");
     });

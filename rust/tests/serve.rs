@@ -36,6 +36,7 @@ fn spawn_daemon(journal: PathBuf, max_active: usize) -> (String, std::thread::Jo
             default_workers: 2,
             slice_nodes: 2000,
             checkpoint_ms: 25,
+            remote_window: 2,
         };
         serve(opts, move |addr| tx.send(addr.to_string()).unwrap()).expect("daemon runs");
     });
