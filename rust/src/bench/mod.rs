@@ -45,7 +45,9 @@ use json::Json;
 /// Bumped when the case list or the JSON schema changes incompatibly;
 /// [`check_against`] refuses to gate across different suite versions.
 /// v2: MAX-CLIQUE cases + optional per-case `shape` (tree-shape summary).
-pub const SUITE_VERSION: u32 = 2;
+/// v3: threads cases carry optional donation round-trip percentiles
+/// (`donation_p50_us`/`p90`/`p99`, informational — never gated).
+pub const SUITE_VERSION: u32 = 3;
 
 /// Default regression tolerance: fail when a case loses more than this
 /// fraction of its (calibrated) throughput, or gains it in makespan.
@@ -91,6 +93,13 @@ pub struct CaseResult {
     /// Tree-shape summary (simulator cases run with shape collection on;
     /// null elsewhere).  Informational: the gate never compares it.
     pub shape: Option<crate::metrics::TreeShapeSummary>,
+    /// Donation round-trip latency percentiles in microseconds (threads
+    /// cases run under an observability handle; null elsewhere and when no
+    /// worker ever starved).  Informational: latency varies with host
+    /// load, so the gate never compares these.
+    pub donation_p50_us: Option<u64>,
+    pub donation_p90_us: Option<u64>,
+    pub donation_p99_us: Option<u64>,
 }
 
 /// A full suite run, ready to serialize as `BENCH_<label>.json`.
@@ -218,6 +227,9 @@ fn hotpath_case(
         tasks_requested: 0,
         best_cost,
         shape: None,
+        donation_p50_us: None,
+        donation_p90_us: None,
+        donation_p99_us: None,
     }
 }
 
@@ -263,6 +275,9 @@ fn calibration_case(min_millis: u64, min_iters: usize) -> CaseResult {
         tasks_requested: 0,
         best_cost: None,
         shape: None,
+        donation_p50_us: None,
+        donation_p90_us: None,
+        donation_p99_us: None,
     }
 }
 
@@ -301,9 +316,14 @@ pub fn run_suite(opts: &BenchOptions) -> BenchReport {
             worker: WorkerConfig::default(),
             timeout: Some(std::time::Duration::from_secs(if smoke { 60 } else { 600 })),
         };
-        let rep = runner::solve(&p_thr, &cfg);
+        // Run under an observability handle so the report carries real
+        // donation round-trip percentiles alongside the counters.
+        let obs = crate::metrics::trace::Obs::new();
+        let rep = runner::solve_traced(&p_thr, &cfg, Some(&obs));
         let secs = rep.wall_secs;
         let comm = rep.total_comm();
+        let donation = obs.hists().donation_rtt;
+        let dsum = (donation.count() > 0).then(|| donation.summary());
         cases.push(CaseResult {
             name: format!("threads/w{w}"),
             kind: "threads".into(),
@@ -316,6 +336,9 @@ pub fn run_suite(opts: &BenchOptions) -> BenchReport {
             tasks_requested: comm.tasks_requested,
             best_cost: rep.best_cost,
             shape: None,
+            donation_p50_us: dsum.map(|s| s.p50),
+            donation_p90_us: dsum.map(|s| s.p90),
+            donation_p99_us: dsum.map(|s| s.p99),
         });
     }
 
@@ -340,6 +363,9 @@ pub fn run_suite(opts: &BenchOptions) -> BenchReport {
             tasks_requested: comm.tasks_requested,
             best_cost: r.best_cost,
             shape: r.tree_shape.as_ref().map(|s| s.summary()),
+            donation_p50_us: None,
+            donation_p90_us: None,
+            donation_p99_us: None,
         }
     };
     let sim_worker = WorkerConfig { collect_shape: true, ..Default::default() };
@@ -413,6 +439,18 @@ impl BenchReport {
                             ])
                         }),
                     ),
+                    (
+                        "donation_p50_us".into(),
+                        c.donation_p50_us.map_or(Json::Null, |v| Json::Num(v as f64)),
+                    ),
+                    (
+                        "donation_p90_us".into(),
+                        c.donation_p90_us.map_or(Json::Null, |v| Json::Num(v as f64)),
+                    ),
+                    (
+                        "donation_p99_us".into(),
+                        c.donation_p99_us.map_or(Json::Null, |v| Json::Num(v as f64)),
+                    ),
                 ])
             })
             .collect();
@@ -471,6 +509,10 @@ impl BenchReport {
                         depth_of_mass_half: v.get("depth_of_mass_half")?.as_u64()? as usize,
                     })
                 }),
+                // Optional (absent/null in pre-v3 files and non-threads cases).
+                donation_p50_us: c.get("donation_p50_us").and_then(Json::as_u64),
+                donation_p90_us: c.get("donation_p90_us").and_then(Json::as_u64),
+                donation_p99_us: c.get("donation_p99_us").and_then(Json::as_u64),
             });
         }
         Ok(BenchReport {
@@ -656,6 +698,9 @@ mod tests {
             tasks_requested: 0,
             best_cost: Some(3),
             shape: None,
+            donation_p50_us: Some(120),
+            donation_p90_us: Some(480),
+            donation_p99_us: Some(950),
         }
     }
 
@@ -678,6 +723,9 @@ mod tests {
                 subtree_skew: 1.5,
                 depth_of_mass_half: 7,
             }),
+            donation_p50_us: None,
+            donation_p90_us: None,
+            donation_p99_us: None,
         }
     }
 
@@ -699,6 +747,11 @@ mod tests {
         assert_eq!(s.max_depth, 12);
         assert_eq!(s.depth_of_mass_half, 7);
         assert!((s.prune_rate - 0.25).abs() < 1e-12);
+        // Donation percentiles roundtrip through the optional-null pattern.
+        assert_eq!(back.cases[0].donation_p50_us, Some(120));
+        assert_eq!(back.cases[0].donation_p90_us, Some(480));
+        assert_eq!(back.cases[0].donation_p99_us, Some(950));
+        assert_eq!(back.cases[1].donation_p50_us, None);
     }
 
     #[test]

@@ -97,6 +97,7 @@ COMMANDS:
                   --bound none|edges|matching  --config file.toml
                   [--tree-shape]  (serial run + per-depth tree profile,
                    docs/TREE_SHAPE.md)
+                  [--trace-out FILE]  (JSONL event trace, docs/OBSERVABILITY.md)
     cluster     multi-process PARALLEL-RB over TCP (see docs/WIRE_PROTOCOL.md)
                   cluster listen --bind HOST:PORT --peers C  [solve flags]
                   cluster join   --connect HOST:PORT [--advertise HOST]  [solve flags]
@@ -104,6 +105,7 @@ COMMANDS:
                                  [--reconnect-base-ms T] [--reconnect-cap-ms T]
                                  [--reconnect-max N]
                   cluster run    --peers C                   [solve flags]
+                  (all modes accept --trace-out FILE for this rank's events)
                 (listen = rendezvous + rank 0; join = one extra rank;
                  run = spawn C-1 local join processes and listen — the
                  one-command localhost demo.  Pointing join at a `pbt serve`
@@ -116,6 +118,7 @@ COMMANDS:
                   [--bind HOST:PORT]  [--journal DIR]  [--max-active N]
                   [--workers N]  [--slice NODES]  [--checkpoint-ms T]
                   [--remote-window N]  (SLICEs in flight per pool rank)
+                  [--trace-out FILE]  (daemon-lifetime JSONL event trace)
                 (prints `SERVING <addr>`; kill -9 + restart with the same
                  --journal resumes every in-flight job from its checkpoint)
     submit      queue a job on a running daemon; prints `JOB <id>`
@@ -126,9 +129,14 @@ COMMANDS:
     status      one job's live state      status <id>  [--server HOST:PORT]
     result      one job's outcome         result <id>  [--wait] [--timeout-ms T]
     cancel      cancel a queued/running job   cancel <id>
-    server-stats  daemon version, uptime, queue + lifecycle counters
+    server-stats  daemon version, uptime, queue + lifecycle counters,
+                  slice-RTT / journal-fsync latency summaries
+                  [--watch SECS]  (re-poll and redraw in place)
     shutdown-server  graceful stop: jobs checkpoint + journal, then resume
                      on the next `pbt serve` with the same --journal
+    trace       analyze a --trace-out JSONL file (docs/OBSERVABILITY.md):
+                  per-slot timeline, slice-RTT / donation / journal latency
+                  percentiles      trace <file.jsonl>
     version     print crate version + git revision (also: --version)
     simulate    virtual-time run on simulated cores
                   --problem vc|ds|clique  --instance <name>  --cores N

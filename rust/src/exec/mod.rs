@@ -63,6 +63,7 @@ use crate::config::{PbtConfig, ServerConfig};
 use crate::coordinator::WorkerConfig;
 use crate::engine::{Problem, SearchState, StepResult, Stepper};
 use crate::index::{CurrentIndex, NodeIndex};
+use crate::metrics::trace::{local_slot, Obs};
 use crate::server::journal::FrontierRecord;
 use crate::util::Stopwatch;
 use crate::COST_INF;
@@ -118,6 +119,11 @@ pub struct ExecProfile {
     pub worker: WorkerConfig,
     /// Wall-clock budget for runner front-ends (None = run to completion).
     pub timeout: Option<Duration>,
+    /// Observability handle: when present, the scheduler, its local
+    /// workers and the remote dispatchers record trace events and latency
+    /// histograms into it (`--trace-out`, STATS_R summaries).  `None` (the
+    /// default) costs nothing.
+    pub obs: Option<Arc<Obs>>,
 }
 
 impl Default for ExecProfile {
@@ -130,6 +136,7 @@ impl Default for ExecProfile {
             remote_window: 2,
             worker: WorkerConfig::default(),
             timeout: None,
+            obs: None,
         }
     }
 }
@@ -170,6 +177,11 @@ impl ExecProfile {
         self
     }
 
+    pub fn with_obs(mut self, obs: Option<Arc<Obs>>) -> Self {
+        self.obs = obs;
+        self
+    }
+
     /// The thread-runner view of this profile (`runner::solve` /
     /// `runner::cluster` keep their `RunConfig`-shaped API).
     pub fn run_config(&self) -> crate::runner::RunConfig {
@@ -191,6 +203,7 @@ impl From<&PbtConfig> for ExecProfile {
             remote_window: c.server.remote_window.max(1),
             worker: c.worker_config(),
             timeout: None,
+            obs: None,
         }
     }
 }
@@ -205,6 +218,7 @@ impl From<&ServerConfig> for ExecProfile {
             remote_window: c.remote_window.max(1),
             worker: WorkerConfig::default(),
             timeout: None,
+            obs: None,
         }
     }
 }
@@ -287,8 +301,29 @@ impl PoolStats {
     /// Dispatch is counted at slice start on both placements, so this is
     /// meaningful mid-run; slices abandoned to a lost rank stay in the
     /// gauge until their requeued checkpoints are re-dispatched elsewhere.
+    ///
+    /// Saturating on purpose: scheduler-produced stats always have
+    /// `completed <= dispatched` (asserted at the increment site,
+    /// [`complete_one`](Self::complete_one)), but the cluster-report
+    /// mapping counts *received* slices as completions, so a rank that
+    /// receives more than it donates legitimately renders 0 here — it must
+    /// never render a wrapped u64.
     pub fn in_flight(&self) -> u64 {
         self.slices_dispatched.saturating_sub(self.slices_completed)
+    }
+
+    /// Count one completed slice.  The scheduler funnels every completion
+    /// through here so debug builds catch a wrapped in-flight gauge at the
+    /// site that caused it (a requeue/reconnect interleaving bug), while
+    /// release builds render 0 via the saturating [`in_flight`](Self::in_flight).
+    pub(crate) fn complete_one(&mut self) {
+        self.slices_completed += 1;
+        debug_assert!(
+            self.slices_completed <= self.slices_dispatched,
+            "in-flight gauge wrapped: {} completed > {} dispatched",
+            self.slices_completed,
+            self.slices_dispatched
+        );
     }
 
     /// The one-line rendering both CLI surfaces print.
@@ -412,6 +447,17 @@ pub struct Scheduler {
     idle: AtomicUsize,
     live_threads: AtomicUsize,
     seq: AtomicU64,
+    /// Observability sink ([`ExecProfile::obs`]); None costs nothing.
+    obs: Option<Arc<Obs>>,
+}
+
+/// Trace slot id of a placement: remote ranks positive, local threads
+/// negative (see [`crate::metrics::trace::local_slot`]).
+fn trace_slot(p: WorkerSlot) -> i64 {
+    match p {
+        WorkerSlot::Local { thread } => local_slot(thread),
+        WorkerSlot::Remote { rank } => rank as i64,
+    }
 }
 
 impl Scheduler {
@@ -432,7 +478,12 @@ impl Scheduler {
             idle: AtomicUsize::new(0),
             live_threads: AtomicUsize::new(0),
             seq: AtomicU64::new(0),
+            obs: None,
         }
+    }
+
+    fn obs(&self) -> Option<&Obs> {
+        self.obs.as_deref()
     }
 
     /// Offer a slice (checkpoint blob) to the pool: it joins the queue as
@@ -441,7 +492,11 @@ impl Scheduler {
         let mut f = lock(&self.frontier);
         f.queue.push_back(slice);
         f.live += 1;
+        let qlen = f.queue.len() as u64;
         drop(f);
+        if let Some(o) = self.obs() {
+            o.queue_push(0, qlen);
+        }
         SliceTicket { seq: self.seq.fetch_add(1, Ordering::SeqCst) }
     }
 
@@ -466,6 +521,12 @@ impl Scheduler {
             WorkerSlot::Local { .. } => f.stats.local_slots += 1,
             WorkerSlot::Remote { .. } => f.stats.remote_slots += 1,
         }
+        drop(f);
+        if let Some(o) = self.obs() {
+            if let WorkerSlot::Remote { rank } = placement {
+                o.rank_event(crate::metrics::trace::TraceKind::RankJoin, rank);
+            }
+        }
         id
     }
 
@@ -484,6 +545,7 @@ impl Scheduler {
     fn remove_slot(&self, slot: SlotId, why: Departure) -> Vec<Checkpoint> {
         let mut f = lock(&self.frontier);
         let mut returned = Vec::new();
+        let placement = f.slots.get(&slot).map(|s| s.placement);
         if let Some(s) = f.slots.remove(&slot) {
             // Every in-flight subtree stays live; the whole window moves
             // slot -> queue, oldest dispatch first.
@@ -497,6 +559,15 @@ impl Scheduler {
             Departure::Left => f.stats.left += 1,
             Departure::Lost => f.stats.lost += 1,
         }
+        drop(f);
+        if let (Some(o), Some(WorkerSlot::Remote { rank })) = (self.obs(), placement) {
+            use crate::metrics::trace::TraceKind;
+            match why {
+                Departure::Retired => {}
+                Departure::Left => o.rank_event(TraceKind::RankLeave, rank),
+                Departure::Lost => o.rank_event(TraceKind::RankLost, rank),
+            }
+        }
         returned
     }
 
@@ -508,11 +579,14 @@ impl Scheduler {
         match f.queue.pop_front() {
             Some(b) => {
                 let seq = self.seq.fetch_add(1, Ordering::SeqCst);
-                f.slots
-                    .get_mut(&slot)
-                    .expect("popping slot is in the pool")
-                    .inflight
-                    .insert(seq, b.clone());
+                let s = f.slots.get_mut(&slot).expect("popping slot is in the pool");
+                s.inflight.insert(seq, b.clone());
+                let tslot = trace_slot(s.placement);
+                let qlen = f.queue.len() as u64;
+                drop(f);
+                if let Some(o) = self.obs() {
+                    o.queue_pop(tslot, seq, qlen);
+                }
                 Pop::Got(seq, b)
             }
             None => {
@@ -695,7 +769,9 @@ where
 {
     let sw = Stopwatch::new();
     let workers = profile.workers.max(1);
-    let shared = Scheduler::new(init, best0, sol0);
+    let mut shared = Scheduler::new(init, best0, sol0);
+    shared.obs = profile.obs.clone();
+    let shared = shared;
     shared.live_threads.store(workers, Ordering::SeqCst);
 
     std::thread::scope(|scope| {
@@ -788,6 +864,10 @@ fn worker_loop<P>(
     P::State: SearchState<Sol = Vec<u32>>,
 {
     let me = shared.join(WorkerSlot::Local { thread });
+    let tslot = local_slot(thread);
+    // Starvation round-trip timing: first starved pop -> next granted pop
+    // is the donation RTT this thread experienced.
+    let mut starved_since: Option<Instant> = None;
     loop {
         if control.current() != StopKind::None {
             shared.remove_slot(me, Departure::Retired);
@@ -798,20 +878,35 @@ fn worker_loop<P>(
                 shared.remove_slot(me, Departure::Retired);
                 return;
             }
-            Pop::Starved => shared.starve_wait(),
-            Pop::Got(key, blob) => match Stepper::from_checkpoint(problem, &blob) {
-                Ok(mut stepper) => drive(&mut stepper, me, key, shared, profile, control),
-                Err(_) => {
-                    // CRC-guarded journals make this unreachable in
-                    // practice; a corrupt blob is dropped rather than
-                    // wedging the job.
-                    let mut f = lock(&shared.frontier);
-                    if let Some(s) = f.slots.get_mut(&me) {
-                        s.inflight.remove(&key);
+            Pop::Starved => {
+                if starved_since.is_none() {
+                    starved_since = Some(Instant::now());
+                    if let Some(o) = shared.obs() {
+                        o.donation_request(tslot);
                     }
-                    f.live -= 1;
                 }
-            },
+                shared.starve_wait()
+            }
+            Pop::Got(key, blob) => {
+                if let Some(t0) = starved_since.take() {
+                    if let Some(o) = shared.obs() {
+                        o.donation_grant(tslot, t0.elapsed().as_micros() as u64);
+                    }
+                }
+                match Stepper::from_checkpoint(problem, &blob) {
+                    Ok(mut stepper) => drive(&mut stepper, me, tslot, key, shared, profile, control),
+                    Err(_) => {
+                        // CRC-guarded journals make this unreachable in
+                        // practice; a corrupt blob is dropped rather than
+                        // wedging the job.
+                        let mut f = lock(&shared.frontier);
+                        if let Some(s) = f.slots.get_mut(&me) {
+                            s.inflight.remove(&key);
+                        }
+                        f.live -= 1;
+                    }
+                }
+            }
         }
     }
 }
@@ -821,6 +916,7 @@ fn worker_loop<P>(
 fn drive<P>(
     stepper: &mut Stepper<P>,
     me: SlotId,
+    tslot: i64,
     key: u64,
     shared: &Scheduler,
     profile: &ExecProfile,
@@ -836,6 +932,10 @@ fn drive<P>(
         // exactly like on remote ones.
         {
             lock(&shared.frontier).stats.slices_dispatched += 1;
+        }
+        let slice_start = Instant::now();
+        if let Some(o) = shared.obs() {
+            o.slice_dispatch(tslot, key, 0);
         }
         let mut visited = 0u32;
         while visited < slice {
@@ -856,29 +956,44 @@ fn drive<P>(
                 s.inflight.remove(&key);
             }
             f.live -= 1;
-            f.stats.slices_completed += 1;
+            f.stats.complete_one();
+            drop(f);
+            if let Some(o) = shared.obs() {
+                o.slice_result_local(tslot, key, slice_start.elapsed().as_micros() as u64);
+            }
             return;
         }
         // Slice boundary: refresh our in-flight entry FIRST, then donate —
         // the refreshed entry still contains every subtree donated below,
         // so the frontier cover holds throughout (duplicates are safe,
         // losses are not).
-        {
+        let donated = {
             let mut f = lock(&shared.frontier);
             if let Some(s) = f.slots.get_mut(&me) {
                 s.inflight.insert(key, stepper.checkpoint_bytes());
             }
-            f.stats.slices_completed += 1;
+            f.stats.complete_one();
             let hungry = shared.idle.load(Ordering::SeqCst).min(MAX_DONATE_PER_SLICE);
             let deficit = hungry.saturating_sub(f.queue.len());
+            let mut donated = 0u64;
             for _ in 0..deficit {
                 match stepper.donate() {
                     Some(idx) => {
                         f.queue.push_back(index_checkpoint(idx));
                         f.live += 1;
+                        donated += 1;
                     }
                     None => break,
                 }
+            }
+            let qlen = f.queue.len() as u64;
+            drop(f);
+            (donated > 0).then_some(qlen)
+        };
+        if let Some(o) = shared.obs() {
+            o.slice_result_local(tslot, key, slice_start.elapsed().as_micros() as u64);
+            if let Some(qlen) = donated {
+                o.queue_push(tslot, qlen);
             }
         }
         match control.current() {
@@ -1028,6 +1143,9 @@ fn dispatcher_loop(
     // copies live in the slot's in-flight map; `serve_slices` executes
     // strictly in request order, so results must match front-to-back.
     let mut outstanding: VecDeque<u64> = VecDeque::new();
+    // Send instants per outstanding seq: the wall RTT of a slice is
+    // send -> matching RESULT absorbed, measured here per rank.
+    let mut sent_at: BTreeMap<u64, Instant> = BTreeMap::new();
     let mut reader = FrameReader::new();
     loop {
         if control.current() != StopKind::None {
@@ -1052,6 +1170,10 @@ fn dispatcher_loop(
                         return;
                     }
                     outstanding.push_back(seq);
+                    sent_at.insert(seq, Instant::now());
+                    if let Some(o) = shared.obs() {
+                        o.slice_dispatch(conn.rank as i64, seq, outstanding.len() as u64);
+                    }
                 }
                 Pop::Starved => break,
                 Pop::JobDone => {
@@ -1112,10 +1234,20 @@ fn dispatcher_loop(
             }
         };
         outstanding.pop_front();
+        if let Some(o) = shared.obs() {
+            let rtt = sent_at
+                .remove(&res.seq)
+                .map(|t0| t0.elapsed().as_micros() as u64)
+                .unwrap_or(0);
+            o.slice_result_remote(conn.rank, res.seq, rtt);
+        } else {
+            sent_at.remove(&res.seq);
+        }
         shared.nodes.fetch_add(res.nodes, Ordering::SeqCst);
         if res.best != COST_INF {
             shared.record_best(res.best, res.solution);
         }
+        let donated_count = res.donated.len() as u64;
         let continuation = {
             let mut f = lock(&shared.frontier);
             // Donations join the queue while our in-flight entry still
@@ -1140,8 +1272,15 @@ fn dispatcher_loop(
                     None
                 }
             };
-            f.stats.slices_completed += 1;
+            f.stats.complete_one();
             f.stats.slices_remote += 1;
+            let qlen = f.queue.len() as u64;
+            drop(f);
+            if donated_count > 0 {
+                if let Some(o) = shared.obs() {
+                    o.queue_push(conn.rank as i64, qlen);
+                }
+            }
             next
         };
         if let Some((seq, cp)) = continuation {
@@ -1150,6 +1289,10 @@ fn dispatcher_loop(
                 return;
             }
             outstanding.push_back(seq);
+            sent_at.insert(seq, Instant::now());
+            if let Some(o) = shared.obs() {
+                o.slice_dispatch(conn.rank as i64, seq, outstanding.len() as u64);
+            }
         }
         pace(profile, control);
     }

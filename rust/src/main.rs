@@ -48,6 +48,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "cancel" => cmd_cancel(args),
         "server-stats" => cmd_server_stats(args),
         "shutdown-server" => cmd_shutdown_server(args),
+        "trace" => cmd_trace(args),
         "version" | "--version" | "-V" => {
             println!("pbt {} (rev {})", pbt::server::VERSION, pbt::server::git_rev());
             Ok(())
@@ -84,6 +85,29 @@ fn run_config(args: &Args) -> Result<(RunConfig, PbtConfig)> {
     Ok((cfg, base))
 }
 
+/// `--trace-out <path>`: a JSONL event sink for this run
+/// (docs/OBSERVABILITY.md; analyze with `pbt trace <path>`).
+fn trace_obs(args: &Args) -> Result<Option<std::sync::Arc<pbt::metrics::trace::Obs>>> {
+    match args.get("trace-out") {
+        Some(p) => Ok(Some(
+            pbt::metrics::trace::Obs::to_file(p)
+                .with_context(|| format!("creating trace file {p}"))?,
+        )),
+        None => Ok(None),
+    }
+}
+
+/// Flush a `--trace-out` sink and tell the user where the events went.
+fn finish_trace(args: &Args, obs: Option<&pbt::metrics::trace::Obs>) {
+    if let (Some(o), Some(path)) = (obs, args.get("trace-out")) {
+        let _ = o.flush();
+        eprintln!(
+            "trace: {} event(s) -> {path}   (analyze with `pbt trace {path}`)",
+            o.events_recorded()
+        );
+    }
+}
+
 fn cmd_solve(args: &Args) -> Result<()> {
     let (cfg, base) = run_config(args)?;
     let scale = args.get_usize("scale", base.scale)?;
@@ -91,6 +115,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let inst = args.get_str("instance", "phat1");
     println!("== pbt solve: problem={problem_kind} instance={inst} workers={}", cfg.workers);
 
+    let obs = trace_obs(args)?;
     let tree_shape = args.get_bool("tree-shape", false)?;
     match problem_kind.as_str() {
         "vc" => {
@@ -104,7 +129,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
             if tree_shape {
                 solve_with_shape(&p, |c| format!("τ = {c}"));
             } else {
-                report_run(&p, &cfg, |sol| format!("|cover| = {}", sol.len()));
+                report_run(&p, &cfg, obs.as_deref(), |sol| format!("|cover| = {}", sol.len()));
             }
         }
         "ds" => {
@@ -113,7 +138,9 @@ fn cmd_solve(args: &Args) -> Result<()> {
             if tree_shape {
                 solve_with_shape(&p, |c| format!("γ = {c}"));
             } else {
-                report_run(&p, &cfg, |sol| format!("|dominating set| = {}", sol.len()));
+                report_run(&p, &cfg, obs.as_deref(), |sol| {
+                    format!("|dominating set| = {}", sol.len())
+                });
             }
         }
         "clique" => {
@@ -122,13 +149,13 @@ fn cmd_solve(args: &Args) -> Result<()> {
             if tree_shape {
                 solve_with_shape(&p, |c| format!("ω = {}", p.clique_size(c)));
             } else {
-                report_run(&p, &cfg, |sol| format!("|clique| = {} (ω)", sol.len()));
+                report_run(&p, &cfg, obs.as_deref(), |sol| format!("|clique| = {} (ω)", sol.len()));
             }
         }
         "queens" => {
             let n = args.get_usize("n", 10)? as u32;
             let p = NQueens::new(n);
-            let r = runner::solve(&p, &cfg);
+            let r = runner::solve_traced(&p, &cfg, obs.as_deref());
             println!(
                 "solutions: {}   time: {}   nodes: {}",
                 r.total_solutions(),
@@ -138,15 +165,17 @@ fn cmd_solve(args: &Args) -> Result<()> {
         }
         other => bail!("unknown problem {other:?}"),
     }
+    finish_trace(args, obs.as_deref());
     Ok(())
 }
 
 fn report_run<P: Problem>(
     problem: &P,
     cfg: &RunConfig,
+    obs: Option<&pbt::metrics::trace::Obs>,
     describe: impl Fn(&<P::State as pbt::engine::SearchState>::Sol) -> String,
 ) {
-    let r = runner::solve(problem, cfg);
+    let r = runner::solve_traced(problem, cfg, obs);
     println!(
         "best cost: {:?}   time: {}   nodes: {}   T_S(avg): {:.0}   T_R(avg): {:.0}",
         r.best_cost,
@@ -212,7 +241,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     };
 
     let g = load_instance(&inst, scale)?;
-    match problem_kind.as_str() {
+    let obs = trace_obs(args)?;
+    let out = match problem_kind.as_str() {
         "vc" => {
             let bound = match args.get_str("bound", &base.bound).as_str() {
                 "none" => BoundKind::None,
@@ -220,20 +250,23 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                 _ => BoundKind::EdgesOverMaxDeg,
             };
             let p = VertexCover::with_bound(&g, bound);
-            run_cluster_mode(mode, args, &base, &p, tcp, wcfg, timeout)
+            run_cluster_mode(mode, args, &base, &p, tcp, wcfg, timeout, obs.as_deref())
         }
         "ds" => {
             let p = DominatingSet::new(&g);
-            run_cluster_mode(mode, args, &base, &p, tcp, wcfg, timeout)
+            run_cluster_mode(mode, args, &base, &p, tcp, wcfg, timeout, obs.as_deref())
         }
         "clique" => {
             let p = MaxClique::new(&g);
-            run_cluster_mode(mode, args, &base, &p, tcp, wcfg, timeout)
+            run_cluster_mode(mode, args, &base, &p, tcp, wcfg, timeout, obs.as_deref())
         }
         other => bail!("unknown problem {other:?} (cluster supports vc|ds|clique)"),
-    }
+    };
+    finish_trace(args, obs.as_deref());
+    out
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_cluster_mode<P: Problem>(
     mode: &str,
     args: &Args,
@@ -242,14 +275,23 @@ fn run_cluster_mode<P: Problem>(
     tcp: pbt::comm::tcp::TcpConfig,
     wcfg: pbt::coordinator::WorkerConfig,
     timeout: Option<std::time::Duration>,
+    obs: Option<&pbt::metrics::trace::Obs>,
 ) -> Result<()> {
     use pbt::runner::cluster;
     match mode {
         "listen" => {
             let bind = args.get_str("bind", &base.cluster.bind);
             let peers = args.get_usize("peers", base.cluster.peers)?;
-            let report =
-                cluster::listen(problem, &bind, peers, tcp, wcfg, timeout, announce_listening)?;
+            let report = cluster::listen_traced(
+                problem,
+                &bind,
+                peers,
+                tcp,
+                wcfg,
+                timeout,
+                announce_listening,
+                obs,
+            )?;
             print_cluster_report(&report);
             Ok(())
         }
@@ -267,7 +309,7 @@ fn run_cluster_mode<P: Problem>(
             use pbt::comm::tcp::{Joined, TcpTransport};
             match TcpTransport::join_or_pool(&connect, advertise.as_deref(), tcp)? {
                 Joined::Mesh(transport) => {
-                    let report = cluster::run(problem, &transport, wcfg, timeout);
+                    let report = cluster::run_traced(problem, &transport, wcfg, timeout, obs);
                     print_cluster_report(&report);
                 }
                 Joined::Pool(mut conn) => {
@@ -384,7 +426,7 @@ fn run_cluster_mode<P: Problem>(
                     return Err(e).context("waiting for cluster joiners");
                 }
             };
-            let report = cluster::run(problem, &transport, wcfg, timeout);
+            let report = cluster::run_traced(problem, &transport, wcfg, timeout, obs);
             print_cluster_report(&report);
             // Reap every child before judging any of them.
             let mut failures = Vec::new();
@@ -461,6 +503,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.slice_nodes = flag_u32(args, "slice", opts.slice_nodes)?.max(1);
     opts.checkpoint_ms = args.get_u64("checkpoint-ms", opts.checkpoint_ms)?.max(1);
     opts.remote_window = args.get_usize("remote-window", opts.remote_window)?.max(1);
+    opts.trace_out = args.get("trace-out").map(std::path::PathBuf::from);
     eprintln!(
         "== pbt serve v{} (rev {}): journal {}, {} active job slot(s)",
         pbt::server::VERSION,
@@ -586,24 +629,176 @@ fn cmd_cancel(args: &Args) -> Result<()> {
 }
 
 fn cmd_server_stats(args: &Args) -> Result<()> {
-    let s = serve_client(args)?.stats()?;
-    println!(
-        "pbt serve {} (rev {}, proto v{})   uptime: {}   active: {}   queued: {}",
-        s.version,
-        s.git_rev,
-        s.proto_version,
-        human_duration(s.uptime_secs),
-        s.active,
-        s.queued,
-    );
-    println!("{}", s.pool.render_line());
-    println!("{}", s.metrics.render_table().render());
-    Ok(())
+    let watch_secs = args.get_u64("watch", 0)?;
+    loop {
+        // One-shot protocol: every poll is its own connection, so --watch
+        // keeps working across daemon restarts.
+        let s = serve_client(args)?.stats()?;
+        if watch_secs > 0 {
+            // Clear + home, then redraw in place.
+            print!("\x1b[2J\x1b[H");
+        }
+        println!(
+            "pbt serve {} (rev {}, proto v{})   uptime: {}   active: {}   queued: {}",
+            s.version,
+            s.git_rev,
+            s.proto_version,
+            human_duration(s.uptime_secs),
+            s.active,
+            s.queued,
+        );
+        println!("{}", s.pool.render_line());
+        println!("slice-rtt:      {}", s.slice_rtt.render());
+        println!("journal-fsync:  {}", s.journal_fsync.render());
+        println!("{}", s.metrics.render_table().render());
+        if watch_secs == 0 {
+            return Ok(());
+        }
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        std::thread::sleep(std::time::Duration::from_secs(watch_secs));
+    }
 }
 
 fn cmd_shutdown_server(args: &Args) -> Result<()> {
     serve_client(args)?.shutdown()?;
     println!("daemon shutting down (jobs journaled for resume)");
+    Ok(())
+}
+
+/// `pbt trace <file.jsonl>` — offline analyzer for a `--trace-out` stream
+/// (docs/OBSERVABILITY.md): per-slot timeline, latency percentile tables,
+/// and a donation-pressure summary.  Percentiles here are exact
+/// (nearest-rank on the raw samples) — the log-bucketed histograms exist
+/// for the live wire summary, but the analyzer has every sample at hand.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use pbt::metrics::hist::{fmt_us, percentile_of_sorted};
+    use pbt::metrics::trace::{slot_label, TraceEvent, TraceKind};
+    use std::collections::BTreeMap;
+
+    let path = args
+        .positionals
+        .first()
+        .context("expected a trace file (e.g. `pbt trace trace.jsonl`)")?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ev = TraceEvent::parse_line(line)
+            .with_context(|| format!("{path}:{}: bad trace line", i + 1))?;
+        events.push(ev);
+    }
+    if events.is_empty() {
+        bail!("{path}: no trace events");
+    }
+    let span = events.iter().map(|e| e.t_us).max().unwrap_or(0);
+    println!("== pbt trace: {path} — {} event(s) over {}", events.len(), fmt_us(span));
+
+    // Per-slot timeline: who was active when, and what flowed through it.
+    #[derive(Default)]
+    struct SlotLine {
+        first: u64,
+        last: u64,
+        dispatched: u64,
+        results: u64,
+        other: u64,
+    }
+    let mut slots: BTreeMap<i64, SlotLine> = BTreeMap::new();
+    for e in &events {
+        let s = slots.entry(e.slot).or_insert(SlotLine { first: e.t_us, ..Default::default() });
+        s.first = s.first.min(e.t_us);
+        s.last = s.last.max(e.t_us);
+        match e.kind {
+            TraceKind::SliceDispatch => s.dispatched += 1,
+            TraceKind::SliceResult => s.results += 1,
+            _ => s.other += 1,
+        }
+    }
+    let mut timeline = Table::new(["slot", "first", "last", "dispatched", "results", "other"]);
+    for (slot, s) in &slots {
+        timeline.row([
+            slot_label(*slot),
+            fmt_us(s.first),
+            fmt_us(s.last),
+            s.dispatched.to_string(),
+            s.results.to_string(),
+            s.other.to_string(),
+        ]);
+    }
+    println!("{}", timeline.render());
+
+    // Bucket the latency-bearing events by path.
+    let mut remote_rtt: BTreeMap<i64, Vec<u64>> = BTreeMap::new();
+    let mut local_dur: Vec<u64> = Vec::new();
+    let mut donation_rtt: Vec<u64> = Vec::new();
+    let mut fsync: Vec<u64> = Vec::new();
+    let mut appends: Vec<u64> = Vec::new();
+    let mut donation_req_t: Vec<u64> = Vec::new();
+    for e in &events {
+        match e.kind {
+            TraceKind::SliceResult if e.slot > 0 => {
+                remote_rtt.entry(e.slot).or_default().push(e.val)
+            }
+            TraceKind::SliceResult => local_dur.push(e.val),
+            TraceKind::DonationGrant => donation_rtt.push(e.val),
+            TraceKind::DonationRequest => donation_req_t.push(e.t_us),
+            TraceKind::JournalFsync => fsync.push(e.val),
+            TraceKind::JournalAppend => appends.push(e.val),
+            _ => {}
+        }
+    }
+    let row_of = |name: &str, sorted: &[u64]| -> [String; 6] {
+        [
+            name.to_string(),
+            sorted.len().to_string(),
+            fmt_us(percentile_of_sorted(sorted, 0.50)),
+            fmt_us(percentile_of_sorted(sorted, 0.90)),
+            fmt_us(percentile_of_sorted(sorted, 0.99)),
+            fmt_us(sorted.last().copied().unwrap_or(0)),
+        ]
+    };
+    let mut lat = Table::new(["path", "n", "p50", "p90", "p99", "max"]);
+    let mut all_rtt: Vec<u64> = Vec::new();
+    for (slot, vals) in &mut remote_rtt {
+        vals.sort_unstable();
+        all_rtt.extend_from_slice(vals);
+        lat.row(row_of(&format!("slice-rtt {}", slot_label(*slot)), vals));
+    }
+    for (name, vals) in [
+        ("slice-rtt (all ranks)", &mut all_rtt),
+        ("slice-local", &mut local_dur),
+        ("donation-rtt", &mut donation_rtt),
+        ("journal-append", &mut appends),
+        ("journal-fsync", &mut fsync),
+    ] {
+        vals.sort_unstable();
+        if !vals.is_empty() {
+            lat.row(row_of(name, vals));
+        }
+    }
+    println!("{}", lat.render());
+
+    // Donation pressure: gaps between consecutive work requests, across
+    // all slots — high p50 means workers rarely starve.
+    if donation_req_t.len() >= 2 {
+        donation_req_t.sort_unstable();
+        let mut gaps: Vec<u64> = donation_req_t.windows(2).map(|w| w[1] - w[0]).collect();
+        gaps.sort_unstable();
+        println!(
+            "donation requests: {}   interarrival p50: {}   p90: {}",
+            donation_req_t.len(),
+            fmt_us(percentile_of_sorted(&gaps, 0.50)),
+            fmt_us(percentile_of_sorted(&gaps, 0.90)),
+        );
+    }
+    // Greppable raw-microsecond summary lines (the trace-smoke CI job
+    // asserts on these; 0 = no samples on that path).
+    println!("slice-rtt p50_us: {}", percentile_of_sorted(&all_rtt, 0.50));
+    println!("slice-local p50_us: {}", percentile_of_sorted(&local_dur, 0.50));
+    println!("donation-rtt p50_us: {}", percentile_of_sorted(&donation_rtt, 0.50));
+    println!("journal-fsync p50_us: {}", percentile_of_sorted(&fsync, 0.50));
     Ok(())
 }
 
@@ -647,10 +842,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let baseline = BenchReport::from_json(&pbt::bench::json::parse(&text)?)
             .with_context(|| format!("parsing baseline {baseline_path}"))?;
         if baseline.bootstrap {
-            println!(
-                "check: {baseline_path} is a bootstrap baseline (no measurements yet) — \
-                 gate passes vacuously; promote a real run with \
-                 `pbt bench --write-baseline {baseline_path}`"
+            // Loud on purpose: a bootstrap gate passes VACUOUSLY, and a CI
+            // log that says "check: OK" while measuring nothing is how a
+            // regression gate rots.  Greppable marker for the bench-smoke
+            // job.
+            eprintln!(
+                "check: WARNING: BASELINE IS BOOTSTRAP — {baseline_path} holds no \
+                 measurements, so this gate passed without comparing anything. \
+                 Promote a real run with `pbt bench --smoke --write-baseline \
+                 {baseline_path}` and commit it."
             );
             return Ok(());
         }

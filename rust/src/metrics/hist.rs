@@ -1,0 +1,346 @@
+//! Mergeable log-bucketed latency histogram — the measurement substrate
+//! behind `--trace-out`, the PBTS v4 STATS_R summaries, and the bench
+//! latency columns.
+//!
+//! Design constraints (see `docs/OBSERVABILITY.md`):
+//!
+//! * **Fixed shape.** Exactly [`BUCKETS`] = 64 buckets: bucket 0 holds the
+//!   value 0, bucket `i` (1..=62) holds values with `floor(log2(v)) ==
+//!   i - 1` (i.e. the half-open range `[2^(i-1), 2^i)`), and bucket 63 is
+//!   the overflow bucket for values `>= 2^62`.  A fixed shape is what makes
+//!   [`merge`](Hist::merge) exact: merging per-worker histograms is
+//!   element-wise addition, identical to having recorded every sample into
+//!   one histogram.
+//! * **u64 everywhere.** Samples are microseconds; counts, sum and max are
+//!   u64 with saturating arithmetic, so the histogram can absorb years of
+//!   samples without UB.
+//! * **Bucket-edge percentiles.** [`percentile`](Hist::percentile) returns
+//!   the *lower bound* of the bucket holding the nearest-rank sample — a
+//!   conservative estimate that is provably in the same bucket as the true
+//!   percentile (the property tests pin this against a sorted-vec oracle).
+//! * **Wire-encodable.** [`encode_into`](Hist::encode_into) /
+//!   [`decode`](Hist::decode) use the `comm::wire` LE helpers and reject
+//!   truncated or internally-inconsistent bytes, so histograms can ride in
+//!   PBTS frames (STATS_R carries the compact [`HistSummary`] form).
+
+use crate::comm::wire::{push_u64_le, take_u64_le};
+
+/// Number of histogram buckets (fixed forever — changing it changes the
+/// meaning of every stored histogram; add a new version instead).
+pub const BUCKETS: usize = 64;
+
+/// Encoded size of one histogram: count + sum + max + 64 bucket counts.
+pub const ENCODED_BYTES: usize = 8 * (3 + BUCKETS);
+
+/// A log₂-bucketed histogram of u64 samples (microseconds by convention).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hist {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { counts: [0u64; BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+}
+
+/// Bucket index of a sample: 0 for the value 0, `floor(log2(v)) + 1`
+/// clamped into the overflow bucket 63 for `v >= 2^62`.
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        return 0;
+    }
+    let log2 = (63 - v.leading_zeros()) as usize;
+    if log2 >= BUCKETS - 2 {
+        BUCKETS - 1
+    } else {
+        log2 + 1
+    }
+}
+
+/// Inclusive lower bound of bucket `i` (0 for bucket 0, else `2^(i-1)`).
+pub fn bucket_lo(i: usize) -> u64 {
+    debug_assert!(i < BUCKETS);
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (`u64::MAX` for the overflow
+/// bucket 63).
+pub fn bucket_hi(i: usize) -> u64 {
+    debug_assert!(i < BUCKETS);
+    match i {
+        0 => 0,
+        _ if i == BUCKETS - 1 => u64::MAX,
+        _ => (1u64 << i) - 1,
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] = self.counts[bucket_of(v)].saturating_add(1);
+        self.count = self.count.saturating_add(1);
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Element-wise accumulation.  Exact: `a.merge(&b)` leaves `a` equal to
+    /// the histogram of the concatenated sample streams.
+    pub fn merge(&mut self, o: &Hist) {
+        for (c, oc) in self.counts.iter_mut().zip(o.counts.iter()) {
+            *c = c.saturating_add(*oc);
+        }
+        self.count = self.count.saturating_add(o.count);
+        self.sum = self.sum.saturating_add(o.sum);
+        self.max = self.max.max(o.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Integer mean of the recorded samples (0 when empty).
+    pub fn mean(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum / self.count
+        }
+    }
+
+    /// Nearest-rank percentile estimate: the lower bound of the bucket
+    /// containing the `ceil(q·n)`-th smallest sample.  `q` is clamped into
+    /// `(0, 1]`; returns 0 when the histogram is empty.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(f64::MIN_POSITIVE, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen = seen.saturating_add(c);
+            if seen >= rank {
+                return bucket_lo(i);
+            }
+        }
+        // Unreachable while count == Σ counts; be conservative anyway.
+        bucket_lo(BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p90(&self) -> u64 {
+        self.percentile(0.90)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
+    /// The compact six-number form that crosses the PBTS wire in STATS_R.
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count,
+            p50: self.p50(),
+            p90: self.p90(),
+            p99: self.p99(),
+            mean: self.mean(),
+            max: self.max,
+        }
+    }
+
+    /// Append the wire form: count, sum, max, then all 64 bucket counts,
+    /// each u64 LE ([`ENCODED_BYTES`] bytes total).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        push_u64_le(out, self.count);
+        push_u64_le(out, self.sum);
+        push_u64_le(out, self.max);
+        for &c in &self.counts {
+            push_u64_le(out, c);
+        }
+    }
+
+    /// Strict decode: `None` on truncation or when the stored total count
+    /// disagrees with the bucket counts (corruption, not just short reads).
+    pub fn decode(bytes: &[u8], pos: &mut usize) -> Option<Hist> {
+        let count = take_u64_le(bytes, pos)?;
+        let sum = take_u64_le(bytes, pos)?;
+        let max = take_u64_le(bytes, pos)?;
+        let mut counts = [0u64; BUCKETS];
+        for c in counts.iter_mut() {
+            *c = take_u64_le(bytes, pos)?;
+        }
+        let total = counts.iter().fold(0u64, |a, &c| a.saturating_add(c));
+        if total != count {
+            return None;
+        }
+        Some(Hist { counts, count, sum, max })
+    }
+}
+
+/// Six-number histogram digest: what STATS_R carries per histogram and
+/// what `pbt server-stats` renders.  All values are u64 (microseconds for
+/// the latency histograms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct HistSummary {
+    pub count: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub mean: u64,
+    pub max: u64,
+}
+
+impl HistSummary {
+    /// One human line, e.g. `n=42  p50=1.2ms  p90=3.1ms  p99=8.0ms
+    /// mean=1.9ms  max=12.4ms` (values are microseconds).
+    pub fn render(&self) -> String {
+        if self.count == 0 {
+            return "n=0".to_string();
+        }
+        format!(
+            "n={}  p50={}  p90={}  p99={}  mean={}  max={}",
+            self.count,
+            fmt_us(self.p50),
+            fmt_us(self.p90),
+            fmt_us(self.p99),
+            fmt_us(self.mean),
+            fmt_us(self.max),
+        )
+    }
+}
+
+/// Render a microsecond quantity with a readable unit (`870us`, `12.5ms`,
+/// `3.21s`).
+pub fn fmt_us(us: u64) -> String {
+    if us < 1_000 {
+        format!("{us}us")
+    } else if us < 1_000_000 {
+        format!("{:.1}ms", us as f64 / 1_000.0)
+    } else {
+        format!("{:.2}s", us as f64 / 1_000_000.0)
+    }
+}
+
+/// Exact nearest-rank percentile of an already-**sorted** slice — the
+/// oracle the histogram is property-tested against, also used by the
+/// `pbt trace` analyzer where raw samples are at hand.
+pub fn percentile_of_sorted(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let q = q.clamp(f64::MIN_POSITIVE, 1.0);
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_math_edges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of((1 << 62) - 1), 62);
+        assert_eq!(bucket_of(1 << 62), 63);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        for i in 0..BUCKETS {
+            assert_eq!(bucket_of(bucket_lo(i)), i, "lo of bucket {i}");
+            assert_eq!(bucket_of(bucket_hi(i)), i, "hi of bucket {i}");
+        }
+    }
+
+    #[test]
+    fn percentiles_bracket_the_samples() {
+        let mut h = Hist::new();
+        for v in [0u64, 1, 1, 7, 120, 121, 300, 100_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.max(), 100_000);
+        // p50 = 4th smallest = 7 -> bucket lo 4.
+        assert_eq!(h.p50(), bucket_lo(bucket_of(7)));
+        // p99 = 8th smallest = 100_000.
+        assert_eq!(h.p99(), bucket_lo(bucket_of(100_000)));
+        assert!(h.p50() <= h.p90() && h.p90() <= h.p99());
+    }
+
+    #[test]
+    fn merge_is_exact() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut all = Hist::new();
+        for v in [3u64, 5, 1000, 0] {
+            a.record(v);
+            all.record(v);
+        }
+        for v in [7u64, 7, 1 << 40, u64::MAX] {
+            b.record(v);
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Hist::new();
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.mean(), 0);
+        assert_eq!(h.summary(), HistSummary::default());
+    }
+
+    #[test]
+    fn wire_roundtrip_and_strict_prefixes() {
+        let mut h = Hist::new();
+        for v in [0u64, 9, 42, 1 << 30, u64::MAX] {
+            h.record(v);
+        }
+        let mut buf = Vec::new();
+        h.encode_into(&mut buf);
+        assert_eq!(buf.len(), ENCODED_BYTES);
+        let mut pos = 0;
+        let back = Hist::decode(&buf, &mut pos).expect("decode");
+        assert_eq!(pos, buf.len());
+        assert_eq!(back, h);
+        // Every strict prefix must be rejected.
+        for cut in 0..buf.len() {
+            let mut p = 0;
+            assert!(Hist::decode(&buf[..cut], &mut p).is_none(), "prefix {cut} accepted");
+        }
+        // A count/bucket mismatch must be rejected too.
+        let mut corrupt = buf.clone();
+        corrupt[0] ^= 1;
+        let mut p = 0;
+        assert!(Hist::decode(&corrupt, &mut p).is_none());
+    }
+
+    #[test]
+    fn fmt_us_units() {
+        assert_eq!(fmt_us(870), "870us");
+        assert_eq!(fmt_us(12_500), "12.5ms");
+        assert_eq!(fmt_us(3_210_000), "3.21s");
+    }
+}

@@ -6,6 +6,9 @@
 //! for, and the lens on the shallow-heavy clique trees of McCreesh &
 //! Prosser (arXiv:1401.5921).
 
+pub mod hist;
+pub mod trace;
+
 use crate::util::table::{thousands, Table};
 
 /// Per-depth profile of one search (or one worker's share of it).

@@ -1,0 +1,480 @@
+//! The always-on trace core: a bounded ring of timestamped [`TraceEvent`]s
+//! plus the latency histograms ([`super::hist`]) that summarize them, both
+//! behind one shared [`Obs`] handle.
+//!
+//! One `Obs` is created per run (`pbt solve` / `pbt cluster run`) or per
+//! daemon (`pbt serve`); its creation instant is the trace epoch, so every
+//! event carries `t_us` microseconds since run start and events from all
+//! workers, dispatchers and the journal interleave on one timeline.  The
+//! handle is cheap and `Sync`: recording takes one short mutex hold, and
+//! paths that were not given an `Obs` (the default for every embedded use
+//! and the existing tests) pay nothing.
+//!
+//! With `--trace-out <path>` the same events are appended to a JSONL file,
+//! one strict-schema object per line (see `docs/OBSERVABILITY.md`):
+//!
+//! ```text
+//! {"t_us":1234,"kind":"slice_result","slot":2,"seq":17,"val":812}
+//! ```
+//!
+//! `slot` encodes where the event happened: positive = remote rank,
+//! negative = local worker (`-(index+1)`), 0 = the daemon/coordinator
+//! itself.  `val` is kind-dependent (latency in microseconds for result /
+//! grant / journal events, queue or window occupancy for dispatch and
+//! queue events) — see [`TraceKind`].
+
+use super::hist::{Hist, HistSummary};
+use crate::bench::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default ring capacity: enough for tens of thousands of slices while
+/// bounding an always-on daemon to a few megabytes.
+pub const DEFAULT_RING_CAP: usize = 16_384;
+
+/// What happened.  The wire/JSONL name of each kind is its snake_case
+/// string from [`TraceKind::as_str`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// A slice left for a worker (`val` = credit-window occupancy after
+    /// the send for remote slots, 0 for local).
+    SliceDispatch,
+    /// A slice came back (`val` = latency us: wall RTT for remote slots,
+    /// in-worker slice duration for local).
+    SliceResult,
+    /// A starving worker asked for work (`val` = 0).
+    DonationRequest,
+    /// Work arrived at a previously-starving worker (`val` = round-trip
+    /// us since its request).
+    DonationGrant,
+    /// A frontier blob entered the queue (`val` = queue length after).
+    QueuePush,
+    /// A frontier blob left the queue for a slot (`val` = queue length
+    /// after).
+    QueuePop,
+    /// A journal frontier record was appended (`val` = duration us).
+    JournalAppend,
+    /// A journal terminal record was appended and fsynced (`val` =
+    /// duration us).
+    JournalFsync,
+    /// A remote rank joined (`slot` = rank).
+    RankJoin,
+    /// A remote rank left gracefully.
+    RankLeave,
+    /// A remote rank was severed (timeout / bad frame / EOF).
+    RankLost,
+    /// A previously-seen remote rank reconnected.
+    RankReconnect,
+}
+
+impl TraceKind {
+    pub const ALL: [TraceKind; 12] = [
+        TraceKind::SliceDispatch,
+        TraceKind::SliceResult,
+        TraceKind::DonationRequest,
+        TraceKind::DonationGrant,
+        TraceKind::QueuePush,
+        TraceKind::QueuePop,
+        TraceKind::JournalAppend,
+        TraceKind::JournalFsync,
+        TraceKind::RankJoin,
+        TraceKind::RankLeave,
+        TraceKind::RankLost,
+        TraceKind::RankReconnect,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceKind::SliceDispatch => "slice_dispatch",
+            TraceKind::SliceResult => "slice_result",
+            TraceKind::DonationRequest => "donation_request",
+            TraceKind::DonationGrant => "donation_grant",
+            TraceKind::QueuePush => "queue_push",
+            TraceKind::QueuePop => "queue_pop",
+            TraceKind::JournalAppend => "journal_append",
+            TraceKind::JournalFsync => "journal_fsync",
+            TraceKind::RankJoin => "rank_join",
+            TraceKind::RankLeave => "rank_leave",
+            TraceKind::RankLost => "rank_lost",
+            TraceKind::RankReconnect => "rank_reconnect",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TraceKind> {
+        TraceKind::ALL.iter().copied().find(|k| k.as_str() == s)
+    }
+}
+
+/// Slot id of local worker `i` (local workers are negative so they never
+/// collide with remote ranks, which are positive; 0 = daemon/none).
+pub fn local_slot(i: usize) -> i64 {
+    -(i as i64) - 1
+}
+
+/// Human label for a slot id: `rank 3` / `local 0` / `daemon`.
+pub fn slot_label(slot: i64) -> String {
+    match slot {
+        0 => "daemon".to_string(),
+        s if s > 0 => format!("rank {s}"),
+        s => format!("local {}", -s - 1),
+    }
+}
+
+/// One timestamped observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Microseconds since the owning [`Obs`]'s epoch (run start).
+    pub t_us: u64,
+    pub kind: TraceKind,
+    /// Positive = remote rank, negative = local worker, 0 = daemon.
+    pub slot: i64,
+    /// Slice sequence number where one applies, else 0.
+    pub seq: u64,
+    /// Kind-dependent payload (see [`TraceKind`]).
+    pub val: u64,
+}
+
+impl TraceEvent {
+    /// One strict-schema JSONL line (no trailing newline).  All values are
+    /// plain JSON numbers except `kind`; no escaping is ever needed.
+    pub fn to_jsonl(&self) -> String {
+        format!(
+            "{{\"t_us\":{},\"kind\":\"{}\",\"slot\":{},\"seq\":{},\"val\":{}}}",
+            self.t_us,
+            self.kind.as_str(),
+            self.slot,
+            self.seq,
+            self.val
+        )
+    }
+
+    /// Strict parse of one JSONL object: exactly the five schema keys, all
+    /// of the right type, `kind` a known name.
+    pub fn from_json(j: &Json) -> Result<TraceEvent> {
+        let Json::Obj(fields) = j else { bail!("trace event must be a JSON object") };
+        if fields.len() != 5 {
+            bail!("trace event must have exactly 5 keys, got {}", fields.len());
+        }
+        let t_us = j
+            .get("t_us")
+            .and_then(Json::as_u64)
+            .context("t_us must be a non-negative integer")?;
+        let kind_s = j.get("kind").and_then(Json::as_str).context("kind must be a string")?;
+        let kind = TraceKind::parse(kind_s)
+            .with_context(|| format!("unknown trace event kind {kind_s:?}"))?;
+        let slot_f = j.get("slot").and_then(Json::as_f64).context("slot must be a number")?;
+        if slot_f.fract() != 0.0 || slot_f.abs() > i64::MAX as f64 {
+            bail!("slot must be an integer");
+        }
+        let seq =
+            j.get("seq").and_then(Json::as_u64).context("seq must be a non-negative integer")?;
+        let val =
+            j.get("val").and_then(Json::as_u64).context("val must be a non-negative integer")?;
+        Ok(TraceEvent { t_us, kind, slot: slot_f as i64, seq, val })
+    }
+
+    /// Parse one JSONL line (strict: the whole line must be one event).
+    pub fn parse_line(line: &str) -> Result<TraceEvent> {
+        let j = crate::bench::json::parse(line)?;
+        TraceEvent::from_json(&j)
+    }
+}
+
+/// Bounded FIFO of the most recent events: pushing beyond capacity evicts
+/// the oldest, so a long daemon run keeps a sliding window rather than
+/// growing without bound.
+#[derive(Debug)]
+pub struct TraceRing {
+    cap: usize,
+    buf: VecDeque<TraceEvent>,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing { cap: cap.max(1), buf: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Oldest-first snapshot.
+    pub fn to_vec(&self) -> Vec<TraceEvent> {
+        self.buf.iter().copied().collect()
+    }
+}
+
+/// The per-path latency histograms `Obs` maintains alongside the ring.
+/// All samples are microseconds.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHists {
+    /// In-worker duration of local slices (dispatch → boundary/exhaustion).
+    pub slice_local: Hist,
+    /// Wall round-trip of remote slices (send → matching result frame).
+    pub slice_rtt: Hist,
+    /// Starvation round-trip (work request → work arrival).
+    pub donation_rtt: Hist,
+    /// Journal frontier-record append duration.
+    pub journal_append: Hist,
+    /// Journal terminal-record append+fsync duration.
+    pub journal_fsync: Hist,
+}
+
+struct ObsInner {
+    ring: TraceRing,
+    hists: LatencyHists,
+    writer: Option<std::fs::File>,
+    recorded: u64,
+    write_error: bool,
+}
+
+/// The shared observability handle: one per run (or per daemon), cloned
+/// into every worker/dispatcher via `Arc`.
+pub struct Obs {
+    epoch: Instant,
+    inner: Mutex<ObsInner>,
+}
+
+impl std::fmt::Debug for Obs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Obs").field("recorded", &self.events_recorded()).finish()
+    }
+}
+
+impl Obs {
+    pub fn new() -> Arc<Obs> {
+        Obs::build(None)
+    }
+
+    /// An `Obs` that also appends every event as a JSONL line to `path`
+    /// (truncating any existing file).
+    pub fn to_file(path: &str) -> std::io::Result<Arc<Obs>> {
+        let f = std::fs::File::create(path)?;
+        Ok(Obs::build(Some(f)))
+    }
+
+    fn build(writer: Option<std::fs::File>) -> Arc<Obs> {
+        Arc::new(Obs {
+            epoch: Instant::now(),
+            inner: Mutex::new(ObsInner {
+                ring: TraceRing::new(DEFAULT_RING_CAP),
+                hists: LatencyHists::default(),
+                writer,
+                recorded: 0,
+                write_error: false,
+            }),
+        })
+    }
+
+    /// Microseconds since this handle's epoch (the run start).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ObsInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Record one event (ring + optional JSONL sink).  Never panics and
+    /// never blocks on I/O errors: a failed write disables the sink.
+    pub fn event(&self, kind: TraceKind, slot: i64, seq: u64, val: u64) {
+        let ev = TraceEvent { t_us: self.now_us(), kind, slot, seq, val };
+        let mut g = self.lock();
+        g.ring.push(ev);
+        g.recorded += 1;
+        if let Some(w) = g.writer.as_mut() {
+            let mut line = ev.to_jsonl();
+            line.push('\n');
+            if w.write_all(line.as_bytes()).is_err() {
+                g.writer = None;
+                g.write_error = true;
+            }
+        }
+    }
+
+    // Composite helpers: one call records the event *and* feeds the
+    // matching histogram, so call sites cannot drift apart.
+
+    pub fn slice_dispatch(&self, slot: i64, seq: u64, occupancy: u64) {
+        self.event(TraceKind::SliceDispatch, slot, seq, occupancy);
+    }
+
+    pub fn slice_result_local(&self, slot: i64, seq: u64, us: u64) {
+        self.lock().hists.slice_local.record(us);
+        self.event(TraceKind::SliceResult, slot, seq, us);
+    }
+
+    pub fn slice_result_remote(&self, rank: u64, seq: u64, us: u64) {
+        self.lock().hists.slice_rtt.record(us);
+        self.event(TraceKind::SliceResult, rank as i64, seq, us);
+    }
+
+    pub fn donation_request(&self, slot: i64) {
+        self.event(TraceKind::DonationRequest, slot, 0, 0);
+    }
+
+    pub fn donation_grant(&self, slot: i64, us: u64) {
+        self.lock().hists.donation_rtt.record(us);
+        self.event(TraceKind::DonationGrant, slot, 0, us);
+    }
+
+    pub fn journal_append(&self, job: u64, us: u64) {
+        self.lock().hists.journal_append.record(us);
+        self.event(TraceKind::JournalAppend, 0, job, us);
+    }
+
+    pub fn journal_fsync(&self, job: u64, us: u64) {
+        self.lock().hists.journal_fsync.record(us);
+        self.event(TraceKind::JournalFsync, 0, job, us);
+    }
+
+    pub fn rank_event(&self, kind: TraceKind, rank: u64) {
+        self.event(kind, rank as i64, 0, 0);
+    }
+
+    pub fn queue_push(&self, slot: i64, len: u64) {
+        self.event(TraceKind::QueuePush, slot, 0, len);
+    }
+
+    pub fn queue_pop(&self, slot: i64, seq: u64, len: u64) {
+        self.event(TraceKind::QueuePop, slot, seq, len);
+    }
+
+    /// Snapshot of the latency histograms (cheap: fixed-size copies).
+    pub fn hists(&self) -> LatencyHists {
+        self.lock().hists.clone()
+    }
+
+    /// STATS_R summary pair: (slice RTT, journal fsync).
+    pub fn stats_summaries(&self) -> (HistSummary, HistSummary) {
+        let g = self.lock();
+        (g.hists.slice_rtt.summary(), g.hists.journal_fsync.summary())
+    }
+
+    /// Oldest-first snapshot of the event window.
+    pub fn snapshot_events(&self) -> Vec<TraceEvent> {
+        self.lock().ring.to_vec()
+    }
+
+    /// Total events recorded since the epoch (not bounded by the ring).
+    pub fn events_recorded(&self) -> u64 {
+        self.lock().recorded
+    }
+
+    /// Whether the JSONL sink died on an I/O error.
+    pub fn sink_failed(&self) -> bool {
+        self.lock().write_error
+    }
+
+    /// Flush the JSONL sink (no-op without one).
+    pub fn flush(&self) -> std::io::Result<()> {
+        match self.lock().writer.as_mut() {
+            Some(w) => w.flush(),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u64, kind: TraceKind) -> TraceEvent {
+        TraceEvent { t_us: t, kind, slot: -1, seq: t, val: t * 2 }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_first() {
+        let mut r = TraceRing::new(3);
+        for t in 0..5 {
+            r.push(ev(t, TraceKind::QueuePush));
+        }
+        assert_eq!(r.len(), 3);
+        let got: Vec<u64> = r.to_vec().iter().map(|e| e.t_us).collect();
+        assert_eq!(got, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn jsonl_roundtrip_all_kinds() {
+        for (i, k) in TraceKind::ALL.iter().enumerate() {
+            let e = TraceEvent {
+                t_us: 1000 + i as u64,
+                kind: *k,
+                slot: if i % 2 == 0 { i as i64 } else { -(i as i64) - 1 },
+                seq: i as u64,
+                val: 7 * i as u64,
+            };
+            let back = TraceEvent::parse_line(&e.to_jsonl()).expect("roundtrip");
+            assert_eq!(back, e);
+        }
+    }
+
+    #[test]
+    fn jsonl_parse_is_strict() {
+        let good = TraceEvent { t_us: 1, kind: TraceKind::SliceResult, slot: 2, seq: 3, val: 4 };
+        let line = good.to_jsonl();
+        // Unknown kind.
+        assert!(TraceEvent::parse_line(&line.replace("slice_result", "nonsense")).is_err());
+        // Missing key.
+        assert!(TraceEvent::parse_line(&line.replace("\"seq\":3,", "")).is_err());
+        // Extra key.
+        assert!(TraceEvent::parse_line(&line.replace("\"val\":4", "\"val\":4,\"x\":1")).is_err());
+        // Wrong type.
+        assert!(TraceEvent::parse_line(&line.replace("\"val\":4", "\"val\":\"4\"")).is_err());
+        // Fractional slot.
+        assert!(TraceEvent::parse_line(&line.replace("\"slot\":2", "\"slot\":2.5")).is_err());
+        // Trailing garbage.
+        assert!(TraceEvent::parse_line(&format!("{line} x")).is_err());
+    }
+
+    #[test]
+    fn obs_records_events_and_hists() {
+        let obs = Obs::new();
+        obs.slice_dispatch(local_slot(0), 1, 0);
+        obs.slice_result_local(local_slot(0), 1, 250);
+        obs.slice_result_remote(3, 2, 900);
+        obs.donation_request(local_slot(1));
+        obs.donation_grant(local_slot(1), 1500);
+        obs.journal_fsync(7, 80);
+        let evs = obs.snapshot_events();
+        assert_eq!(evs.len(), 6);
+        assert_eq!(obs.events_recorded(), 6);
+        // Timestamps are monotone on one timeline.
+        assert!(evs.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+        let h = obs.hists();
+        assert_eq!(h.slice_local.count(), 1);
+        assert_eq!(h.slice_rtt.count(), 1);
+        assert_eq!(h.donation_rtt.count(), 1);
+        assert_eq!(h.journal_fsync.count(), 1);
+        let (rtt, fsync) = obs.stats_summaries();
+        assert_eq!(rtt.count, 1);
+        assert!(rtt.p50 > 0 && rtt.p50 <= 900);
+        assert_eq!(fsync.count, 1);
+    }
+
+    #[test]
+    fn slot_labels() {
+        assert_eq!(slot_label(0), "daemon");
+        assert_eq!(slot_label(4), "rank 4");
+        assert_eq!(slot_label(local_slot(2)), "local 2");
+        assert_eq!(local_slot(0), -1);
+    }
+}

@@ -8,12 +8,13 @@
 //! `docs/WIRE_PROTOCOL.md` for what actually crosses the network and
 //! `README.md` for the two-process localhost walkthrough.
 
-use super::drive_worker;
+use super::drive_worker_traced;
 use crate::comm::tcp::{ClusterListener, TcpConfig, TcpTransport};
 use crate::comm::Transport;
 use crate::coordinator::{Worker, WorkerConfig, WorkerStats};
 use crate::engine::{Problem, SearchState};
 use crate::exec::PoolStats;
+use crate::metrics::trace::Obs;
 use crate::util::Stopwatch;
 use crate::{Cost, COST_INF};
 use std::time::Duration;
@@ -101,10 +102,26 @@ pub fn listen<P: Problem>(
     timeout: Option<Duration>,
     on_bound: impl FnOnce(&str),
 ) -> std::io::Result<ClusterReport<<P::State as SearchState>::Sol>> {
+    listen_traced(problem, bind, c, tcp, worker, timeout, on_bound, None)
+}
+
+/// [`listen`] with an observability sink for this rank's donation
+/// round-trips (`pbt cluster run --trace-out`).
+#[allow(clippy::too_many_arguments)]
+pub fn listen_traced<P: Problem>(
+    problem: &P,
+    bind: &str,
+    c: usize,
+    tcp: TcpConfig,
+    worker: WorkerConfig,
+    timeout: Option<Duration>,
+    on_bound: impl FnOnce(&str),
+    obs: Option<&Obs>,
+) -> std::io::Result<ClusterReport<<P::State as SearchState>::Sol>> {
     let listener = ClusterListener::bind(bind, c, tcp)?;
     on_bound(&listener.local_addr()?.to_string());
     let transport = listener.accept_all()?;
-    Ok(run(problem, &transport, worker, timeout))
+    Ok(run_traced(problem, &transport, worker, timeout, obs))
 }
 
 /// Join the cluster at `rendezvous_addr` and run this process's worker to
@@ -122,6 +139,21 @@ pub fn join<P: Problem>(
     Ok(run(problem, &transport, worker, timeout))
 }
 
+/// [`join`] with an observability sink for this rank's donation
+/// round-trips.
+pub fn join_traced<P: Problem>(
+    problem: &P,
+    rendezvous_addr: &str,
+    advertise_host: Option<&str>,
+    tcp: TcpConfig,
+    worker: WorkerConfig,
+    timeout: Option<Duration>,
+    obs: Option<&Obs>,
+) -> std::io::Result<ClusterReport<<P::State as SearchState>::Sol>> {
+    let transport = TcpTransport::join_advertised(rendezvous_addr, advertise_host, tcp)?;
+    Ok(run_traced(problem, &transport, worker, timeout, obs))
+}
+
 /// Drive one worker over an already-built mesh.  Public so integration
 /// tests (and embedders with their own bring-up) can run the protocol over
 /// any [`TcpTransport`].
@@ -131,12 +163,24 @@ pub fn run<P: Problem>(
     wcfg: WorkerConfig,
     timeout: Option<Duration>,
 ) -> ClusterReport<<P::State as SearchState>::Sol> {
+    run_traced(problem, transport, wcfg, timeout, None)
+}
+
+/// [`run`] with an observability sink for this rank's donation
+/// round-trips.
+pub fn run_traced<P: Problem>(
+    problem: &P,
+    transport: &TcpTransport,
+    wcfg: WorkerConfig,
+    timeout: Option<Duration>,
+    obs: Option<&Obs>,
+) -> ClusterReport<<P::State as SearchState>::Sol> {
     let rank = transport.rank();
     let c = transport.num_ranks();
     let sw = Stopwatch::new();
     let deadline = timeout.map(|t| std::time::Instant::now() + t);
     let mut worker = Worker::new(problem, rank, c, wcfg);
-    let timed_out = drive_worker(&mut worker, transport, deadline);
+    let timed_out = drive_worker_traced(&mut worker, transport, deadline, obs);
     ClusterReport {
         rank,
         c,

@@ -21,6 +21,7 @@ use crate::comm::{CommStats, Dest, Transport};
 use crate::coordinator::{Phase, Worker, WorkerConfig, WorkerStats};
 use crate::engine::{serial, Problem, SearchState, SearchStats};
 use crate::exec::PoolStats;
+use crate::metrics::trace::{local_slot, Obs};
 use crate::util::Stopwatch;
 use crate::{Cost, COST_INF};
 use std::time::Duration;
@@ -117,6 +118,18 @@ pub fn solve<P: Problem>(
     problem: &P,
     cfg: &RunConfig,
 ) -> RunReport<<P::State as SearchState>::Sol> {
+    solve_traced(problem, cfg, None)
+}
+
+/// [`solve`] with an observability sink: each worker thread records its
+/// donation round-trips (work request → work arrival) as trace events and
+/// into the shared donation-RTT histogram (`--trace-out`, bench latency
+/// columns).
+pub fn solve_traced<P: Problem>(
+    problem: &P,
+    cfg: &RunConfig,
+    obs: Option<&Obs>,
+) -> RunReport<<P::State as SearchState>::Sol> {
     assert!(cfg.workers >= 1);
     if cfg.workers == 1 {
         let r = serial::solve_serial(problem, u64::MAX);
@@ -143,7 +156,7 @@ pub fn solve<P: Problem>(
                     scope.spawn(move || {
                         let rank = transport.rank();
                         let mut worker = Worker::new(problem, rank, c, wcfg);
-                        let timed_out = drive_worker(&mut worker, &transport, deadline);
+                        let timed_out = drive_worker_traced(&mut worker, &transport, deadline, obs);
                         (worker.stats, worker.best, worker.best_solution.take(), timed_out)
                     })
                 })
@@ -184,6 +197,23 @@ pub fn drive_worker<P: Problem, T: Transport>(
     transport: &T,
     deadline: Option<std::time::Instant>,
 ) -> bool {
+    drive_worker_traced(worker, transport, deadline, None)
+}
+
+/// [`drive_worker`] with an observability sink: the Working→Waiting phase
+/// transition is a donation request leaving this rank, Waiting→Working is
+/// the matching work arrival, so their gap is the paper's donation
+/// round-trip — recorded per transition without touching the Worker state
+/// machine itself.
+pub fn drive_worker_traced<P: Problem, T: Transport>(
+    worker: &mut Worker<'_, P>,
+    transport: &T,
+    deadline: Option<std::time::Instant>,
+    obs: Option<&Obs>,
+) -> bool {
+    let tslot = local_slot(transport.rank());
+    let mut last_phase = worker.phase();
+    let mut waiting_since: Option<std::time::Instant> = None;
     let mut timed_out = false;
     flush(worker, transport);
     loop {
@@ -192,6 +222,26 @@ pub fn drive_worker<P: Problem, T: Transport>(
             worker.handle(msg);
         }
         flush(worker, transport);
+        if let Some(o) = obs {
+            let phase = worker.phase();
+            match (last_phase, phase) {
+                (Phase::Working, Phase::Waiting) => {
+                    waiting_since = Some(std::time::Instant::now());
+                    o.donation_request(tslot);
+                }
+                (Phase::Waiting, Phase::Working) => {
+                    if let Some(t0) = waiting_since.take() {
+                        o.donation_grant(tslot, t0.elapsed().as_micros() as u64);
+                    }
+                }
+                (Phase::Waiting, Phase::Inactive | Phase::Dead) => {
+                    // Starved out rather than fed: no grant to time.
+                    waiting_since = None;
+                }
+                _ => {}
+            }
+            last_phase = phase;
+        }
         match worker.phase() {
             Phase::Working => {
                 let batch = worker.poll_interval();

@@ -40,6 +40,7 @@ use crate::comm::tcp;
 use crate::config::ServerConfig;
 use crate::exec::{ExecControl, ExecProfile, RemoteJob, RemotePool, StopKind};
 use crate::instances;
+use crate::metrics::trace::{Obs, TraceKind};
 use crate::metrics::ServerMetrics;
 use crate::problems::{BoundKind, DominatingSet, VertexCover};
 use crate::{Cost, COST_INF};
@@ -81,6 +82,9 @@ pub struct ServeOptions {
     pub checkpoint_ms: u64,
     /// `SLICE` frames in flight per remote pool rank (credit window).
     pub remote_window: usize,
+    /// JSONL trace sink for the daemon-lifetime event stream
+    /// (`--trace-out`); `None` keeps events in the in-memory ring only.
+    pub trace_out: Option<PathBuf>,
 }
 
 impl From<&ServerConfig> for ServeOptions {
@@ -93,6 +97,7 @@ impl From<&ServerConfig> for ServeOptions {
             slice_nodes: c.slice_nodes.max(1),
             checkpoint_ms: c.checkpoint_ms.max(1),
             remote_window: c.remote_window.max(1),
+            trace_out: None,
         }
     }
 }
@@ -187,6 +192,10 @@ struct ServerState {
     /// Parked pool-rank connections (cluster joiners adopted on the
     /// client port); running jobs lease them as remote slots.
     pool: Arc<RemotePool>,
+    /// Daemon-lifetime observability: every job's scheduler and the pool
+    /// lifecycle feed one shared ring + histogram set, so `server-stats`
+    /// latency summaries cover the whole uptime.
+    obs: Arc<Obs>,
 }
 
 /// Run the daemon until a `Shutdown` request arrives.  `on_bound` receives
@@ -196,6 +205,11 @@ pub fn serve(opts: ServeOptions, on_bound: impl FnOnce(&str)) -> Result<()> {
     std::fs::create_dir_all(&opts.journal_dir)
         .with_context(|| format!("creating journal dir {}", opts.journal_dir.display()))?;
 
+    let obs = match &opts.trace_out {
+        Some(p) => Obs::to_file(&p.display().to_string())
+            .with_context(|| format!("creating trace file {}", p.display()))?,
+        None => Obs::new(),
+    };
     let state = Arc::new(ServerState {
         jobs: Mutex::new(BTreeMap::new()),
         next_id: AtomicU64::new(1),
@@ -204,6 +218,7 @@ pub fn serve(opts: ServeOptions, on_bound: impl FnOnce(&str)) -> Result<()> {
         shutdown: AtomicBool::new(false),
         started: Instant::now(),
         pool: RemotePool::new(),
+        obs,
         opts,
     });
     adopt_journals(&state)?;
@@ -246,6 +261,7 @@ pub fn serve(opts: ServeOptions, on_bound: impl FnOnce(&str)) -> Result<()> {
     while state.active.load(Ordering::SeqCst) > 0 {
         std::thread::sleep(Duration::from_millis(10));
     }
+    let _ = state.obs.flush();
     eprintln!("pbt serve: shut down cleanly (journals in {})", state.opts.journal_dir.display());
     Ok(())
 }
@@ -429,7 +445,8 @@ fn run_job(
         .with_slice_nodes(if spec.slice == 0 { state.opts.slice_nodes } else { spec.slice })
         .with_pace_ms(spec.pace_ms as u64)
         .with_checkpoint_ms(state.opts.checkpoint_ms)
-        .with_remote_window(state.opts.remote_window);
+        .with_remote_window(state.opts.remote_window)
+        .with_obs(Some(Arc::clone(&state.obs)));
     let rjob = RemoteJob {
         job: id,
         problem: spec.problem.clone(),
@@ -448,8 +465,10 @@ fn run_job(
 
     let outcome = {
         let on_checkpoint = |rec: &FrontierRecord| {
+            let t0 = Instant::now();
             match jrn.append_frontier(rec) {
                 Ok(bytes) => {
+                    state.obs.journal_append(id, t0.elapsed().as_micros() as u64);
                     progress.checkpoints.fetch_add(1, Ordering::SeqCst);
                     let mut m = state.metrics.lock().expect("metrics lock");
                     m.checkpoints_written += 1;
@@ -491,8 +510,10 @@ fn run_job(
             nodes_total: outcome.nodes_total,
             wall_secs: outcome.wall_secs,
         };
-        if let Err(e) = jrn.append_done(&done) {
-            eprintln!("pbt serve: job {id}: DONE record failed: {e:#}");
+        let t0 = Instant::now();
+        match jrn.append_done(&done) {
+            Ok(()) => state.obs.journal_fsync(id, t0.elapsed().as_micros() as u64),
+            Err(e) => eprintln!("pbt serve: job {id}: DONE record failed: {e:#}"),
         }
         entry.state = JobState::Done;
         entry.outcome = Some(JobOutcome {
@@ -513,8 +534,10 @@ fn run_job(
             outcome.nodes_total
         );
     } else if outcome.stopped == StopKind::Cancel {
-        if let Err(e) = jrn.append_cancelled() {
-            eprintln!("pbt serve: job {id}: CANCELLED record failed: {e:#}");
+        let t0 = Instant::now();
+        match jrn.append_cancelled() {
+            Ok(()) => state.obs.journal_fsync(id, t0.elapsed().as_micros() as u64),
+            Err(e) => eprintln!("pbt serve: job {id}: CANCELLED record failed: {e:#}"),
         }
         entry.state = JobState::Cancelled;
         entry.outcome = Some(JobOutcome {
@@ -657,9 +680,11 @@ fn handle_connection(state: &Arc<ServerState>, mut stream: TcpStream) -> Result<
             // session: a join like any other, plus the `reconnects` heal
             // counter.
             eprintln!("pbt serve: pool rank {rank} reconnected");
+            state.obs.rank_event(TraceKind::RankReconnect, rank as u64);
             state.pool.park_rejoined(tcp::PoolConn { stream, rank });
         } else {
             eprintln!("pbt serve: pool rank {rank} joined");
+            state.obs.rank_event(TraceKind::RankJoin, rank as u64);
             state.pool.park_joined(tcp::PoolConn { stream, rank });
         }
         return Ok(());
@@ -818,6 +843,7 @@ fn handle_stats(state: &Arc<ServerState>) -> Response {
     let queued = jobs.values().filter(|e| e.state == JobState::Queued).count() as u32;
     let active = jobs.values().filter(|e| e.state == JobState::Running).count() as u32;
     drop(jobs);
+    let (slice_rtt, journal_fsync) = state.obs.stats_summaries();
     Response::Stats(ServerStats {
         version: VERSION.into(),
         git_rev: git_rev(),
@@ -827,5 +853,7 @@ fn handle_stats(state: &Arc<ServerState>) -> Response {
         queued,
         metrics: *state.metrics.lock().expect("metrics lock"),
         pool: state.pool.cumulative(),
+        slice_rtt,
+        journal_fsync,
     })
 }

@@ -20,6 +20,7 @@
 
 use crate::comm::wire;
 use crate::exec::PoolStats;
+use crate::metrics::hist::HistSummary;
 use crate::metrics::ServerMetrics;
 use std::io::{Read, Write};
 
@@ -31,8 +32,10 @@ pub const MAGIC: &[u8; 4] = b"PBTS";
 /// warning, layout skew is not survivable).  v2: `Stats` responses carry
 /// the pool-slot counters ([`PoolStats`]) after the metrics block.  v3:
 /// the pool block grows a ninth counter, `reconnects` (supervised pool
-/// ranks that healed a lost connection).
-pub const PROTO_VERSION: u32 = 3;
+/// ranks that healed a lost connection).  v4: two latency-summary blocks
+/// ([`HistSummary`]: count/p50/p90/p99/mean/max, six `u64`s each) follow
+/// the pool block — remote slice round-trips, then journal fsyncs.
+pub const PROTO_VERSION: u32 = 4;
 
 /// Ceiling for one protocol frame (a result payload is one `u32` per
 /// solution vertex — far below this; anything larger is not a pbt peer).
@@ -310,6 +313,10 @@ pub struct ServerStats {
     /// Daemon-lifetime pool accounting (local threads + remote ranks,
     /// counted identically — the same shape `pbt cluster run` reports).
     pub pool: PoolStats,
+    /// Remote slice round-trip latency summary (dispatch → result, µs).
+    pub slice_rtt: HistSummary,
+    /// Journal fsync latency summary (terminal-record appends, µs).
+    pub journal_fsync: HistSummary,
 }
 
 /// Handshake opener (client → daemon).
@@ -417,6 +424,24 @@ fn push_cost(out: &mut Vec<u8>, c: Option<u64>) {
 fn take_cost(b: &[u8], pos: &mut usize) -> Result<Option<u64>, ProtoError> {
     let v = take_u64(b, pos)?;
     Ok((v != u64::MAX).then_some(v))
+}
+
+/// A latency summary travels as six bare `u64`s in declaration order.
+fn push_hist_summary(out: &mut Vec<u8>, h: &HistSummary) {
+    for v in [h.count, h.p50, h.p90, h.p99, h.mean, h.max] {
+        push_u64(out, v);
+    }
+}
+
+fn take_hist_summary(b: &[u8], pos: &mut usize) -> Result<HistSummary, ProtoError> {
+    Ok(HistSummary {
+        count: take_u64(b, pos)?,
+        p50: take_u64(b, pos)?,
+        p90: take_u64(b, pos)?,
+        p99: take_u64(b, pos)?,
+        mean: take_u64(b, pos)?,
+        max: take_u64(b, pos)?,
+    })
 }
 
 impl Request {
@@ -536,6 +561,8 @@ impl Response {
                 ] {
                     push_u64(&mut out, v);
                 }
+                push_hist_summary(&mut out, &s.slice_rtt);
+                push_hist_summary(&mut out, &s.journal_fsync);
             }
             Response::Err(msg) => {
                 out.push(TAG_ERR);
@@ -596,6 +623,8 @@ impl Response {
                 for v in &mut pvals {
                     *v = take_u64(b, &mut pos)?;
                 }
+                let slice_rtt = take_hist_summary(b, &mut pos)?;
+                let journal_fsync = take_hist_summary(b, &mut pos)?;
                 Response::Stats(ServerStats {
                     version,
                     git_rev,
@@ -624,6 +653,8 @@ impl Response {
                         slices_completed: pvals[7],
                         slices_remote: pvals[8],
                     },
+                    slice_rtt,
+                    journal_fsync,
                 })
             }
             TAG_ERR => Response::Err(take_str(b, &mut pos)?),
@@ -649,6 +680,52 @@ pub fn read_msg<R: Read>(r: &mut R) -> std::io::Result<Vec<u8>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn sample_stats() -> ServerStats {
+        ServerStats {
+            version: "0.2.0".into(),
+            git_rev: "unknown".into(),
+            proto_version: PROTO_VERSION,
+            uptime_secs: 12.5,
+            active: 2,
+            queued: 3,
+            metrics: ServerMetrics {
+                jobs_submitted: 5,
+                jobs_completed: 2,
+                checkpoints_written: 40,
+                checkpoint_bytes: 4096,
+                nodes_explored: 123456,
+                ..Default::default()
+            },
+            pool: PoolStats {
+                local_slots: 4,
+                remote_slots: 1,
+                joined: 5,
+                left: 1,
+                lost: 0,
+                reconnects: 2,
+                slices_dispatched: 64,
+                slices_completed: 63,
+                slices_remote: 20,
+            },
+            slice_rtt: HistSummary {
+                count: 20,
+                p50: 850,
+                p90: 2100,
+                p99: 9000,
+                mean: 1100,
+                max: 12000,
+            },
+            journal_fsync: HistSummary {
+                count: 3,
+                p50: 400,
+                p90: 700,
+                p99: 700,
+                mean: 450,
+                max: 812,
+            },
+        }
+    }
 
     fn sample_status() -> JobStatus {
         JobStatus {
@@ -731,33 +808,7 @@ mod tests {
                 resumed: false,
             }),
             Response::Ok,
-            Response::Stats(ServerStats {
-                version: "0.2.0".into(),
-                git_rev: "unknown".into(),
-                proto_version: PROTO_VERSION,
-                uptime_secs: 12.5,
-                active: 2,
-                queued: 3,
-                metrics: ServerMetrics {
-                    jobs_submitted: 5,
-                    jobs_completed: 2,
-                    checkpoints_written: 40,
-                    checkpoint_bytes: 4096,
-                    nodes_explored: 123456,
-                    ..Default::default()
-                },
-                pool: PoolStats {
-                    local_slots: 4,
-                    remote_slots: 1,
-                    joined: 5,
-                    left: 1,
-                    lost: 0,
-                    reconnects: 2,
-                    slices_dispatched: 64,
-                    slices_completed: 63,
-                    slices_remote: 20,
-                },
-            }),
+            Response::Stats(sample_stats()),
             Response::Err("no such job".into()),
         ] {
             assert_eq!(Response::decode(&rsp.encode()), Ok(rsp.clone()), "{rsp:?}");
@@ -798,6 +849,9 @@ mod tests {
         let msgs = [
             Request::Submit(JobSpec::default()).encode(),
             Response::Status(sample_status()).encode(),
+            // Exercises the v4 tail: cutting anywhere inside the two
+            // latency-summary blocks must read as truncation.
+            Response::Stats(sample_stats()).encode(),
         ];
         for bytes in msgs {
             for cut in 0..bytes.len() {

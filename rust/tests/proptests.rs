@@ -21,6 +21,8 @@ use pbt::engine::{NodeEval, Problem, SearchState, StepResult, Stepper};
 use pbt::graph::{Graph, HybridGraph};
 use pbt::index::{binary, CurrentIndex, NodeIndex};
 use pbt::instances::{generators, scenario_matrix_tiny};
+use pbt::metrics::hist::{bucket_lo, bucket_of, percentile_of_sorted, Hist};
+use pbt::metrics::trace::{TraceEvent, TraceKind, TraceRing};
 use pbt::problems::vertex_cover::{brute_force_vc, VertexCover};
 use pbt::problems::{is_clique, max_clique_bb, max_clique_via_vc, DominatingSet, MaxClique};
 use pbt::runner::{self, RunConfig};
@@ -710,6 +712,153 @@ fn prop_solvers_agree_with_oracle_on_random_graphs() {
         cross_validate_small(&graph, &format!("gnm n={n} m={m} seed={seed}"))
     });
 }
+
+/// ISSUE 9: the latency histogram against a sorted-vec oracle.  For random
+/// sample streams spanning every bucket band (zero, mid-range, overflow),
+/// every percentile the histogram reports must be the lower bound of the
+/// exact bucket holding the true nearest-rank sample (so it never leaves
+/// the bucket, and never exceeds the true value), and merging randomly
+/// partitioned shards must be byte-identical to one histogram that saw the
+/// whole stream.
+#[test]
+fn prop_hist_percentiles_match_sorted_oracle_and_merge_is_exact() {
+    Runner::new(150, 0xB0C5).run(|g| {
+        let n = g.usize_in(1, 400);
+        let mut whole = Hist::new();
+        let mut samples: Vec<u64> = Vec::with_capacity(n);
+        // Random shard partition: merge(shards) must equal `whole`.
+        let nshards = g.usize_in(1, 5);
+        let mut shards = vec![Hist::new(); nshards];
+        for _ in 0..n {
+            let v = match g.usize_in(0, 10) {
+                0 => 0,                             // the zero bucket
+                1 => g.seed() | (1 << 63),          // the overflow bucket
+                _ => g.seed() >> g.usize_in(0, 64), // every log2 band
+            };
+            whole.record(v);
+            shards[g.usize_in(0, nshards)].record(v);
+            samples.push(v);
+        }
+        samples.sort_unstable();
+        prop_assert!(whole.count() == n as u64, "count {} != {n}", whole.count());
+        prop_assert!(
+            whole.max() == *samples.last().unwrap(),
+            "max {} != true max {}",
+            whole.max(),
+            samples.last().unwrap()
+        );
+        for q in [0.01, 0.5, 0.9, 0.99, 1.0, g.f64_unit()] {
+            let truth = percentile_of_sorted(&samples, q);
+            let est = whole.percentile(q);
+            prop_assert!(
+                est == bucket_lo(bucket_of(truth)),
+                "q={q}: estimate {est} not the lower bound of the oracle's \
+                 bucket (true value {truth}, bucket {})",
+                bucket_of(truth)
+            );
+            prop_assert!(est <= truth, "q={q}: estimate {est} above true {truth}");
+        }
+        let mut merged = Hist::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        prop_assert!(merged == whole, "merge of {nshards} shards diverged from the whole");
+        Ok(())
+    });
+}
+
+/// ISSUE 9: the bounded trace ring is a strict sliding window — it never
+/// exceeds its capacity and always holds exactly the newest events in
+/// arrival order.
+#[test]
+fn prop_trace_ring_keeps_newest_events_in_order() {
+    Runner::new(200, 0x51C6).run(|g| {
+        let cap = g.usize_in(1, 60);
+        let n = g.usize_in(0, 200);
+        let mut ring = TraceRing::new(cap);
+        prop_assert!(ring.is_empty() && ring.capacity() == cap, "fresh ring state");
+        for i in 0..n {
+            ring.push(TraceEvent {
+                t_us: i as u64,
+                kind: TraceKind::ALL[g.usize_in(0, TraceKind::ALL.len())],
+                slot: 0,
+                seq: i as u64,
+                val: 0,
+            });
+            prop_assert!(ring.len() <= cap, "ring grew past its capacity");
+        }
+        let snap = ring.to_vec();
+        prop_assert!(snap.len() == n.min(cap), "kept {} of {n} (cap {cap})", snap.len());
+        let first_kept = n - snap.len();
+        for (j, ev) in snap.iter().enumerate() {
+            prop_assert!(
+                ev.seq == (first_kept + j) as u64,
+                "slot {j} holds seq {} — eviction broke FIFO order",
+                ev.seq
+            );
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE 9: the JSONL trace schema is strict both ways.  Every event
+/// round-trips exactly through `to_jsonl`/`parse_line`, and a line with a
+/// missing key, an extra key, an unknown kind, a fractional slot or a
+/// mistyped timestamp is rejected — a trace file either parses exactly or
+/// fails loudly.
+#[test]
+fn prop_trace_jsonl_roundtrip_is_strict() {
+    Runner::new(300, 0x7AC3).run(|g| {
+        let kind = TraceKind::ALL[g.usize_in(0, TraceKind::ALL.len())];
+        prop_assert!(
+            TraceKind::parse(kind.as_str()) == Some(kind),
+            "kind name {:?} does not parse back",
+            kind.as_str()
+        );
+        let slot = match g.usize_in(0, 3) {
+            0 => 0i64,
+            1 => g.u32_in(1, 10_000) as i64,
+            _ => -(g.u32_in(1, 64) as i64),
+        };
+        let ev = TraceEvent {
+            t_us: g.seed() >> g.usize_in(11, 64),
+            kind,
+            slot,
+            seq: g.seed() >> g.usize_in(32, 64),
+            val: g.seed() >> g.usize_in(16, 64),
+        };
+        let line = ev.to_jsonl();
+        let back = match TraceEvent::parse_line(&line) {
+            Ok(b) => b,
+            Err(e) => return Err(format!("roundtrip parse failed for {line}: {e}")),
+        };
+        prop_assert!(back == ev, "roundtrip changed the event: {back:?} != {ev:?}");
+
+        // A 6th key is rejected (exactly the 5 schema keys).
+        let extra = format!("{},\"extra\":1}}", &line[..line.len() - 1]);
+        prop_assert!(TraceEvent::parse_line(&extra).is_err(), "extra key accepted: {extra}");
+        // A missing key is rejected.
+        let missing = format!(
+            "{{\"t_us\":{},\"kind\":\"{}\",\"slot\":{},\"seq\":{}}}",
+            ev.t_us,
+            ev.kind.as_str(),
+            ev.slot,
+            ev.seq
+        );
+        prop_assert!(TraceEvent::parse_line(&missing).is_err(), "missing key accepted");
+        // An unknown kind is rejected.
+        let bogus = line.replace(ev.kind.as_str(), "made_up_kind");
+        prop_assert!(TraceEvent::parse_line(&bogus).is_err(), "unknown kind accepted");
+        // A fractional slot is rejected.
+        let frac = line.replace(&format!("\"slot\":{}", ev.slot), "\"slot\":0.5");
+        prop_assert!(TraceEvent::parse_line(&frac).is_err(), "fractional slot accepted");
+        // A mistyped timestamp is rejected.
+        let typed = line.replace(&format!("\"t_us\":{}", ev.t_us), "\"t_us\":\"soon\"");
+        prop_assert!(TraceEvent::parse_line(&typed).is_err(), "string t_us accepted");
+        Ok(())
+    });
+}
+
 /// restarts via the journal, so the restore side must treat bytes as
 /// hostile.  Arbitrarily truncated or bit-flipped checkpoints must never
 /// panic: `CurrentIndex::from_checkpoint` rejects framing damage with a

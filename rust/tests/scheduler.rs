@@ -57,6 +57,7 @@ fn spawn_daemon(journal: PathBuf, slice_nodes: u32) -> (String, std::thread::Joi
             slice_nodes,
             checkpoint_ms: 10,
             remote_window: 2,
+            trace_out: None,
         };
         serve(opts, move |addr| tx.send(addr.to_string()).unwrap()).expect("daemon runs");
     });

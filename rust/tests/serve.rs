@@ -37,6 +37,7 @@ fn spawn_daemon(journal: PathBuf, max_active: usize) -> (String, std::thread::Jo
             slice_nodes: 2000,
             checkpoint_ms: 25,
             remote_window: 2,
+            trace_out: None,
         };
         serve(opts, move |addr| tx.send(addr.to_string()).unwrap()).expect("daemon runs");
     });
