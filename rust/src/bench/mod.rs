@@ -47,7 +47,10 @@ use json::Json;
 /// v2: MAX-CLIQUE cases + optional per-case `shape` (tree-shape summary).
 /// v3: threads cases carry optional donation round-trip percentiles
 /// (`donation_p50_us`/`p90`/`p99`, informational — never gated).
-pub const SUITE_VERSION: u32 = 3;
+/// v4: sim cases carry the final progress-estimate relative error
+/// (`progress_rel_err` = |estimated − exact| / exact total nodes,
+/// informational — never gated; tracks estimator quality across PRs).
+pub const SUITE_VERSION: u32 = 4;
 
 /// Default regression tolerance: fail when a case loses more than this
 /// fraction of its (calibrated) throughput, or gains it in makespan.
@@ -100,6 +103,11 @@ pub struct CaseResult {
     pub donation_p50_us: Option<u64>,
     pub donation_p90_us: Option<u64>,
     pub donation_p99_us: Option<u64>,
+    /// Final progress-estimate relative error, |estimated − exact| / exact
+    /// total nodes (sim cases only; null elsewhere).  Informational: the
+    /// gate never compares it — it exists so estimator quality is visible
+    /// across PRs.
+    pub progress_rel_err: Option<f64>,
 }
 
 /// A full suite run, ready to serialize as `BENCH_<label>.json`.
@@ -230,6 +238,7 @@ fn hotpath_case(
         donation_p50_us: None,
         donation_p90_us: None,
         donation_p99_us: None,
+        progress_rel_err: None,
     }
 }
 
@@ -278,6 +287,7 @@ fn calibration_case(min_millis: u64, min_iters: usize) -> CaseResult {
         donation_p50_us: None,
         donation_p90_us: None,
         donation_p99_us: None,
+        progress_rel_err: None,
     }
 }
 
@@ -339,6 +349,7 @@ pub fn run_suite(opts: &BenchOptions) -> BenchReport {
             donation_p50_us: dsum.map(|s| s.p50),
             donation_p90_us: dsum.map(|s| s.p90),
             donation_p99_us: dsum.map(|s| s.p99),
+            progress_rel_err: None,
         });
     }
 
@@ -350,6 +361,12 @@ pub fn run_suite(opts: &BenchOptions) -> BenchReport {
         let comm = r.per_worker.iter().fold(crate::comm::CommStats::default(), |mut acc, w| {
             acc.merge(&w.comm);
             acc
+        });
+        // The run is exhausted, so total_nodes() is the exact tree size —
+        // the estimator's final answer against ground truth.
+        let exact = r.total_nodes();
+        let progress_rel_err = (exact > 0).then(|| {
+            (r.progress.estimated_total() as f64 - exact as f64).abs() / exact as f64
         });
         CaseResult {
             name,
@@ -366,6 +383,7 @@ pub fn run_suite(opts: &BenchOptions) -> BenchReport {
             donation_p50_us: None,
             donation_p90_us: None,
             donation_p99_us: None,
+            progress_rel_err,
         }
     };
     let sim_worker = WorkerConfig { collect_shape: true, ..Default::default() };
@@ -451,6 +469,10 @@ impl BenchReport {
                         "donation_p99_us".into(),
                         c.donation_p99_us.map_or(Json::Null, |v| Json::Num(v as f64)),
                     ),
+                    (
+                        "progress_rel_err".into(),
+                        c.progress_rel_err.map_or(Json::Null, Json::Num),
+                    ),
                 ])
             })
             .collect();
@@ -513,6 +535,8 @@ impl BenchReport {
                 donation_p50_us: c.get("donation_p50_us").and_then(Json::as_u64),
                 donation_p90_us: c.get("donation_p90_us").and_then(Json::as_u64),
                 donation_p99_us: c.get("donation_p99_us").and_then(Json::as_u64),
+                // Optional (absent/null in pre-v4 files and non-sim cases).
+                progress_rel_err: c.get("progress_rel_err").and_then(Json::as_f64),
             });
         }
         Ok(BenchReport {
@@ -701,6 +725,7 @@ mod tests {
             donation_p50_us: Some(120),
             donation_p90_us: Some(480),
             donation_p99_us: Some(950),
+            progress_rel_err: None,
         }
     }
 
@@ -726,6 +751,7 @@ mod tests {
             donation_p50_us: None,
             donation_p90_us: None,
             donation_p99_us: None,
+            progress_rel_err: Some(0.125),
         }
     }
 
@@ -752,6 +778,9 @@ mod tests {
         assert_eq!(back.cases[0].donation_p90_us, Some(480));
         assert_eq!(back.cases[0].donation_p99_us, Some(950));
         assert_eq!(back.cases[1].donation_p50_us, None);
+        // v4: progress relative error roundtrips the same way.
+        assert_eq!(back.cases[0].progress_rel_err, None);
+        assert_eq!(back.cases[1].progress_rel_err, Some(0.125));
     }
 
     #[test]
@@ -852,6 +881,12 @@ mod tests {
         let shape = clq.shape.expect("sim cases collect tree shape");
         assert_eq!(shape.total_nodes, clq.nodes);
         assert!(r.cases.iter().filter(|c| c.kind == "sim").all(|c| c.shape.is_some()));
+        // v4: every sim case reports estimator quality (finite, informational).
+        assert!(r
+            .cases
+            .iter()
+            .filter(|c| c.kind == "sim")
+            .all(|c| c.progress_rel_err.is_some_and(|e| e.is_finite() && e >= 0.0)));
         let back = BenchReport::from_json(&json::parse(&r.to_json().render()).unwrap()).unwrap();
         assert_eq!(back.cases.len(), r.cases.len());
         // Self-check: a run can never regress against itself.

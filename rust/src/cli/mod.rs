@@ -119,6 +119,8 @@ COMMANDS:
                   [--workers N]  [--slice NODES]  [--checkpoint-ms T]
                   [--remote-window N]  (SLICEs in flight per pool rank)
                   [--trace-out FILE]  (daemon-lifetime JSONL event trace)
+                  [--metrics-addr HOST:PORT]  (Prometheus /metrics + /healthz,
+                   docs/OBSERVABILITY.md)
                 (prints `SERVING <addr>`; kill -9 + restart with the same
                  --journal resumes every in-flight job from its checkpoint)
     submit      queue a job on a running daemon; prints `JOB <id>`
@@ -127,16 +129,19 @@ COMMANDS:
                   [--slice NODES]  [--pace-ms T]  [--server HOST:PORT]
                 (<spec> = suite name, DIMACS path, or gnm:<n>:<m>:<seed>)
     status      one job's live state      status <id>  [--server HOST:PORT]
+                  [--follow]  (subscribe: stream PROGRESS lines — %, nodes,
+                   ETA, in-flight — until the job reaches a terminal state)
     result      one job's outcome         result <id>  [--wait] [--timeout-ms T]
     cancel      cancel a queued/running job   cancel <id>
     server-stats  daemon version, uptime, queue + lifecycle counters,
-                  slice-RTT / journal-fsync latency summaries
+                  slice-RTT / journal-fsync latency summaries, and a
+                  per-job progress/ETA table
                   [--watch SECS]  (re-poll and redraw in place)
     shutdown-server  graceful stop: jobs checkpoint + journal, then resume
                      on the next `pbt serve` with the same --journal
     trace       analyze a --trace-out JSONL file (docs/OBSERVABILITY.md):
                   per-slot timeline, slice-RTT / donation / journal latency
-                  percentiles      trace <file.jsonl>
+                  percentiles      trace <file.jsonl>  [--json]
     version     print crate version + git revision (also: --version)
     simulate    virtual-time run on simulated cores
                   --problem vc|ds|clique  --instance <name>  --cores N

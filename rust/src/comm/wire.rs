@@ -375,6 +375,14 @@ pub struct SliceResult {
     /// Donated subtree checkpoints (≤ the request's `donate_hint`),
     /// disjoint from the continuation.
     pub donated: Vec<Vec<u8>>,
+    /// Terminal probes recorded by the progress estimator in this slice
+    /// (`metrics::progress::ProgressSnapshot::terminals`).  Informational:
+    /// the scheduler folds it into the job's progress estimate, never into
+    /// placement decisions.
+    pub terminals: u64,
+    /// Sum of weighted tree-size samples over those probes
+    /// (`ProgressSnapshot::est_sum`, saturating).
+    pub est_sum: u64,
 }
 
 impl SliceResult {
@@ -403,6 +411,10 @@ impl SliceResult {
         for d in &self.donated {
             push_lp_bytes(&mut out, d);
         }
+        // Progress-estimator fields ride at the end so every offset that
+        // predates them (tests pin a few) is unchanged.
+        push_u64_le(&mut out, self.terminals);
+        push_u64_le(&mut out, self.est_sum);
         out
     }
 
@@ -426,8 +438,10 @@ impl SliceResult {
         for _ in 0..count {
             donated.push(take_lp_bytes(bytes, &mut pos)?);
         }
+        let terminals = take_u64(bytes, &mut pos)?;
+        let est_sum = take_u64(bytes, &mut pos)?;
         done(bytes, pos)?;
-        Ok(SliceResult { seq, nodes, best, solution, continuation, donated })
+        Ok(SliceResult { seq, nodes, best, solution, continuation, donated, terminals, est_sum })
     }
 }
 
@@ -674,6 +688,8 @@ mod tests {
                 solution: vec![],
                 continuation: None,
                 donated: vec![],
+                terminals: 0,
+                est_sum: 0,
             },
             SliceResult {
                 seq: 7,
@@ -682,6 +698,8 @@ mod tests {
                 solution: vec![1, 5, 9, 33],
                 continuation: Some(vec![3; 40]),
                 donated: vec![vec![1, 2, 3], vec![], vec![9; 17]],
+                terminals: 2048,
+                est_sum: u64::MAX,
             },
         ]
     }
@@ -733,6 +751,8 @@ mod tests {
             solution: vec![],
             continuation: None,
             donated: vec![],
+            terminals: 0,
+            est_sum: 0,
         };
         let mut b = res.encode();
         let flag_at = 1 + 8 + 8 + 8 + 4; // tag, seq, nodes, best, empty sol vec

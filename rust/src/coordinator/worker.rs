@@ -193,6 +193,10 @@ pub struct Worker<'p, P: Problem, S: StatusTable = VecStatus> {
     /// `cfg.collect_shape`); merges exactly across workers because every
     /// node visit keeps its global depth and root-child digit.
     shape: Option<crate::metrics::TreeShape>,
+    /// Progress-estimate accumulator across this worker's steppers (always
+    /// on — three saturating adds per retired stepper; exactly mergeable
+    /// across workers, see `metrics::progress`).
+    progress: crate::metrics::progress::ProgressSnapshot,
 }
 
 impl<'p, P: Problem> Worker<'p, P, VecStatus> {
@@ -235,6 +239,7 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
             rng: crate::util::Rng::new(cfg.steal_seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15)),
             pending: std::collections::VecDeque::new(),
             shape: None,
+            progress: Default::default(),
         };
         if rank == 0 {
             w.install_stepper(Stepper::at_root(problem));
@@ -290,8 +295,10 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
         self.stepper = Some(stepper);
     }
 
-    /// Fold a retiring stepper's tree shape into the worker accumulator.
-    fn absorb_shape(&mut self, stepper: &mut Stepper<P>) {
+    /// Fold a retiring stepper's tree shape and progress counts into the
+    /// worker accumulators.
+    fn absorb_stepper(&mut self, stepper: &mut Stepper<P>) {
+        self.progress.merge(&stepper.take_progress());
         if let Some(sh) = stepper.take_shape() {
             self.shape.get_or_insert_with(Default::default).merge(&sh);
         }
@@ -308,6 +315,17 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
             }
         }
         self.shape.take()
+    }
+
+    /// Detach this worker's accumulated progress-estimate counts —
+    /// retired steppers plus the live stepper's share so far — resetting
+    /// them to zero (the runner folds shards with
+    /// [`ProgressSnapshot::merge`](crate::metrics::progress::ProgressSnapshot::merge)).
+    pub fn take_progress(&mut self) -> crate::metrics::progress::ProgressSnapshot {
+        if let Some(s) = self.stepper.as_mut() {
+            self.progress.merge(&s.take_progress());
+        }
+        std::mem::take(&mut self.progress)
     }
 
     fn push_msg(&mut self, to: Dest, msg: Message) {
@@ -560,7 +578,7 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
         if let Some(mut s) = self.stepper.take() {
             let st = s.stats;
             self.stats.search.merge(&st);
-            self.absorb_shape(&mut s);
+            self.absorb_stepper(&mut s);
             if !s.is_exhausted() {
                 out.push(s.checkpoint_bytes());
             }
@@ -609,7 +627,7 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
         if let Some(st) = finished_stats {
             self.stats.search.merge(&st);
             if let Some(mut s) = self.stepper.take() {
-                self.absorb_shape(&mut s);
+                self.absorb_stepper(&mut s);
             }
             // §IV-C multi-task responses: run the remaining siblings before
             // asking anyone for more work.
@@ -657,7 +675,7 @@ impl<'p, P: Problem, S: StatusTable> Worker<'p, P, S> {
         self.stats.comm.messages_sent += remaining;
         self.stats.comm.bytes_sent += remaining * 9;
         if let Some(mut s) = self.stepper.take() {
-            self.absorb_shape(&mut s);
+            self.absorb_stepper(&mut s);
         }
         self.go_inactive();
         remaining
@@ -960,6 +978,32 @@ mod tests {
         // Off by default: no shape comes back.
         let mut plain = pump(&p, 2, WorkerConfig::default());
         assert!(plain.iter_mut().all(|w| w.take_tree_shape().is_none()));
+    }
+
+    #[test]
+    fn progress_counts_merge_across_workers_to_serial() {
+        // Like the tree-shape test: donation scatters subtrees across
+        // workers, but the Knuth progress counts must still merge to the
+        // serial run's counts exactly — and an exhausted tree must read
+        // 100% (ToyTree is uniform, so the estimator is exact).
+        use crate::engine::{StepResult, Stepper};
+        let p = ToyTree { height: 8 };
+        let mut serial = Stepper::at_root(&p);
+        loop {
+            if let StepResult::Exhausted = serial.step(COST_INF) {
+                break;
+            }
+        }
+        let want = serial.take_progress();
+        let mut ws = pump(&p, 4, WorkerConfig::default());
+        let mut merged = crate::metrics::progress::ProgressSnapshot::default();
+        for w in ws.iter_mut() {
+            merged.merge(&w.take_progress());
+        }
+        assert_eq!(merged, want);
+        assert_eq!(merged.progress_ppm(), crate::metrics::progress::PPM);
+        // take_progress drains: a second call starts from zero.
+        assert_eq!(ws[0].take_progress(), Default::default());
     }
 
     #[test]

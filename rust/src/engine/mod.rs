@@ -123,6 +123,11 @@ pub struct Stepper<P: Problem> {
     pub stats: SearchStats,
     /// Tree-shape collector, off by default (the hot path pays one branch).
     shape: Option<Box<crate::metrics::TreeShape>>,
+    /// Always-on tree-size estimator (Knuth-style path weights, see
+    /// `metrics::progress`). Replay in `from_index` seeds the ancestor
+    /// weights without counting nodes, so replayed visits count in
+    /// neither stats nor progress.
+    progress: crate::metrics::progress::ProgressEst,
 }
 
 impl<P: Problem> Stepper<P> {
@@ -136,6 +141,7 @@ impl<P: Problem> Stepper<P> {
     pub fn from_index(problem: &P, index: &NodeIndex) -> Result<Self> {
         let mut state = problem.make_state();
         let mut ev = state.evaluate();
+        let mut progress = crate::metrics::progress::ProgressEst::new();
         for (depth, &digit) in index.0.iter().enumerate() {
             if digit >= ev.children {
                 bail!(
@@ -143,6 +149,11 @@ impl<P: Problem> Stepper<P> {
                     ev.children
                 );
             }
+            // Seed the estimator's path weights from the ancestor branching
+            // degrees so this stepper's samples are rooted at the global
+            // root (exact shard-merge == serial), without counting the
+            // replayed nodes themselves.
+            progress.seed(depth, ev.children);
             state.apply(digit);
             ev = state.evaluate();
         }
@@ -153,6 +164,7 @@ impl<P: Problem> Stepper<P> {
             done: false,
             stats: SearchStats::default(),
             shape: None,
+            progress,
         })
     }
 
@@ -166,6 +178,19 @@ impl<P: Problem> Stepper<P> {
     /// Detach the collected shape (None when collection was never enabled).
     pub fn take_shape(&mut self) -> Option<crate::metrics::TreeShape> {
         self.shape.take().map(|b| *b)
+    }
+
+    /// The estimator counts accumulated so far (nodes, terminal probes,
+    /// weighted tree-size samples). Cheap `Copy` snapshot.
+    pub fn progress(&self) -> crate::metrics::progress::ProgressSnapshot {
+        self.progress.snapshot()
+    }
+
+    /// Detach the accumulated progress counts, resetting them to zero while
+    /// keeping the path weights (the stepper can keep exploring; the caller
+    /// merges the taken snapshot into a per-worker or per-job accumulator).
+    pub fn take_progress(&mut self) -> crate::metrics::progress::ProgressSnapshot {
+        self.progress.take()
     }
 
     /// Has the assigned subtree been fully explored?
@@ -256,6 +281,7 @@ impl<P: Problem> Stepper<P> {
                 ev.solution.is_some(),
             );
         }
+        self.progress.record(self.ci.global_depth(), ev.children, prune);
         if ev.children > 0 && !prune {
             self.ci.push(0, ev.children);
             self.state.apply(0);
@@ -443,6 +469,44 @@ mod tests {
         assert_eq!(total_solutions, 32); // every leaf exactly once
         assert_eq!(total_nodes, 63); // every node exactly once
         assert_eq!(best, 1);
+    }
+
+    #[test]
+    fn donated_progress_merge_equals_serial() {
+        // The progress estimator must be exactly mergeable across a
+        // donation partition: replaying a donated index seeds the ancestor
+        // path weights, so every stepper samples the same globally-rooted
+        // tree and the merged counts match the serial run field-for-field.
+        let p = ToyTree { height: 5 };
+        let mut serial = Stepper::at_root(&p);
+        run_to_exhaustion(&mut serial);
+        let want = serial.take_progress();
+        assert_eq!(want.nodes, 63);
+        assert_eq!(want.terminals, 32);
+        assert_eq!(want.estimated_total(), 63); // uniform tree: exact
+
+        let mut donor = Stepper::at_root(&p);
+        let mut donated: Vec<NodeIndex> = Vec::new();
+        loop {
+            for _ in 0..3 {
+                if donor.step(COST_INF) == StepResult::Exhausted {
+                    break;
+                }
+            }
+            if donor.is_exhausted() {
+                break;
+            }
+            if let Some(idx) = donor.donate() {
+                donated.push(idx);
+            }
+        }
+        let mut merged = donor.take_progress();
+        for idx in donated {
+            let mut w = Stepper::from_index(&p, &idx).unwrap();
+            run_to_exhaustion(&mut w);
+            merged.merge(&w.take_progress());
+        }
+        assert_eq!(merged, want);
     }
 
     #[test]

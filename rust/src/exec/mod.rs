@@ -326,6 +326,54 @@ impl PoolStats {
         );
     }
 
+    /// Register every counter plus the in-flight gauge in a metrics
+    /// registry (`/metrics` exposition) — the same numbers
+    /// [`render_line`](Self::render_line) prints, one source of truth.
+    pub fn register(&self, r: &mut crate::metrics::registry::Registry) {
+        r.counter(
+            "pbt_pool_local_slots_total",
+            "Local worker-thread slots that joined the pool",
+            self.local_slots,
+        );
+        r.counter(
+            "pbt_pool_remote_slots_total",
+            "Remote rank slots that joined the pool",
+            self.remote_slots,
+        );
+        r.counter("pbt_pool_joined_total", "Slot joins, local and remote alike", self.joined);
+        r.counter(
+            "pbt_pool_left_total",
+            "Graceful slot departures whose checkpoints were re-absorbed",
+            self.left,
+        );
+        r.counter(
+            "pbt_pool_lost_total",
+            "Slot deaths whose checkpoints were requeued",
+            self.lost,
+        );
+        r.counter(
+            "pbt_pool_reconnects_total",
+            "Pool ranks that re-joined after losing their connection",
+            self.reconnects,
+        );
+        r.counter(
+            "pbt_pool_slices_dispatched_total",
+            "Slices handed to a slot (counted at slice start)",
+            self.slices_dispatched,
+        );
+        r.counter("pbt_pool_slices_completed_total", "Slices a slot finished", self.slices_completed);
+        r.counter(
+            "pbt_pool_slices_remote_total",
+            "Completed slices that ran on a remote rank",
+            self.slices_remote,
+        );
+        r.gauge(
+            "pbt_pool_in_flight",
+            "Slices handed out but not yet finished",
+            self.in_flight() as f64,
+        );
+    }
+
     /// The one-line rendering both CLI surfaces print.
     pub fn render_line(&self) -> String {
         format!(
@@ -362,6 +410,9 @@ pub struct ExecOutcome {
     pub frontier: Vec<Checkpoint>,
     /// Pool accounting for this run (slot joins/leaves, slice counts).
     pub pool: PoolStats,
+    /// Merged progress-estimator counts across every slot, local and
+    /// remote (informational — see `metrics::progress`).
+    pub progress: crate::metrics::progress::ProgressSnapshot,
     pub wall_secs: f64,
 }
 
@@ -444,6 +495,12 @@ pub struct Scheduler {
     /// Authoritative (cost, payload) pair.
     sol: Mutex<(u64, Option<Vec<u32>>)>,
     nodes: AtomicU64,
+    /// Progress-estimator terminal probes merged from every slot
+    /// (`ProgressSnapshot::terminals`; `nodes` above doubles as the
+    /// snapshot's node count, so it is not duplicated here).
+    prog_terminals: AtomicU64,
+    /// Merged weighted tree-size sample sum (`ProgressSnapshot::est_sum`).
+    prog_est_sum: AtomicU64,
     idle: AtomicUsize,
     live_threads: AtomicUsize,
     seq: AtomicU64,
@@ -475,6 +532,8 @@ impl Scheduler {
             best: AtomicU64::new(best0),
             sol: Mutex::new((best0, sol0.filter(|s| !s.is_empty()))),
             nodes: AtomicU64::new(0),
+            prog_terminals: AtomicU64::new(0),
+            prog_est_sum: AtomicU64::new(0),
             idle: AtomicUsize::new(0),
             live_threads: AtomicUsize::new(0),
             seq: AtomicU64::new(0),
@@ -615,6 +674,38 @@ impl Scheduler {
         }
     }
 
+    /// Fold one slot's detached estimator counts into the job-wide merge
+    /// (saturating, matching [`ProgressSnapshot::merge`]).
+    ///
+    /// [`ProgressSnapshot::merge`]: crate::metrics::progress::ProgressSnapshot::merge
+    fn add_progress(&self, terminals: u64, est_sum: u64) {
+        self.prog_terminals.fetch_add(terminals, Ordering::Relaxed);
+        let mut cur = self.prog_est_sum.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(est_sum);
+            match self.prog_est_sum.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Merged estimator counts so far.  `nodes` is this run's visit count
+    /// (the resumed-from total is the caller's to add, as with
+    /// [`snapshot`](Self::snapshot)).
+    fn progress(&self, nodes0: u64) -> crate::metrics::progress::ProgressSnapshot {
+        crate::metrics::progress::ProgressSnapshot {
+            nodes: nodes0 + self.nodes.load(Ordering::SeqCst),
+            terminals: self.prog_terminals.load(Ordering::Relaxed),
+            est_sum: self.prog_est_sum.load(Ordering::Relaxed),
+        }
+    }
+
     /// Consistent view of (nodes, best, solution, frontier cover).
     fn snapshot(&self, nodes0: u64) -> FrontierRecord {
         let frontier = self.drain();
@@ -624,6 +715,8 @@ impl Scheduler {
             best: sol.0,
             solution: sol.1.clone().unwrap_or_default(),
             frontier,
+            progress: self.progress(nodes0),
+            pool_in_flight: self.stats().in_flight(),
         }
     }
 }
@@ -830,6 +923,7 @@ where
         nodes_total: nodes0 + nodes,
         frontier: rec.frontier,
         pool,
+        progress: rec.progress,
         wall_secs: sw.elapsed_secs(),
     }
 }
@@ -950,6 +1044,11 @@ fn drive<P>(
             }
         }
         shared.nodes.fetch_add(visited as u64, Ordering::SeqCst);
+        // Detach the slice's estimator counts into the job-wide merge so a
+        // mid-run snapshot sees every slot's samples (the stepper keeps its
+        // path weights and continues).
+        let prog = stepper.take_progress();
+        shared.add_progress(prog.terminals, prog.est_sum);
         if stepper.is_exhausted() {
             let mut f = lock(&shared.frontier);
             if let Some(s) = f.slots.get_mut(&me) {
@@ -1244,6 +1343,7 @@ fn dispatcher_loop(
             sent_at.remove(&res.seq);
         }
         shared.nodes.fetch_add(res.nodes, Ordering::SeqCst);
+        shared.add_progress(res.terminals, res.est_sum);
         if res.best != COST_INF {
             shared.record_best(res.best, res.solution);
         }
@@ -1349,6 +1449,30 @@ mod tests {
         assert_eq!(out.pool.remote_slots, 0);
         assert_eq!(out.pool.slices_remote, 0);
         assert!(out.pool.slices_completed >= 1);
+    }
+
+    #[test]
+    fn progress_estimate_is_exact_on_a_uniform_tree_across_workers() {
+        // ToyTree never prunes, so every placement explores exactly the
+        // serial node set; on a uniform tree the Knuth estimate is exact,
+        // and the sharded merge must reproduce it to the digit.
+        let p = ToyTree { height: 10 };
+        let serial = solve_serial(&p, u64::MAX);
+        for workers in [1, 3] {
+            let out = run_plain(&p, workers);
+            assert!(out.finished, "workers={workers}");
+            assert_eq!(out.progress.nodes, out.nodes, "workers={workers}");
+            assert_eq!(
+                out.progress.estimated_total(),
+                serial.stats.nodes,
+                "workers={workers}"
+            );
+            assert_eq!(
+                out.progress.progress_ppm(),
+                crate::metrics::progress::PPM,
+                "workers={workers}"
+            );
+        }
     }
 
     #[test]

@@ -127,7 +127,20 @@ where
         Some((cost, sol)) => (cost, sol),
         None => (COST_INF, Vec::new()),
     };
-    Ok(SliceResult { seq: req.seq, nodes: visited as u64, best, solution, continuation, donated })
+    // Progress-estimator counts for exactly the stepped nodes (replay in
+    // from_checkpoint seeds weights without counting): the scheduler merges
+    // them into the job-wide estimate.
+    let prog = stepper.take_progress();
+    Ok(SliceResult {
+        seq: req.seq,
+        nodes: visited as u64,
+        best,
+        solution,
+        continuation,
+        donated,
+        terminals: prog.terminals,
+        est_sum: prog.est_sum,
+    })
 }
 
 /// What one [`serve_slices`] session did.
@@ -470,6 +483,8 @@ mod tests {
                 solution: Vec::new(),
                 continuation: None,
                 donated: Vec::new(),
+                terminals: 0,
+                est_sum: 0,
             };
             wire::write_blob_frame(&mut s, &bogus.encode()).unwrap();
             // ...then keep serving like a healthy rank would.  The backstop

@@ -504,6 +504,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.checkpoint_ms = args.get_u64("checkpoint-ms", opts.checkpoint_ms)?.max(1);
     opts.remote_window = args.get_usize("remote-window", opts.remote_window)?.max(1);
     opts.trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    opts.metrics_addr = args.get("metrics-addr").map(String::from);
     eprintln!(
         "== pbt serve v{} (rev {}): journal {}, {} active job slot(s)",
         pbt::server::VERSION,
@@ -575,6 +576,9 @@ fn cmd_submit(args: &Args) -> Result<()> {
 
 fn cmd_status(args: &Args) -> Result<()> {
     let id = job_id_arg(args)?;
+    if args.get_bool("follow", false)? {
+        return follow_status(args, id);
+    }
     let s = serve_client(args)?.status(id)?;
     println!(
         "job {}: {}   nodes: {} (total {})   checkpoints: {}   best: {}{}{}",
@@ -590,6 +594,42 @@ fn cmd_status(args: &Args) -> Result<()> {
         if s.resumed { "   (resumed from journal)" } else { "" },
         if s.error.is_empty() { String::new() } else { format!("   error: {}", s.error) },
     );
+    Ok(())
+}
+
+/// `pbt status <id> --follow` — subscribe to the daemon's PROGRESS push
+/// stream and print one line per frame until the job goes terminal.
+/// Exits 0 on done/cancelled, 1 on failed.  Estimates are informational:
+/// the percentage is the Knuth-style tree-size estimate, exactly 100%
+/// only when the job is DONE (docs/OBSERVABILITY.md).
+fn follow_status(args: &Args, id: u64) -> Result<()> {
+    use pbt::metrics::progress::ppm_percent;
+    use std::io::Write as _;
+    let last = serve_client(args)?.subscribe(id, |p| {
+        println!(
+            "PROGRESS job {}: {}   {:.1}%   nodes {} (total {})   best {}   eta {}   in-flight {}",
+            p.id,
+            p.state,
+            ppm_percent(p.progress_ppm),
+            p.nodes,
+            p.nodes_total,
+            match p.best {
+                Some(b) => b.to_string(),
+                None => "-".into(),
+            },
+            match p.eta_us {
+                Some(e) => human_duration(e as f64 / 1e6),
+                None => "-".into(),
+            },
+            p.pool_in_flight,
+        );
+        // Streaming surface: each frame must appear as it is pushed, even
+        // through a pipe.
+        let _ = std::io::stdout().flush();
+    })?;
+    if last.state == pbt::server::proto::JobState::Failed {
+        std::process::exit(1);
+    }
     Ok(())
 }
 
@@ -651,6 +691,21 @@ fn cmd_server_stats(args: &Args) -> Result<()> {
         println!("slice-rtt:      {}", s.slice_rtt.render());
         println!("journal-fsync:  {}", s.journal_fsync.render());
         println!("{}", s.metrics.render_table().render());
+        if !s.jobs.is_empty() {
+            let mut t = Table::new(["job", "state", "progress", "eta"]);
+            for j in &s.jobs {
+                t.row([
+                    j.id.to_string(),
+                    j.state.to_string(),
+                    format!("{:.1}%", pbt::metrics::progress::ppm_percent(j.progress_ppm)),
+                    match j.eta_us {
+                        Some(e) => human_duration(e as f64 / 1e6),
+                        None => "-".into(),
+                    },
+                ]);
+            }
+            println!("{}", t.render());
+        }
         if watch_secs == 0 {
             return Ok(());
         }
@@ -693,8 +748,11 @@ fn cmd_trace(args: &Args) -> Result<()> {
     if events.is_empty() {
         bail!("{path}: no trace events");
     }
+    let as_json = args.get_bool("json", false)?;
     let span = events.iter().map(|e| e.t_us).max().unwrap_or(0);
-    println!("== pbt trace: {path} — {} event(s) over {}", events.len(), fmt_us(span));
+    if !as_json {
+        println!("== pbt trace: {path} — {} event(s) over {}", events.len(), fmt_us(span));
+    }
 
     // Per-slot timeline: who was active when, and what flowed through it.
     #[derive(Default)]
@@ -716,18 +774,20 @@ fn cmd_trace(args: &Args) -> Result<()> {
             _ => s.other += 1,
         }
     }
-    let mut timeline = Table::new(["slot", "first", "last", "dispatched", "results", "other"]);
-    for (slot, s) in &slots {
-        timeline.row([
-            slot_label(*slot),
-            fmt_us(s.first),
-            fmt_us(s.last),
-            s.dispatched.to_string(),
-            s.results.to_string(),
-            s.other.to_string(),
-        ]);
+    if !as_json {
+        let mut timeline = Table::new(["slot", "first", "last", "dispatched", "results", "other"]);
+        for (slot, s) in &slots {
+            timeline.row([
+                slot_label(*slot),
+                fmt_us(s.first),
+                fmt_us(s.last),
+                s.dispatched.to_string(),
+                s.results.to_string(),
+                s.other.to_string(),
+            ]);
+        }
+        println!("{}", timeline.render());
     }
-    println!("{}", timeline.render());
 
     // Bucket the latency-bearing events by path.
     let mut remote_rtt: BTreeMap<i64, Vec<u64>> = BTreeMap::new();
@@ -759,13 +819,16 @@ fn cmd_trace(args: &Args) -> Result<()> {
             fmt_us(sorted.last().copied().unwrap_or(0)),
         ]
     };
-    let mut lat = Table::new(["path", "n", "p50", "p90", "p99", "max"]);
+    // One named, sorted sample set per latency path: the table rows and
+    // the `--json` summaries come from this same list.
+    let mut paths: Vec<(String, Vec<u64>)> = Vec::new();
     let mut all_rtt: Vec<u64> = Vec::new();
     for (slot, vals) in &mut remote_rtt {
         vals.sort_unstable();
         all_rtt.extend_from_slice(vals);
-        lat.row(row_of(&format!("slice-rtt {}", slot_label(*slot)), vals));
+        paths.push((format!("slice-rtt {}", slot_label(*slot)), vals.clone()));
     }
+    all_rtt.sort_unstable();
     for (name, vals) in [
         ("slice-rtt (all ranks)", &mut all_rtt),
         ("slice-local", &mut local_dur),
@@ -775,17 +838,69 @@ fn cmd_trace(args: &Args) -> Result<()> {
     ] {
         vals.sort_unstable();
         if !vals.is_empty() {
-            lat.row(row_of(name, vals));
+            paths.push((name.to_string(), vals.clone()));
         }
+    }
+    // Donation pressure: gaps between consecutive work requests, across
+    // all slots — high p50 means workers rarely starve.
+    donation_req_t.sort_unstable();
+    let mut gaps: Vec<u64> = donation_req_t.windows(2).map(|w| w[1] - w[0]).collect();
+    gaps.sort_unstable();
+
+    if as_json {
+        // Machine-readable analyzer output (same minimal JSON writer as
+        // the bench reports): stable keys, raw microseconds.
+        use pbt::bench::json::Json;
+        let num = |v: u64| Json::Num(v as f64);
+        let summary_of = |sorted: &[u64]| {
+            Json::Obj(vec![
+                ("n".into(), num(sorted.len() as u64)),
+                ("p50_us".into(), num(percentile_of_sorted(sorted, 0.50))),
+                ("p90_us".into(), num(percentile_of_sorted(sorted, 0.90))),
+                ("p99_us".into(), num(percentile_of_sorted(sorted, 0.99))),
+                ("max_us".into(), num(sorted.last().copied().unwrap_or(0))),
+            ])
+        };
+        let slots_json = Json::Arr(
+            slots
+                .iter()
+                .map(|(slot, s)| {
+                    Json::Obj(vec![
+                        ("slot".into(), Json::Str(slot_label(*slot))),
+                        ("first_us".into(), num(s.first)),
+                        ("last_us".into(), num(s.last)),
+                        ("dispatched".into(), num(s.dispatched)),
+                        ("results".into(), num(s.results)),
+                        ("other".into(), num(s.other)),
+                    ])
+                })
+                .collect(),
+        );
+        let latency_json =
+            Json::Obj(paths.iter().map(|(n, vals)| (n.clone(), summary_of(vals))).collect());
+        let doc = Json::Obj(vec![
+            ("file".into(), Json::Str(path.clone())),
+            ("events".into(), num(events.len() as u64)),
+            ("span_us".into(), num(span)),
+            ("slots".into(), slots_json),
+            ("latency".into(), latency_json),
+            ("donation_requests".into(), num(donation_req_t.len() as u64)),
+            (
+                "donation_interarrival".into(),
+                if gaps.is_empty() { Json::Null } else { summary_of(&gaps) },
+            ),
+        ]);
+        print!("{}", doc.render());
+        return Ok(());
+    }
+
+    let mut lat = Table::new(["path", "n", "p50", "p90", "p99", "max"]);
+    for (name, vals) in &paths {
+        lat.row(row_of(name, vals));
     }
     println!("{}", lat.render());
 
-    // Donation pressure: gaps between consecutive work requests, across
-    // all slots — high p50 means workers rarely starve.
-    if donation_req_t.len() >= 2 {
-        donation_req_t.sort_unstable();
-        let mut gaps: Vec<u64> = donation_req_t.windows(2).map(|w| w[1] - w[0]).collect();
-        gaps.sort_unstable();
+    if !gaps.is_empty() {
         println!(
             "donation requests: {}   interarrival p50: {}   p90: {}",
             donation_req_t.len(),

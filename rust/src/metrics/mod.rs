@@ -7,6 +7,8 @@
 //! Prosser (arXiv:1401.5921).
 
 pub mod hist;
+pub mod progress;
+pub mod registry;
 pub mod trace;
 
 use crate::util::table::{thousands, Table};
@@ -220,22 +222,37 @@ impl ServerMetrics {
         self.nodes_explored += o.nodes_explored;
     }
 
+    /// The one counter list behind every rendering of these metrics:
+    /// `(human label, registry series name, value)`.  `render_table` and
+    /// [`register`](Self::register) both iterate it, so the CLI table and
+    /// the `/metrics` endpoint can never drift apart.
+    pub fn counters(&self) -> [(&'static str, &'static str, u64); 8] {
+        [
+            ("jobs submitted", "pbt_jobs_submitted_total", self.jobs_submitted),
+            ("jobs completed", "pbt_jobs_completed_total", self.jobs_completed),
+            ("jobs cancelled", "pbt_jobs_cancelled_total", self.jobs_cancelled),
+            ("jobs failed", "pbt_jobs_failed_total", self.jobs_failed),
+            ("jobs resumed", "pbt_jobs_resumed_total", self.jobs_resumed),
+            ("checkpoints written", "pbt_checkpoints_written_total", self.checkpoints_written),
+            ("checkpoint bytes", "pbt_checkpoint_bytes_total", self.checkpoint_bytes),
+            ("nodes explored", "pbt_nodes_explored_total", self.nodes_explored),
+        ]
+    }
+
     /// Two-column rendering for `pbt server-stats`.
     pub fn render_table(&self) -> Table {
         let mut t = Table::new(["Counter", "Value"]);
-        for (k, v) in [
-            ("jobs submitted", self.jobs_submitted),
-            ("jobs completed", self.jobs_completed),
-            ("jobs cancelled", self.jobs_cancelled),
-            ("jobs failed", self.jobs_failed),
-            ("jobs resumed", self.jobs_resumed),
-            ("checkpoints written", self.checkpoints_written),
-            ("checkpoint bytes", self.checkpoint_bytes),
-            ("nodes explored", self.nodes_explored),
-        ] {
+        for (k, _, v) in self.counters() {
             t.row([k.to_string(), thousands(v)]);
         }
         t
+    }
+
+    /// Contribute every lifecycle counter to a registry snapshot.
+    pub fn register(&self, r: &mut registry::Registry) {
+        for (help, name, v) in self.counters() {
+            r.counter(name, help, v);
+        }
     }
 }
 

@@ -1,0 +1,436 @@
+//! Online search-progress estimation (docs/OBSERVABILITY.md).
+//!
+//! Raw node counts cannot answer "how far along is this job": B&B trees
+//! are wildly skewed (arXiv:1401.5921), so half the nodes is almost never
+//! half the work.  This module implements a Knuth-style weighted online
+//! estimate of the *total* tree size, driven by the branching degrees the
+//! engine already observes along every stepped `CurrentIndex` path:
+//!
+//! * along the current root-to-node path, `W(0) = 1` and
+//!   `W(k+1) = W(k) · deg_k` (the number of equiprobable paths of that
+//!   shape), with the running series `S(k) = 1 + W(1) + … + W(k)`;
+//! * every **terminal** node (no children, or pruned) at depth `g` is one
+//!   completed probe and contributes `S(g)` to `est_sum`;
+//! * the estimated total is `est_sum / terminals` — the mean of the
+//!   per-probe unbiased estimates — floored by the nodes actually seen.
+//!
+//! The accumulator ([`ProgressSnapshot`]) is three saturating `u64`
+//! counters: `Copy`, and **exactly** mergeable across worker threads and
+//! remote ranks (integer addition is associative and commutative), the
+//! same discipline as `Hist::merge` / `TreeShape::merge`.  A donated or
+//! checkpointed subtree replays its ancestor path through
+//! [`ProgressEst::seed`], so its probes carry globally-rooted weights and
+//! a sharded merge equals the single-threaded estimate node-for-node.
+//!
+//! Progress-% is paired with an EWMA nodes/sec throughput ([`Ewma`] /
+//! [`EtaEstimator`]) to derive an ETA, and [`ProgressTracker`] gives the
+//! server a monotone, finalize-at-100% gauge.  Estimates are
+//! informational everywhere: never gating, never consulted by the
+//! scheduler.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Progress is reported in parts-per-million (1_000_000 = 100%).
+pub const PPM: u64 = 1_000_000;
+
+/// The mergeable estimator accumulator: what a worker thread or remote
+/// rank hands back.  Plain saturating counters, so `merge` is exact.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProgressSnapshot {
+    /// Nodes actually stepped (replayed nodes count in neither this nor
+    /// the probe sums — same rule as `SearchStats::nodes`).
+    pub nodes: u64,
+    /// Completed probes: terminal nodes (childless or pruned).
+    pub terminals: u64,
+    /// Sum over terminals of the path series `S(depth)`.
+    pub est_sum: u64,
+}
+
+impl ProgressSnapshot {
+    /// Exact merge: plain saturating addition, associative and
+    /// commutative, so sharded == serial.
+    pub fn merge(&mut self, other: &ProgressSnapshot) {
+        self.nodes = self.nodes.saturating_add(other.nodes);
+        self.terminals = self.terminals.saturating_add(other.terminals);
+        self.est_sum = self.est_sum.saturating_add(other.est_sum);
+    }
+
+    /// Estimated total tree size: mean of the per-probe estimates,
+    /// floored by the nodes already seen (the estimate may lag a deep
+    /// left spine, but the tree is at least as big as what we visited).
+    pub fn estimated_total(&self) -> u64 {
+        if self.terminals == 0 {
+            return self.nodes.max(1);
+        }
+        (self.est_sum / self.terminals).max(self.nodes).max(1)
+    }
+
+    /// Progress in parts-per-million, capped at [`PPM`].
+    pub fn progress_ppm(&self) -> u64 {
+        let total = self.estimated_total() as u128;
+        let ppm = (self.nodes as u128 * PPM as u128) / total;
+        (ppm as u64).min(PPM)
+    }
+
+    /// Nodes the estimate still expects (0 once `nodes` caught up).
+    pub fn remaining(&self) -> u64 {
+        self.estimated_total().saturating_sub(self.nodes)
+    }
+}
+
+/// Per-stepper online estimator: the per-depth weight/series stacks plus
+/// the running [`ProgressSnapshot`].  Entries above the current depth go
+/// stale on backtrack and are overwritten on the next descend — siblings
+/// share their ancestors' weights, so no truncation is needed.
+#[derive(Debug, Clone)]
+pub struct ProgressEst {
+    weights: Vec<u64>,
+    series: Vec<u64>,
+    snap: ProgressSnapshot,
+}
+
+impl Default for ProgressEst {
+    fn default() -> Self {
+        ProgressEst::new()
+    }
+}
+
+impl ProgressEst {
+    pub fn new() -> ProgressEst {
+        // W(0) = 1, S(0) = 1: the root is one node on every path.
+        ProgressEst { weights: vec![1], series: vec![1], snap: ProgressSnapshot::default() }
+    }
+
+    fn path_series(&self, depth: usize) -> u64 {
+        debug_assert!(depth < self.series.len(), "depth {depth} not seeded");
+        self.series.get(depth).copied().unwrap_or(1)
+    }
+
+    fn descend(&mut self, depth: usize, children: u32) {
+        debug_assert!(depth < self.weights.len(), "depth {depth} not seeded");
+        let parent_w = self.weights.get(depth).copied().unwrap_or(1);
+        let parent_s = self.series.get(depth).copied().unwrap_or(1);
+        let w = parent_w.saturating_mul(u64::from(children.max(1)));
+        let s = parent_s.saturating_add(w);
+        if self.weights.len() <= depth + 1 {
+            self.weights.push(w);
+            self.series.push(s);
+        } else {
+            self.weights[depth + 1] = w;
+            self.series[depth + 1] = s;
+        }
+    }
+
+    /// Seed the weight/series stacks for a **replayed** ancestor at
+    /// `depth` with `children` children — checkpoint/donation replay
+    /// builds the globally-rooted path without counting any node, so a
+    /// sharded run's probes are identical to the serial run's.
+    pub fn seed(&mut self, depth: usize, children: u32) {
+        self.descend(depth, children);
+    }
+
+    /// Record one **stepped** node at `depth`: a terminal (childless or
+    /// pruned) completes a probe; an interior node extends the path.
+    pub fn record(&mut self, depth: usize, children: u32, pruned: bool) {
+        self.snap.nodes = self.snap.nodes.saturating_add(1);
+        if children == 0 || pruned {
+            self.snap.terminals = self.snap.terminals.saturating_add(1);
+            let s = self.path_series(depth);
+            self.snap.est_sum = self.snap.est_sum.saturating_add(s);
+        } else {
+            self.descend(depth, children);
+        }
+    }
+
+    /// Current accumulator (the stepper keeps running).
+    pub fn snapshot(&self) -> ProgressSnapshot {
+        self.snap
+    }
+
+    /// Take the accumulator, resetting the counters but keeping the path
+    /// weights (the stepper continues from where it is).
+    pub fn take(&mut self) -> ProgressSnapshot {
+        std::mem::take(&mut self.snap)
+    }
+}
+
+/// EWMA throughput with alpha = 1/4 — exact in binary floating point, so
+/// the ETA pin test asserts equality, not tolerance.  The first sample
+/// primes the average directly.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Ewma {
+    rate_nps: f64,
+    primed: bool,
+}
+
+impl Ewma {
+    /// Fold in one interval: `nodes_delta` nodes over `dt_us`
+    /// microseconds.  Zero-length intervals are ignored.
+    pub fn observe(&mut self, nodes_delta: u64, dt_us: u64) {
+        if dt_us == 0 {
+            return;
+        }
+        let x = nodes_delta as f64 * 1_000_000.0 / dt_us as f64;
+        if self.primed {
+            self.rate_nps += 0.25 * (x - self.rate_nps);
+        } else {
+            self.rate_nps = x;
+            self.primed = true;
+        }
+    }
+
+    /// Smoothed nodes/sec (0.0 before the first sample).
+    pub fn rate_nps(&self) -> f64 {
+        if self.primed {
+            self.rate_nps
+        } else {
+            0.0
+        }
+    }
+
+    /// ETA in microseconds for `remaining_nodes` at the current rate
+    /// (`None` until a positive rate is observed).
+    pub fn eta_us(&self, remaining_nodes: u64) -> Option<u64> {
+        if !self.primed || self.rate_nps <= 0.0 {
+            return None;
+        }
+        Some((remaining_nodes as f64 * 1_000_000.0 / self.rate_nps).round() as u64)
+    }
+}
+
+/// [`Ewma`] plus the last-observation state: feed it absolute
+/// `(nodes_total, t_us)` pairs on the checkpoint cadence and it derives
+/// the interval deltas itself.  Non-monotone samples (clock or counter
+/// resets) are skipped, never folded in as garbage.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EtaEstimator {
+    ewma: Ewma,
+    last_nodes: u64,
+    last_t_us: u64,
+    started: bool,
+}
+
+impl EtaEstimator {
+    /// Observe the cumulative node count at time `t_us`.
+    pub fn observe(&mut self, nodes_total: u64, t_us: u64) {
+        if self.started && t_us > self.last_t_us && nodes_total >= self.last_nodes {
+            self.ewma.observe(nodes_total - self.last_nodes, t_us - self.last_t_us);
+        }
+        self.started = true;
+        self.last_nodes = nodes_total;
+        self.last_t_us = t_us;
+    }
+
+    pub fn rate_nps(&self) -> f64 {
+        self.ewma.rate_nps()
+    }
+
+    pub fn eta_us(&self, remaining_nodes: u64) -> Option<u64> {
+        self.ewma.eta_us(remaining_nodes)
+    }
+}
+
+/// Monotone progress gauge for one job, shared across threads.  Live
+/// observations are capped *below* 100% — only [`finalize`] (called when
+/// the job goes terminal) reports exactly [`PPM`], so "100%" always means
+/// DONE and the reported series never decreases.
+///
+/// [`finalize`]: ProgressTracker::finalize
+#[derive(Debug, Default)]
+pub struct ProgressTracker {
+    ppm: AtomicU64,
+}
+
+impl ProgressTracker {
+    /// Fold in a raw estimate; returns the (monotone) published value.
+    pub fn observe(&self, raw_ppm: u64) -> u64 {
+        let capped = raw_ppm.min(PPM - 1);
+        self.ppm.fetch_max(capped, Ordering::Relaxed);
+        self.current()
+    }
+
+    /// The job is terminal: pin the gauge at exactly 100%.
+    pub fn finalize(&self) -> u64 {
+        self.ppm.store(PPM, Ordering::Relaxed);
+        PPM
+    }
+
+    pub fn current(&self) -> u64 {
+        self.ppm.load(Ordering::Relaxed)
+    }
+}
+
+/// Render a ppm value as a percentage (`ppm_percent(250_000) == 25.0`).
+pub fn ppm_percent(ppm: u64) -> f64 {
+    ppm as f64 / 10_000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// DFS a complete `arity`-ary tree of the given height through an
+    /// estimator, returning it exhausted.  `height` counts edges: height
+    /// 0 is a lone root leaf.
+    fn walk(est: &mut ProgressEst, depth: usize, height: usize, arity: u32) {
+        if depth == height {
+            est.record(depth, 0, false);
+        } else {
+            est.record(depth, arity, false);
+            for _ in 0..arity {
+                walk(est, depth + 1, height, arity);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_tree_estimate_is_exact() {
+        for (height, arity) in [(3usize, 2u32), (2, 3), (4, 2), (0, 2)] {
+            let mut est = ProgressEst::new();
+            walk(&mut est, 0, height, arity);
+            let snap = est.snapshot();
+            let a = u64::from(arity);
+            let exact: u64 = (0..=height as u32).map(|d| a.pow(d)).sum();
+            assert_eq!(snap.nodes, exact, "h={height} a={arity}");
+            // Every probe in a uniform tree returns the exact total.
+            assert_eq!(snap.estimated_total(), exact, "h={height} a={arity}");
+            assert_eq!(snap.progress_ppm(), PPM);
+            assert_eq!(snap.remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn sharded_merge_equals_serial() {
+        // Serial walk of a ternary tree...
+        let mut serial = ProgressEst::new();
+        walk(&mut serial, 0, 3, 3);
+        // ...vs the root stepped by a coordinator and each child subtree
+        // walked by its own estimator seeded with the replayed root —
+        // exactly what a donated `Stepper::from_index` does.
+        let mut main = ProgressEst::new();
+        main.record(0, 3, false);
+        let mut merged = main.take();
+        for _child in 0..3 {
+            let mut shard = ProgressEst::new();
+            shard.seed(0, 3); // replay: weights only, no counts
+            walk(&mut shard, 1, 3, 3);
+            merged.merge(&shard.snapshot());
+        }
+        assert_eq!(merged, serial.snapshot(), "sharded merge == serial, field for field");
+    }
+
+    #[test]
+    fn pruned_nodes_are_terminals() {
+        let mut est = ProgressEst::new();
+        // Root branches 2; left child pruned, right child a leaf.
+        est.record(0, 2, false);
+        est.record(1, 5, true); // pruned despite having children
+        est.record(1, 0, false);
+        let snap = est.snapshot();
+        assert_eq!(snap.nodes, 3);
+        assert_eq!(snap.terminals, 2);
+        // Both probes see the path series 1 + 2 = 3.
+        assert_eq!(snap.est_sum, 6);
+        assert_eq!(snap.estimated_total(), 3);
+    }
+
+    #[test]
+    fn estimate_never_reports_done_early_on_skew() {
+        // A skewed tree: root branches 2, left subtree is a lone leaf.
+        // After the left probe the estimate is 3 nodes total but only 2
+        // seen: progress must stay below 100%.
+        let mut est = ProgressEst::new();
+        est.record(0, 2, false);
+        est.record(1, 0, false);
+        let snap = est.snapshot();
+        assert_eq!(snap.estimated_total(), 3);
+        assert!(snap.progress_ppm() < PPM);
+        // The right subtree is huge: nodes overtakes the probe mean and
+        // the floor keeps estimated_total >= nodes (ppm capped at 100%).
+        for _ in 0..10 {
+            est.record(1, 2, false);
+        }
+        let snap = est.snapshot();
+        assert!(snap.estimated_total() >= snap.nodes);
+        assert!(snap.progress_ppm() <= PPM);
+    }
+
+    #[test]
+    fn take_keeps_the_path_weights() {
+        let mut est = ProgressEst::new();
+        est.record(0, 2, false);
+        let first = est.take();
+        assert_eq!(first.nodes, 1);
+        assert_eq!(est.snapshot(), ProgressSnapshot::default());
+        // The path survives the take: a depth-1 terminal still sees the
+        // rooted series 1 + 2.
+        est.record(1, 0, false);
+        assert_eq!(est.snapshot().est_sum, 3);
+    }
+
+    #[test]
+    fn merge_saturates_instead_of_wrapping() {
+        let mut a = ProgressSnapshot { nodes: u64::MAX - 1, terminals: 1, est_sum: 10 };
+        a.merge(&ProgressSnapshot { nodes: 5, terminals: 2, est_sum: 7 });
+        assert_eq!(a.nodes, u64::MAX);
+        assert_eq!(a.terminals, 3);
+        assert_eq!(a.est_sum, 17);
+    }
+
+    /// The hand-computed ETA pin (alpha = 1/4 is exact in binary): prime
+    /// at 1000 nodes/s, then a 500 nodes/s interval smooths to exactly
+    /// 875, and 1750 remaining nodes is exactly 2 s.
+    #[test]
+    fn ewma_eta_matches_hand_computed_trace() {
+        let mut e = Ewma::default();
+        assert_eq!(e.eta_us(100), None, "no rate before the first sample");
+        e.observe(1000, 1_000_000);
+        assert_eq!(e.rate_nps(), 1000.0);
+        e.observe(500, 1_000_000);
+        assert_eq!(e.rate_nps(), 875.0, "1000 + (500 - 1000)/4");
+        assert_eq!(e.eta_us(1750), Some(2_000_000));
+        assert_eq!(e.eta_us(0), Some(0));
+        // Zero-length intervals are ignored, not folded as infinity.
+        e.observe(999, 0);
+        assert_eq!(e.rate_nps(), 875.0);
+    }
+
+    #[test]
+    fn eta_estimator_derives_deltas_from_absolute_samples() {
+        let mut e = EtaEstimator::default();
+        e.observe(0, 0); // primes the baseline only
+        assert_eq!(e.eta_us(100), None);
+        e.observe(1000, 1_000_000);
+        assert_eq!(e.rate_nps(), 1000.0);
+        e.observe(1500, 2_000_000);
+        assert_eq!(e.rate_nps(), 875.0);
+        assert_eq!(e.eta_us(1750), Some(2_000_000));
+        // A non-monotone sample (restart) re-baselines without garbage.
+        e.observe(100, 2_500_000);
+        assert_eq!(e.rate_nps(), 875.0);
+        e.observe(975, 3_500_000);
+        assert_eq!(e.rate_nps(), 875.0, "875 + (875 - 875)/4");
+    }
+
+    #[test]
+    fn tracker_is_monotone_and_only_finalize_reports_100() {
+        let t = ProgressTracker::default();
+        assert_eq!(t.current(), 0);
+        assert_eq!(t.observe(250_000), 250_000);
+        // A lower raw estimate never lowers the published value.
+        assert_eq!(t.observe(100_000), 250_000);
+        assert_eq!(t.observe(400_000), 400_000);
+        // Live values cap below 100% even if the raw estimate overshoots.
+        assert_eq!(t.observe(PPM), PPM - 1);
+        assert_eq!(t.observe(PPM + 5), PPM - 1);
+        assert_eq!(t.finalize(), PPM);
+        assert_eq!(t.current(), PPM);
+    }
+
+    #[test]
+    fn ppm_percent_scales() {
+        assert_eq!(ppm_percent(PPM), 100.0);
+        assert_eq!(ppm_percent(250_000), 25.0);
+        assert_eq!(ppm_percent(0), 0.0);
+    }
+}

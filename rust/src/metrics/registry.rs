@@ -1,0 +1,269 @@
+//! Typed metric registry + Prometheus text exposition
+//! (docs/OBSERVABILITY.md).
+//!
+//! One snapshot type unifies the daemon's ad-hoc stats sources —
+//! `ServerMetrics` lifecycle counters, `PoolStats` slice accounting, the
+//! latency histogram summaries, and per-job progress — into a single
+//! named, labeled list.  Renderers (the `/metrics` HTTP endpoint, CLI
+//! tables) are views over this one source of truth instead of each
+//! hand-formatting its own struct.
+//!
+//! Naming scheme: every series is prefixed `pbt_`, counters end in
+//! `_total`, per-job series carry a `job_id` label, per-rank series a
+//! `slot` label.  The text format is the Prometheus exposition format
+//! (version 0.0.4): `# HELP` / `# TYPE` once per family, then one
+//! `name{label="value"} value` line per sample.  Hand-rolled, std-only —
+//! the same no-deps discipline as `bench/json.rs`.
+
+use super::hist::HistSummary;
+
+/// What kind of series a sample belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotonically non-decreasing (rendered `# TYPE ... counter`).
+    Counter,
+    /// Point-in-time value that may go down (rendered `# TYPE ... gauge`).
+    Gauge,
+}
+
+/// One sample: a family name, optional labels, and a value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    pub kind: MetricKind,
+    pub help: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// An insertion-ordered snapshot of samples (stable output for diffs and
+/// tests, like `bench/json.rs` objects).
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    metrics: Vec<Metric>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add an unlabeled counter sample.
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) {
+        self.push(MetricKind::Counter, name, help, &[], value as f64);
+    }
+
+    /// Add a labeled counter sample.
+    pub fn counter_with(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: u64) {
+        self.push(MetricKind::Counter, name, help, labels, value as f64);
+    }
+
+    /// Add an unlabeled gauge sample.
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.push(MetricKind::Gauge, name, help, &[], value);
+    }
+
+    /// Add a labeled gauge sample.
+    pub fn gauge_with(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.push(MetricKind::Gauge, name, help, labels, value);
+    }
+
+    /// Add a latency summary as quantile-labeled gauges plus `_count`:
+    /// `<base>_us{quantile="0.5"|"0.9"|"0.99"|"max"}` and
+    /// `<base>_count` (the log-bucketed `Hist` keeps no exact sum, so
+    /// this is quantiles + count, not a Prometheus native summary).
+    pub fn hist_summary(&mut self, base: &str, help: &str, s: &HistSummary) {
+        let us = format!("{base}_us");
+        for (q, v) in
+            [("0.5", s.p50), ("0.9", s.p90), ("0.99", s.p99), ("max", s.max)]
+        {
+            self.gauge_with(&us, help, &[("quantile", q)], v as f64);
+        }
+        self.counter(&format!("{base}_count"), help, s.count);
+    }
+
+    fn push(&mut self, kind: MetricKind, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.metrics.push(Metric {
+            name: name.to_string(),
+            kind,
+            help: help.to_string(),
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            value,
+        });
+    }
+
+    /// Every sample, in insertion order.
+    pub fn metrics(&self) -> &[Metric] {
+        &self.metrics
+    }
+
+    /// First sample of a family (tests and CLI views).
+    pub fn find(&self, name: &str) -> Option<&Metric> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    /// Render the Prometheus text exposition format: `# HELP`/`# TYPE`
+    /// once per family (at its first sample), samples in insertion order.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut announced: Vec<&str> = Vec::new();
+        for m in &self.metrics {
+            if !announced.contains(&m.name.as_str()) {
+                announced.push(&m.name);
+                out.push_str("# HELP ");
+                out.push_str(&m.name);
+                out.push(' ');
+                out.push_str(&escape_help(&m.help));
+                out.push('\n');
+                out.push_str("# TYPE ");
+                out.push_str(&m.name);
+                out.push_str(match m.kind {
+                    MetricKind::Counter => " counter\n",
+                    MetricKind::Gauge => " gauge\n",
+                });
+            }
+            out.push_str(&m.name);
+            if !m.labels.is_empty() {
+                out.push('{');
+                for (i, (k, v)) in m.labels.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(k);
+                    out.push_str("=\"");
+                    out.push_str(&escape_label(v));
+                    out.push('"');
+                }
+                out.push('}');
+            }
+            out.push(' ');
+            out.push_str(&render_value(m.value));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Exposition-format value: integers without a fractional part, floats
+/// via Rust's shortest roundtrip formatting.
+fn render_value(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".to_string();
+    }
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Label values escape backslash, double-quote and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// HELP text escapes backslash and newline (quotes are legal there).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_help_type_once_per_family() {
+        let mut r = Registry::new();
+        r.counter("pbt_jobs_submitted_total", "Jobs accepted", 3);
+        r.gauge_with(
+            "pbt_job_progress",
+            "Estimated progress [0,1]",
+            &[("job_id", "1")],
+            0.25,
+        );
+        r.gauge_with(
+            "pbt_job_progress",
+            "Estimated progress [0,1]",
+            &[("job_id", "2")],
+            0.5,
+        );
+        let text = r.render_prometheus();
+        assert_eq!(text.matches("# HELP pbt_job_progress").count(), 1);
+        assert_eq!(text.matches("# TYPE pbt_job_progress gauge").count(), 1);
+        assert!(text.contains("# TYPE pbt_jobs_submitted_total counter\n"));
+        assert!(text.contains("pbt_jobs_submitted_total 3\n"));
+        assert!(text.contains("pbt_job_progress{job_id=\"1\"} 0.25\n"));
+        assert!(text.contains("pbt_job_progress{job_id=\"2\"} 0.5\n"));
+        // Every line is a comment or a sample (parseable exposition text).
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.contains(' '),
+                "unparseable line {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_label_samples_and_escaping() {
+        let mut r = Registry::new();
+        r.counter_with(
+            "pbt_pool_slices_total",
+            "Slices",
+            &[("slot", "2"), ("kind", "remote")],
+            7,
+        );
+        r.gauge_with("pbt_info", "Build \"info\"", &[("rev", "a\"b\\c\nd")], 1.0);
+        let text = r.render_prometheus();
+        assert!(text.contains("pbt_pool_slices_total{slot=\"2\",kind=\"remote\"} 7\n"));
+        assert!(text.contains("{rev=\"a\\\"b\\\\c\\nd\"} 1\n"));
+        assert!(text.contains("# HELP pbt_info Build \"info\"\n"));
+    }
+
+    #[test]
+    fn hist_summary_expands_to_quantile_gauges_and_count() {
+        let s = HistSummary { count: 10, p50: 100, p90: 400, p99: 900, mean: 180, max: 950 };
+        let mut r = Registry::new();
+        r.hist_summary("pbt_slice_rtt", "Slice round-trip", &s);
+        let text = r.render_prometheus();
+        assert!(text.contains("pbt_slice_rtt_us{quantile=\"0.5\"} 100\n"));
+        assert!(text.contains("pbt_slice_rtt_us{quantile=\"0.99\"} 900\n"));
+        assert!(text.contains("pbt_slice_rtt_us{quantile=\"max\"} 950\n"));
+        assert!(text.contains("pbt_slice_rtt_count 10\n"));
+    }
+
+    #[test]
+    fn values_render_like_json_numbers() {
+        assert_eq!(render_value(42.0), "42");
+        assert_eq!(render_value(0.5), "0.5");
+        assert_eq!(render_value(f64::NAN), "0");
+    }
+
+    #[test]
+    fn find_returns_first_sample() {
+        let mut r = Registry::new();
+        r.gauge("g", "h", 1.0);
+        r.gauge("g", "h", 2.0);
+        assert_eq!(r.find("g").unwrap().value, 1.0);
+        assert!(r.find("missing").is_none());
+    }
+}

@@ -244,6 +244,9 @@ struct ObsInner {
     writer: Option<std::fs::File>,
     recorded: u64,
     write_error: bool,
+    /// Events that would have gone to the JSONL sink after it was
+    /// disabled by an I/O error (exported as a registry gauge).
+    dropped: u64,
 }
 
 /// The shared observability handle: one per run (or per daemon), cloned
@@ -280,6 +283,7 @@ impl Obs {
                 writer,
                 recorded: 0,
                 write_error: false,
+                dropped: 0,
             }),
         })
     }
@@ -294,7 +298,12 @@ impl Obs {
     }
 
     /// Record one event (ring + optional JSONL sink).  Never panics and
-    /// never blocks on I/O errors: a failed write disables the sink.
+    /// never blocks on I/O errors: a failed write disables the sink with
+    /// one stderr warning (not silently — a day-long trace that stopped
+    /// at minute three must be loud), and every event that would have
+    /// been written afterwards is counted in [`events_dropped`].
+    ///
+    /// [`events_dropped`]: Obs::events_dropped
     pub fn event(&self, kind: TraceKind, slot: i64, seq: u64, val: u64) {
         let ev = TraceEvent { t_us: self.now_us(), kind, slot, seq, val };
         let mut g = self.lock();
@@ -303,10 +312,14 @@ impl Obs {
         if let Some(w) = g.writer.as_mut() {
             let mut line = ev.to_jsonl();
             line.push('\n');
-            if w.write_all(line.as_bytes()).is_err() {
+            if let Err(e) = w.write_all(line.as_bytes()) {
                 g.writer = None;
                 g.write_error = true;
+                g.dropped += 1;
+                eprintln!("trace: sink disabled: {e}");
             }
+        } else if g.write_error {
+            g.dropped += 1;
         }
     }
 
@@ -382,6 +395,12 @@ impl Obs {
     /// Whether the JSONL sink died on an I/O error.
     pub fn sink_failed(&self) -> bool {
         self.lock().write_error
+    }
+
+    /// Events lost to a disabled JSONL sink (0 while the sink is healthy;
+    /// exported as the `pbt_trace_events_dropped` gauge).
+    pub fn events_dropped(&self) -> u64 {
+        self.lock().dropped
     }
 
     /// Flush the JSONL sink (no-op without one).

@@ -7,7 +7,8 @@
 //! next call.  Cheap by design: the daemon holds no per-client state.
 
 use super::proto::{
-    self, Hello, JobOutcome, JobSpec, JobStatus, Request, Response, ServerStats, Welcome,
+    self, Hello, JobOutcome, JobSpec, JobStatus, ProgressUpdate, Request, Response, ServerStats,
+    Welcome,
 };
 use super::{git_rev, VERSION};
 use anyhow::{bail, Context, Result};
@@ -110,6 +111,31 @@ impl Client {
             Response::Stats(s) => Ok(s),
             Response::Err(msg) => bail!("{msg}"),
             other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Subscribe to a job's `PROGRESS` push stream (`pbt status
+    /// --follow`): `on_progress` sees every frame in order, including the
+    /// terminal one, which is also returned.  The daemon pushes on its
+    /// checkpoint cadence and closes after the terminal frame.
+    pub fn subscribe<F: FnMut(&ProgressUpdate)>(
+        mut self,
+        id: u64,
+        mut on_progress: F,
+    ) -> Result<ProgressUpdate> {
+        proto::write_msg(&mut self.stream, &Request::Subscribe(id).encode())?;
+        loop {
+            let bytes = proto::read_msg(&mut self.stream).context("reading PROGRESS frame")?;
+            match Response::decode(&bytes)? {
+                Response::Progress(p) => {
+                    on_progress(&p);
+                    if p.state.is_terminal() {
+                        return Ok(p);
+                    }
+                }
+                Response::Err(msg) => bail!("{msg}"),
+                other => bail!("unexpected response {other:?}"),
+            }
         }
     }
 

@@ -1,0 +1,199 @@
+//! Std-only `/metrics` + `/healthz` HTTP listener (`pbt serve
+//! --metrics-addr`).
+//!
+//! Serves the [`Registry`](crate::metrics::registry::Registry) snapshot
+//! as Prometheus text exposition format 0.0.4 — enough HTTP/1.0 for
+//! `curl` and a Prometheus scraper, hand-rolled with the crate's no-deps
+//! discipline (the request parser reads one line; everything else is
+//! ignored).  Read-only by construction: handlers never touch job
+//! lifecycle, so a hammered metrics port cannot perturb the daemon.
+
+use super::{registry_snapshot, ServerState};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Ceiling on one request's header bytes; anything longer is not a
+/// scraper.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// Bind `addr` and serve it from a background thread until the daemon's
+/// shutdown flag rises.  Returns the actually-bound address (resolving
+/// port 0).
+pub(super) fn spawn_metrics(addr: &str, state: Arc<ServerState>) -> std::io::Result<String> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let bound = listener.local_addr()?.to_string();
+    std::thread::spawn(move || {
+        while !state.shutdown.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // One thread per request: a stalled scraper must not
+                    // block the accept loop (responses are one small
+                    // write, so threads are short-lived).
+                    let state = Arc::clone(&state);
+                    std::thread::spawn(move || {
+                        let _ = handle_request(&state, stream);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(25)),
+            }
+        }
+    });
+    Ok(bound)
+}
+
+fn handle_request(state: &ServerState, mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let line = match read_request_line(&mut stream) {
+        Ok(l) => l,
+        Err(_) => return respond(&mut stream, "400 Bad Request", "text/plain", "bad request\n"),
+    };
+    let mut parts = line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method != "GET" {
+        return respond(&mut stream, "405 Method Not Allowed", "text/plain", "GET only\n");
+    }
+    // Ignore any query string: `GET /metrics?x=1` still scrapes.
+    match path.split('?').next().unwrap_or("") {
+        "/metrics" => {
+            let body = registry_snapshot(state).render_prometheus();
+            respond(
+                &mut stream,
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                &body,
+            )
+        }
+        "/healthz" => respond(&mut stream, "200 OK", "text/plain", "ok\n"),
+        _ => respond(&mut stream, "404 Not Found", "text/plain", "not found\n"),
+    }
+}
+
+/// Read up to the first CRLF (the request line), draining at most
+/// [`MAX_REQUEST_BYTES`] — the rest of the headers is irrelevant.
+fn read_request_line(stream: &mut TcpStream) -> std::io::Result<String> {
+    let mut buf = Vec::new();
+    let mut byte = [0u8; 1];
+    while buf.len() < MAX_REQUEST_BYTES {
+        match stream.read(&mut byte)? {
+            0 => break,
+            _ => {
+                if byte[0] == b'\n' {
+                    break;
+                }
+                buf.push(byte[0]);
+            }
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "non-utf8 request"))
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{JobEntry, Progress, ServeOptions, ServerState};
+    use super::*;
+    use crate::exec::RemotePool;
+    use crate::metrics::trace::Obs;
+    use crate::metrics::ServerMetrics;
+    use crate::server::proto::{JobSpec, JobState};
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize};
+    use std::sync::Mutex;
+    use std::time::Instant;
+
+    fn test_state() -> Arc<ServerState> {
+        let opts = ServeOptions {
+            bind: "127.0.0.1:0".into(),
+            journal_dir: PathBuf::from("."),
+            max_active: 1,
+            default_workers: 1,
+            slice_nodes: 256,
+            checkpoint_ms: 20,
+            remote_window: 1,
+            trace_out: None,
+            metrics_addr: None,
+        };
+        let state = Arc::new(ServerState {
+            opts,
+            jobs: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+            metrics: Mutex::new(ServerMetrics::default()),
+            active: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            started: Instant::now(),
+            pool: RemotePool::new(),
+            obs: Obs::new(),
+        });
+        let entry = JobEntry {
+            spec: JobSpec::default(),
+            state: JobState::Running,
+            resumed: false,
+            resume: None,
+            progress: Arc::new(Progress::default()),
+            control: None,
+            outcome: None,
+            error: String::new(),
+        };
+        entry.progress.ppm.observe(250_000);
+        state.jobs.lock().unwrap().insert(1, entry);
+        state
+    }
+
+    fn get(addr: &str, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(format!("GET {path} HTTP/1.0\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn metrics_healthz_and_404() {
+        let state = test_state();
+        let addr = spawn_metrics("127.0.0.1:0", Arc::clone(&state)).unwrap();
+
+        let rsp = get(&addr, "/metrics");
+        assert!(rsp.starts_with("HTTP/1.0 200 OK\r\n"), "{rsp}");
+        assert!(rsp.contains("Content-Type: text/plain; version=0.0.4"), "{rsp}");
+        assert!(rsp.contains("# TYPE pbt_job_progress gauge"), "{rsp}");
+        assert!(rsp.contains("pbt_job_progress{job_id=\"1\"} 0.25"), "{rsp}");
+        assert!(rsp.contains("pbt_pool_in_flight"), "{rsp}");
+        assert!(rsp.contains("pbt_jobs_submitted_total"), "{rsp}");
+        assert!(rsp.contains("pbt_trace_events_dropped 0"), "{rsp}");
+
+        assert!(get(&addr, "/healthz").contains("ok"));
+        assert!(get(&addr, "/nope").starts_with("HTTP/1.0 404"));
+        assert!(get(&addr, "/metrics?scrape=1").contains("pbt_job_progress"));
+
+        // Raising the shutdown flag stops the accept loop.
+        state.shutdown.store(true, Ordering::SeqCst);
+    }
+}

@@ -80,6 +80,14 @@ pub struct FrontierRecord {
     pub solution: Vec<u32>,
     /// Outstanding subtree checkpoints (the unfinished work).
     pub frontier: Vec<Vec<u8>>,
+    /// Merged progress-estimator counts at snapshot time (informational
+    /// and in-memory only — NOT journaled: a resumed job re-accumulates
+    /// its estimate, so replay decodes this as zero and the byte format
+    /// is unchanged).
+    pub progress: crate::metrics::progress::ProgressSnapshot,
+    /// Slices dispatched but not yet completed at snapshot time (a live
+    /// gauge for `PROGRESS` frames; in-memory only, NOT journaled).
+    pub pool_in_flight: u64,
 }
 
 /// Terminal success record.
@@ -160,7 +168,13 @@ fn decode_frontier(body: &[u8]) -> Option<FrontierRecord> {
         let len = take_u32(body, &mut pos)? as usize;
         frontier.push(take(body, &mut pos, len)?.to_vec());
     }
-    (pos == body.len()).then_some(FrontierRecord { nodes_total, best, solution, frontier })
+    (pos == body.len()).then_some(FrontierRecord {
+        nodes_total,
+        best,
+        solution,
+        frontier,
+        ..Default::default()
+    })
 }
 
 fn encode_done(rec: &DoneRecord) -> Vec<u8> {
@@ -427,6 +441,7 @@ mod tests {
             best: 12,
             solution: vec![1, 4, 7],
             frontier: vec![vec![1, 2, 3], vec![9; 40]],
+            ..Default::default()
         }
     }
 

@@ -26,9 +26,13 @@
 //!   address) and every running job leases them as remote slots.
 //! * [`client`] — the client used by `pbt submit|status|result|cancel|
 //!   server-stats`.
+//! * `http` — the optional std-only `/metrics` + `/healthz` HTTP
+//!   listener (`--metrics-addr`), a read-only view over the metric
+//!   registry snapshot.
 //! * this module — the daemon: scheduler, lifecycle, request handlers.
 
 pub mod client;
+mod http;
 pub mod journal;
 pub mod proto;
 
@@ -40,13 +44,18 @@ use crate::comm::tcp;
 use crate::config::ServerConfig;
 use crate::exec::{ExecControl, ExecProfile, RemoteJob, RemotePool, StopKind};
 use crate::instances;
+use crate::metrics::progress::{EtaEstimator, ProgressSnapshot, ProgressTracker};
+use crate::metrics::registry::Registry;
 use crate::metrics::trace::{Obs, TraceKind};
 use crate::metrics::ServerMetrics;
 use crate::problems::{BoundKind, DominatingSet, VertexCover};
 use crate::{Cost, COST_INF};
 use anyhow::{bail, Context, Result};
 use journal::{DoneRecord, FrontierRecord, Journal};
-use proto::{JobOutcome, JobSpec, JobState, JobStatus, Request, Response, ServerStats};
+use proto::{
+    JobOutcome, JobProgress, JobSpec, JobState, JobStatus, ProgressUpdate, Request, Response,
+    ServerStats,
+};
 use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
@@ -85,6 +94,9 @@ pub struct ServeOptions {
     /// JSONL trace sink for the daemon-lifetime event stream
     /// (`--trace-out`); `None` keeps events in the in-memory ring only.
     pub trace_out: Option<PathBuf>,
+    /// Bind address for the read-only `/metrics` + `/healthz` HTTP
+    /// listener (`--metrics-addr`); `None` disables it.
+    pub metrics_addr: Option<String>,
 }
 
 impl From<&ServerConfig> for ServeOptions {
@@ -98,12 +110,13 @@ impl From<&ServerConfig> for ServeOptions {
             checkpoint_ms: c.checkpoint_ms.max(1),
             remote_window: c.remote_window.max(1),
             trace_out: None,
+            metrics_addr: None,
         }
     }
 }
 
-/// Live progress counters, shared between a job's runner and the status
-/// handler (updated at checkpoint cadence).
+/// Live progress counters, shared between a job's runner and the status,
+/// subscribe and metrics handlers (updated at checkpoint cadence).
 struct Progress {
     /// Nodes explored by this daemon process.
     nodes: AtomicU64,
@@ -113,18 +126,59 @@ struct Progress {
     checkpoints: AtomicU64,
     /// Best-so-far cost mirror (`COST_INF` = none).
     best: AtomicU64,
+    /// Monotone progress-estimate gauge (exactly 100% only at terminal).
+    ppm: ProgressTracker,
+    /// ETA mirror in microseconds (`u64::MAX` = no rate yet).
+    eta_us: AtomicU64,
+    /// Pool slices in flight at the last checkpoint (live gauge).
+    pool_in_flight: AtomicU64,
+    /// EWMA nodes/sec throughput, fed absolute samples per checkpoint.
+    eta: Mutex<EtaEstimator>,
 }
 
 impl Default for Progress {
     fn default() -> Self {
         // Hand-written so `best` starts at the "no incumbent" sentinel —
-        // a derived all-zeros default would read as "cost 0 found".
+        // a derived all-zeros default would read as "cost 0 found" — and
+        // `eta_us` at the "unknown" sentinel.
         Progress {
             nodes: AtomicU64::new(0),
             nodes_total: AtomicU64::new(0),
             checkpoints: AtomicU64::new(0),
             best: AtomicU64::new(COST_INF),
+            ppm: ProgressTracker::default(),
+            eta_us: AtomicU64::new(u64::MAX),
+            pool_in_flight: AtomicU64::new(0),
+            eta: Mutex::new(EtaEstimator::default()),
         }
+    }
+}
+
+impl Progress {
+    /// Fold one checkpoint's estimator snapshot into the live mirrors:
+    /// the gauge is monotone and capped below 100% (only
+    /// [`finalize_estimate`](Self::finalize_estimate) reports exactly
+    /// 100%), the ETA comes from the EWMA throughput over the estimated
+    /// remaining nodes.  Informational only — nothing schedules on it.
+    fn observe_estimate(&self, snap: &ProgressSnapshot, t_us: u64) {
+        self.ppm.observe(snap.progress_ppm());
+        let mut eta = self.eta.lock().expect("eta lock");
+        eta.observe(snap.nodes, t_us);
+        if let Some(e) = eta.eta_us(snap.remaining()) {
+            self.eta_us.store(e, Ordering::SeqCst);
+        }
+    }
+
+    /// The job went terminal: pin the gauge at exactly 100%, ETA 0.
+    fn finalize_estimate(&self) {
+        self.ppm.finalize();
+        self.eta_us.store(0, Ordering::SeqCst);
+        self.pool_in_flight.store(0, Ordering::SeqCst);
+    }
+
+    fn eta_us_now(&self) -> Option<u64> {
+        let e = self.eta_us.load(Ordering::SeqCst);
+        (e != u64::MAX).then_some(e)
     }
 }
 
@@ -226,6 +280,11 @@ pub fn serve(opts: ServeOptions, on_bound: impl FnOnce(&str)) -> Result<()> {
     let listener =
         bind_with_retry(&state.opts.bind).with_context(|| format!("binding {}", state.opts.bind))?;
     listener.set_nonblocking(true)?;
+    if let Some(addr) = state.opts.metrics_addr.clone() {
+        let bound = http::spawn_metrics(&addr, Arc::clone(&state))
+            .with_context(|| format!("binding metrics listener {addr}"))?;
+        eprintln!("pbt serve: metrics on http://{bound}/metrics");
+    }
     on_bound(&listener.local_addr()?.to_string());
 
     while !state.shutdown.load(Ordering::SeqCst) {
@@ -464,6 +523,7 @@ fn run_job(
     };
 
     let outcome = {
+        let run_started = Instant::now();
         let on_checkpoint = |rec: &FrontierRecord| {
             let t0 = Instant::now();
             match jrn.append_frontier(rec) {
@@ -479,6 +539,9 @@ fn run_job(
             progress.nodes_total.store(rec.nodes_total, Ordering::SeqCst);
             progress.nodes.store(rec.nodes_total - nodes0, Ordering::SeqCst);
             progress.best.store(rec.best, Ordering::SeqCst);
+            progress.pool_in_flight.store(rec.pool_in_flight, Ordering::SeqCst);
+            progress
+                .observe_estimate(&rec.progress, run_started.elapsed().as_micros() as u64);
         };
         match run_problem(&spec, init, best0, sol0, nodes0, &profile, &control, &rjob, on_checkpoint)
         {
@@ -515,6 +578,9 @@ fn run_job(
             Ok(()) => state.obs.journal_fsync(id, t0.elapsed().as_micros() as u64),
             Err(e) => eprintln!("pbt serve: job {id}: DONE record failed: {e:#}"),
         }
+        // Pin the gauge at exactly 100% before the state flip becomes
+        // visible: a subscriber's terminal frame always reads DONE+100%.
+        progress.finalize_estimate();
         entry.state = JobState::Done;
         entry.outcome = Some(JobOutcome {
             id,
@@ -539,6 +605,10 @@ fn run_job(
             Ok(()) => state.obs.journal_fsync(id, t0.elapsed().as_micros() as u64),
             Err(e) => eprintln!("pbt serve: job {id}: CANCELLED record failed: {e:#}"),
         }
+        // No 100% pin for a cancel — the estimate stays where it stopped
+        // (only DONE means the tree was exhausted) — but nothing is in
+        // flight anymore.
+        progress.pool_in_flight.store(0, Ordering::SeqCst);
         entry.state = JobState::Cancelled;
         entry.outcome = Some(JobOutcome {
             id,
@@ -560,6 +630,8 @@ fn run_job(
             best: outcome.best.unwrap_or(COST_INF),
             solution: outcome.solution,
             frontier: outcome.frontier,
+            progress: outcome.progress,
+            pool_in_flight: 0,
         });
     }
 }
@@ -728,9 +800,57 @@ fn handle_connection(state: &Arc<ServerState>, mut stream: TcpStream) -> Result<
             state.shutdown.store(true, Ordering::SeqCst);
             return Ok(());
         }
+        // The v5 push upgrade: the connection becomes a PROGRESS stream.
+        Request::Subscribe(id) => return handle_subscribe(state, id, stream),
     };
     proto::write_msg(&mut stream, &rsp.encode())?;
     stream.flush()?;
+    linger_for_client_close(&mut stream);
+    Ok(())
+}
+
+/// One `PROGRESS` frame from a job's live mirrors.
+fn progress_frame(id: u64, entry: &JobEntry) -> ProgressUpdate {
+    let p = &entry.progress;
+    let best = p.best.load(Ordering::SeqCst);
+    ProgressUpdate {
+        id,
+        state: entry.state,
+        nodes: p.nodes.load(Ordering::SeqCst),
+        nodes_total: p.nodes_total.load(Ordering::SeqCst),
+        best: (best != COST_INF).then_some(best),
+        progress_ppm: p.ppm.current(),
+        eta_us: p.eta_us_now(),
+        pool_in_flight: p.pool_in_flight.load(Ordering::SeqCst),
+    }
+}
+
+/// Drive one `SUBSCRIBE` stream: push a frame on the checkpoint cadence
+/// (plus one immediately, so a subscriber never waits a full period for
+/// its first sample) until the job goes terminal; the terminal frame is
+/// the last one.  Daemon shutdown ends the stream early — the client sees
+/// EOF, same as any dropped connection.
+fn handle_subscribe(state: &Arc<ServerState>, id: u64, mut stream: TcpStream) -> Result<()> {
+    loop {
+        let frame = {
+            let jobs = state.jobs.lock().expect("jobs lock");
+            match jobs.get(&id) {
+                Some(entry) => progress_frame(id, entry),
+                None => {
+                    let rsp = Response::Err(format!("no such job {id}"));
+                    let _ = proto::write_msg(&mut stream, &rsp.encode());
+                    linger_for_client_close(&mut stream);
+                    return Ok(());
+                }
+            }
+        };
+        proto::write_msg(&mut stream, &Response::Progress(frame).encode())?;
+        stream.flush()?;
+        if frame.state.is_terminal() || state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(state.opts.checkpoint_ms));
+    }
     linger_for_client_close(&mut stream);
     Ok(())
 }
@@ -842,6 +962,16 @@ fn handle_stats(state: &Arc<ServerState>) -> Response {
     let jobs = state.jobs.lock().expect("jobs lock");
     let queued = jobs.values().filter(|e| e.state == JobState::Queued).count() as u32;
     let active = jobs.values().filter(|e| e.state == JobState::Running).count() as u32;
+    // BTreeMap iteration gives the v5 rows in ascending job-id order.
+    let job_rows: Vec<JobProgress> = jobs
+        .iter()
+        .map(|(id, e)| JobProgress {
+            id: *id,
+            state: e.state,
+            progress_ppm: e.progress.ppm.current(),
+            eta_us: e.progress.eta_us_now(),
+        })
+        .collect();
     drop(jobs);
     let (slice_rtt, journal_fsync) = state.obs.stats_summaries();
     Response::Stats(ServerStats {
@@ -855,5 +985,63 @@ fn handle_stats(state: &Arc<ServerState>) -> Response {
         pool: state.pool.cumulative(),
         slice_rtt,
         journal_fsync,
+        jobs: job_rows,
     })
+}
+
+/// One coherent [`Registry`] snapshot of everything the daemon knows —
+/// the `/metrics` endpoint body, and the single list every renderer
+/// shares.  Families: `ServerMetrics` lifecycle counters, cumulative
+/// [`PoolStats`](crate::exec::PoolStats) (including the
+/// `pbt_pool_in_flight` gauge), the two latency summaries, the trace-sink
+/// drop gauge, and per-job progress/ETA/node gauges labeled `job_id`.
+fn registry_snapshot(state: &ServerState) -> Registry {
+    let mut r = Registry::new();
+    r.gauge(
+        "pbt_uptime_seconds",
+        "Seconds since the daemon started",
+        state.started.elapsed().as_secs_f64(),
+    );
+    state.metrics.lock().expect("metrics lock").register(&mut r);
+    state.pool.cumulative().register(&mut r);
+    let (slice_rtt, journal_fsync) = state.obs.stats_summaries();
+    r.hist_summary("pbt_slice_rtt", "Remote slice round-trip latency (µs)", &slice_rtt);
+    r.hist_summary("pbt_journal_fsync", "Journal fsync latency (µs)", &journal_fsync);
+    r.gauge(
+        "pbt_trace_events_dropped",
+        "Events lost to a disabled JSONL trace sink",
+        state.obs.events_dropped() as f64,
+    );
+    let jobs = state.jobs.lock().expect("jobs lock");
+    for (id, e) in jobs.iter() {
+        let id_s = id.to_string();
+        let labels: &[(&str, &str)] = &[("job_id", &id_s)];
+        r.gauge_with(
+            "pbt_job_progress",
+            "Estimated fraction of the search tree explored [0,1]",
+            labels,
+            e.progress.ppm.current() as f64 / crate::metrics::progress::PPM as f64,
+        );
+        r.gauge_with(
+            "pbt_job_state",
+            "Job lifecycle state (0 queued, 1 running, 2 done, 3 cancelled, 4 failed)",
+            labels,
+            e.state.as_byte() as f64,
+        );
+        r.gauge_with(
+            "pbt_job_nodes_total",
+            "Nodes explored including journaled pre-restart progress",
+            labels,
+            e.progress.nodes_total.load(Ordering::SeqCst) as f64,
+        );
+        if let Some(eta) = e.progress.eta_us_now() {
+            r.gauge_with(
+                "pbt_job_eta_seconds",
+                "Estimated seconds to completion at the EWMA rate",
+                labels,
+                eta as f64 / 1e6,
+            );
+        }
+    }
+    r
 }

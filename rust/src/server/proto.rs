@@ -16,7 +16,11 @@
 //!    sides close.
 //!
 //! One-shot connections keep the daemon trivially robust to half-dead
-//! clients: there is no per-connection session state to reap.
+//! clients: there is no per-connection session state to reap.  The one
+//! exception is [`Request::Subscribe`] (v5): the daemon answers with a
+//! *stream* of [`Response::Progress`] frames on the checkpoint cadence
+//! until the job goes terminal (or `Err` if the job is unknown), then
+//! closes — still stateless after the connection drops.
 
 use crate::comm::wire;
 use crate::exec::PoolStats;
@@ -34,8 +38,11 @@ pub const MAGIC: &[u8; 4] = b"PBTS";
 /// the pool block grows a ninth counter, `reconnects` (supervised pool
 /// ranks that healed a lost connection).  v4: two latency-summary blocks
 /// ([`HistSummary`]: count/p50/p90/p99/mean/max, six `u64`s each) follow
-/// the pool block — remote slice round-trips, then journal fsyncs.
-pub const PROTO_VERSION: u32 = 4;
+/// the pool block — remote slice round-trips, then journal fsyncs.  v5:
+/// `SUBSCRIBE` upgrades the connection to a push stream of `PROGRESS`
+/// frames ([`ProgressUpdate`]), and `Stats` responses end with a per-job
+/// progress table ([`JobProgress`] rows after the fsync summary).
+pub const PROTO_VERSION: u32 = 5;
 
 /// Ceiling for one protocol frame (a result payload is one `u32` per
 /// solution vertex — far below this; anything larger is not a pbt peer).
@@ -54,6 +61,8 @@ const TAG_OK: u8 = 0x29;
 const TAG_STATS: u8 = 0x2A;
 const TAG_STATS_R: u8 = 0x2B;
 const TAG_SHUTDOWN: u8 = 0x2C;
+const TAG_SUBSCRIBE: u8 = 0x2D;
+const TAG_PROGRESS: u8 = 0x2E;
 const TAG_ERR: u8 = 0x2F;
 
 /// Decode failure: the payload does not describe a valid protocol message.
@@ -300,6 +309,37 @@ pub struct JobOutcome {
     pub resumed: bool,
 }
 
+/// One `PROGRESS` push frame: the live estimate for a subscribed job
+/// plus the daemon-wide pool in-flight gauge.  Everything here is
+/// informational — estimates are never gating and the scheduler never
+/// consults them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProgressUpdate {
+    pub id: u64,
+    pub state: JobState,
+    /// Nodes explored by the current daemon process.
+    pub nodes: u64,
+    /// Nodes including journaled pre-restart progress.
+    pub nodes_total: u64,
+    pub best: Option<u64>,
+    /// Monotone progress estimate in parts-per-million; exactly
+    /// 1_000_000 only when the job is terminal.
+    pub progress_ppm: u64,
+    /// EWMA-derived ETA in microseconds (`None` before a rate exists).
+    pub eta_us: Option<u64>,
+    /// Slices dispatched but not yet completed, daemon-wide.
+    pub pool_in_flight: u64,
+}
+
+/// One per-job row in the v5 `Stats` tail (`pbt server-stats` columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobProgress {
+    pub id: u64,
+    pub state: JobState,
+    pub progress_ppm: u64,
+    pub eta_us: Option<u64>,
+}
+
 /// Daemon self-description + counters (`pbt server-stats`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerStats {
@@ -317,6 +357,8 @@ pub struct ServerStats {
     pub slice_rtt: HistSummary,
     /// Journal fsync latency summary (terminal-record appends, µs).
     pub journal_fsync: HistSummary,
+    /// Per-job progress rows (v5), in ascending job-id order.
+    pub jobs: Vec<JobProgress>,
 }
 
 /// Handshake opener (client → daemon).
@@ -350,6 +392,9 @@ pub enum Request {
     /// Graceful stop: every running job drains a final checkpoint to its
     /// journal and the daemon exits; a restart resumes them.
     Shutdown,
+    /// Upgrade the connection to a push stream of [`Response::Progress`]
+    /// frames for this job, ending when the job goes terminal.
+    Subscribe(u64),
 }
 
 /// One daemon response.
@@ -361,6 +406,8 @@ pub enum Response {
     /// Acknowledges `Cancel` and `Shutdown`.
     Ok,
     Stats(ServerStats),
+    /// One frame of a `Subscribe` push stream.
+    Progress(ProgressUpdate),
     Err(String),
 }
 
@@ -467,6 +514,10 @@ impl Request {
             }
             Request::Stats => out.push(TAG_STATS),
             Request::Shutdown => out.push(TAG_SHUTDOWN),
+            Request::Subscribe(id) => {
+                out.push(TAG_SUBSCRIBE);
+                push_u64(&mut out, *id);
+            }
         }
         out
     }
@@ -483,6 +534,7 @@ impl Request {
             TAG_CANCEL => Request::Cancel(take_u64(b, &mut pos)?),
             TAG_STATS => Request::Stats,
             TAG_SHUTDOWN => Request::Shutdown,
+            TAG_SUBSCRIBE => Request::Subscribe(take_u64(b, &mut pos)?),
             other => return Err(ProtoError::BadTag(other)),
         };
         done(b, pos)?;
@@ -563,6 +615,24 @@ impl Response {
                 }
                 push_hist_summary(&mut out, &s.slice_rtt);
                 push_hist_summary(&mut out, &s.journal_fsync);
+                push_u32(&mut out, s.jobs.len() as u32);
+                for j in &s.jobs {
+                    push_u64(&mut out, j.id);
+                    out.push(j.state.as_byte());
+                    push_u64(&mut out, j.progress_ppm);
+                    push_u64(&mut out, j.eta_us.unwrap_or(u64::MAX));
+                }
+            }
+            Response::Progress(p) => {
+                out.push(TAG_PROGRESS);
+                push_u64(&mut out, p.id);
+                out.push(p.state.as_byte());
+                push_u64(&mut out, p.nodes);
+                push_u64(&mut out, p.nodes_total);
+                push_cost(&mut out, p.best);
+                push_u64(&mut out, p.progress_ppm);
+                push_u64(&mut out, p.eta_us.unwrap_or(u64::MAX));
+                push_u64(&mut out, p.pool_in_flight);
             }
             Response::Err(msg) => {
                 out.push(TAG_ERR);
@@ -625,6 +695,22 @@ impl Response {
                 }
                 let slice_rtt = take_hist_summary(b, &mut pos)?;
                 let journal_fsync = take_hist_summary(b, &mut pos)?;
+                let njobs = take_u32(b, &mut pos)?;
+                // No pre-allocation from the wire count: a hostile count
+                // fails on the first missing row, not in the allocator.
+                let mut jobs = Vec::new();
+                for _ in 0..njobs {
+                    let id = take_u64(b, &mut pos)?;
+                    let state = JobState::from_byte(take_u8(b, &mut pos)?)?;
+                    let progress_ppm = take_u64(b, &mut pos)?;
+                    let eta = take_u64(b, &mut pos)?;
+                    jobs.push(JobProgress {
+                        id,
+                        state,
+                        progress_ppm,
+                        eta_us: (eta != u64::MAX).then_some(eta),
+                    });
+                }
                 Response::Stats(ServerStats {
                     version,
                     git_rev,
@@ -655,6 +741,27 @@ impl Response {
                     },
                     slice_rtt,
                     journal_fsync,
+                    jobs,
+                })
+            }
+            TAG_PROGRESS => {
+                let id = take_u64(b, &mut pos)?;
+                let state = JobState::from_byte(take_u8(b, &mut pos)?)?;
+                let nodes = take_u64(b, &mut pos)?;
+                let nodes_total = take_u64(b, &mut pos)?;
+                let best = take_cost(b, &mut pos)?;
+                let progress_ppm = take_u64(b, &mut pos)?;
+                let eta = take_u64(b, &mut pos)?;
+                let pool_in_flight = take_u64(b, &mut pos)?;
+                Response::Progress(ProgressUpdate {
+                    id,
+                    state,
+                    nodes,
+                    nodes_total,
+                    best,
+                    progress_ppm,
+                    eta_us: (eta != u64::MAX).then_some(eta),
+                    pool_in_flight,
                 })
             }
             TAG_ERR => Response::Err(take_str(b, &mut pos)?),
@@ -724,6 +831,33 @@ mod tests {
                 mean: 450,
                 max: 812,
             },
+            jobs: vec![
+                JobProgress {
+                    id: 1,
+                    state: JobState::Running,
+                    progress_ppm: 437_500,
+                    eta_us: Some(2_000_000),
+                },
+                JobProgress {
+                    id: 2,
+                    state: JobState::Done,
+                    progress_ppm: 1_000_000,
+                    eta_us: None,
+                },
+            ],
+        }
+    }
+
+    fn sample_progress() -> ProgressUpdate {
+        ProgressUpdate {
+            id: 7,
+            state: JobState::Running,
+            nodes: 1200,
+            nodes_total: 3400,
+            best: Some(17),
+            progress_ppm: 437_500,
+            eta_us: None,
+            pool_in_flight: 3,
         }
     }
 
@@ -777,6 +911,7 @@ mod tests {
             Request::Cancel(9),
             Request::Stats,
             Request::Shutdown,
+            Request::Subscribe(42),
         ] {
             assert_eq!(Request::decode(&req.encode()), Ok(req.clone()), "{req:?}");
         }
@@ -809,6 +944,17 @@ mod tests {
             }),
             Response::Ok,
             Response::Stats(sample_stats()),
+            Response::Progress(sample_progress()),
+            Response::Progress(ProgressUpdate {
+                id: 9,
+                state: JobState::Done,
+                nodes: 500,
+                nodes_total: 500,
+                best: None,
+                progress_ppm: 1_000_000,
+                eta_us: Some(0),
+                pool_in_flight: 0,
+            }),
             Response::Err("no such job".into()),
         ] {
             assert_eq!(Response::decode(&rsp.encode()), Ok(rsp.clone()), "{rsp:?}");
@@ -848,10 +994,13 @@ mod tests {
     fn every_strict_prefix_of_each_message_is_rejected() {
         let msgs = [
             Request::Submit(JobSpec::default()).encode(),
+            Request::Subscribe(42).encode(),
             Response::Status(sample_status()).encode(),
-            // Exercises the v4 tail: cutting anywhere inside the two
-            // latency-summary blocks must read as truncation.
+            // Exercises the v4/v5 tail: cutting anywhere inside the two
+            // latency-summary blocks or the per-job progress rows must
+            // read as truncation.
             Response::Stats(sample_stats()).encode(),
+            Response::Progress(sample_progress()).encode(),
         ];
         for bytes in msgs {
             for cut in 0..bytes.len() {

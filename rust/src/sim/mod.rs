@@ -81,6 +81,10 @@ pub struct SimReport {
     /// Whole-run tree shape, merged from the per-worker collectors in rank
     /// order (deterministic).  `Some` iff `worker.collect_shape` was set.
     pub tree_shape: Option<crate::metrics::TreeShape>,
+    /// Knuth progress-estimate counts merged from the per-worker
+    /// accumulators in rank order (always collected; informational only —
+    /// see `metrics::progress`).
+    pub progress: crate::metrics::progress::ProgressSnapshot,
 }
 
 impl SimReport {
@@ -249,6 +253,7 @@ pub fn simulate<P: Problem>(problem: &P, cfg: &SimConfig) -> SimReport {
     let mut best_solution_rank = None;
     let mut per_worker = Vec::with_capacity(c);
     let mut tree_shape: Option<crate::metrics::TreeShape> = None;
+    let mut progress = crate::metrics::progress::ProgressSnapshot::default();
     for (r, w) in workers.iter_mut().enumerate() {
         if w.best < best && w.best_solution.is_some() {
             best = w.best;
@@ -256,10 +261,11 @@ pub fn simulate<P: Problem>(problem: &P, cfg: &SimConfig) -> SimReport {
         }
         best = best.min(w.best);
         per_worker.push(w.stats);
-        // Rank order keeps the merged shape bit-reproducible.
+        // Rank order keeps the merged shape/progress bit-reproducible.
         if let Some(sh) = w.take_tree_shape() {
             tree_shape.get_or_insert_with(Default::default).merge(&sh);
         }
+        progress.merge(&w.take_progress());
     }
     let _ = best_solution_rank;
     SimReport {
@@ -270,6 +276,7 @@ pub fn simulate<P: Problem>(problem: &P, cfg: &SimConfig) -> SimReport {
         endgame_collapsed,
         busy_ticks_total,
         tree_shape,
+        progress,
     }
 }
 

@@ -698,6 +698,68 @@ fn scenario_matrix_tiny_cross_validates_against_oracle() {
     }
 }
 
+/// ISSUE 10: the Knuth progress estimator on the tiny scenario matrix.
+/// With a fixed (infinite) incumbent, pruning is a per-node decision, so a
+/// donation-sharded run visits exactly the serial node set — the merged
+/// shard counts must equal the single-stepper counts field for field.
+/// Along the serial visit order the *reported* progress (the fetch-max
+/// tracker) is monotone non-decreasing, stays below 100% while live, and
+/// reads exactly 100% only once finalized at DONE.
+#[test]
+fn scenario_matrix_tiny_progress_is_monotone_and_merges_exactly() {
+    use pbt::metrics::progress::{ProgressSnapshot, ProgressTracker, PPM};
+    for inst in &scenario_matrix_tiny() {
+        let p = MaxClique::new(&inst.graph);
+        let name = &inst.graph.name;
+
+        // Serial reference, checking the reported gauge at every node.
+        let mut serial = Stepper::at_root(&p);
+        let tracker = ProgressTracker::default();
+        let mut last = 0u64;
+        while !matches!(serial.step(COST_INF), StepResult::Exhausted) {
+            let raw = serial.progress().progress_ppm();
+            assert!(raw <= PPM, "{name}: raw estimate above 100%");
+            let seen = tracker.observe(raw);
+            assert!(seen >= last, "{name}: reported progress decreased ({seen} < {last})");
+            assert!(seen < PPM, "{name}: live gauge reported 100% before DONE");
+            last = seen;
+        }
+        assert_eq!(tracker.finalize(), PPM, "{name}: DONE must read exactly 100%");
+        let want = serial.take_progress();
+        assert!(want.nodes > 0 && want.terminals > 0, "{name}: estimator saw no probes");
+
+        // Sharded run: the donor hands out heaviest-first subtrees while it
+        // works (the worker protocol's donation), each replayed via
+        // `from_index` so its probes carry globally-rooted weights.
+        let mut donor = Stepper::at_root(&p);
+        let mut donated = Vec::new();
+        loop {
+            for _ in 0..5 {
+                if matches!(donor.step(COST_INF), StepResult::Exhausted) {
+                    break;
+                }
+            }
+            if donor.is_exhausted() {
+                break;
+            }
+            if let Some(idx) = donor.donate() {
+                donated.push(idx);
+            }
+        }
+        let mut merged = donor.take_progress();
+        let mut shards = 0usize;
+        for idx in donated {
+            let mut w = Stepper::from_index(&p, &idx).unwrap();
+            while !matches!(w.step(COST_INF), StepResult::Exhausted) {}
+            merged.merge(&w.take_progress());
+            shards += 1;
+        }
+        assert!(shards >= 1, "{name}: tree too small to shard");
+        assert_eq!(merged, want, "{name}: sharded merge != serial estimate");
+        assert_eq!(ProgressSnapshot::default().progress_ppm(), 0);
+    }
+}
+
 /// Random ≤16-vertex graphs through the same harness — edge densities from
 /// empty to near-complete, so the clique tree's multiway branching sees
 /// both wide and deep shapes.
